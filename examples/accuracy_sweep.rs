@@ -1,0 +1,60 @@
+//! Accuracy sweep (Table 1 scenario): teacher-forced perplexity of HGCA
+//! hybrid attention vs full attention across β × GPU-KV-ratio, on the
+//! trained model and the bundled corpus.
+//!
+//! Run: cargo run --release --example accuracy_sweep [-- --len 256]
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::{Engine, Policy};
+use hgca::runtime::PjrtRuntime;
+use hgca::util::argparse::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[])?;
+    let len = args.usize("len", 256)?;
+    let model = args.get_or("model", "tiny-small").to_string();
+
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let rt = Rc::new(PjrtRuntime::new(&dir)?);
+    let mr = rt.load_model(&model)?;
+    let text = std::fs::read(args.get_or("text", "data/corpus.txt"))?;
+    let text = &text[1000..1000 + len];
+
+    // reference: full attention (exact) through the same engine
+    let mk_cfg = |window: usize| HgcaConfig {
+        blk_size: 8,
+        blk_num: window / 8,
+        ..Default::default()
+    };
+    let mut full = Engine::new(&mr, mk_cfg(32), Policy::FullOffload);
+    let baseline = full.perplexity(text, 32)?;
+    println!("model={model} len={len}  baseline (full attention) PPL = {baseline:.4}\n");
+
+    println!("{:>10} {:>8} {:>10} {:>10} {:>12}", "gpu-ratio", "beta", "ppl", "Δ vs full", "ctx kept");
+    for ratio in [0.25f64, 0.5, 0.75] {
+        let window = (((len as f64 * ratio) / 8.0).ceil() as usize).max(1) * 8;
+        for beta in [0.25f32, 0.5, 0.75, 1.0] {
+            let mut cfg = mk_cfg(window);
+            cfg.beta = beta;
+            let mut engine = Engine::new(&mr, cfg, Policy::Hgca { beta });
+            let ppl = engine.perplexity(text, 32)?;
+            // measure retention on a fresh prefill
+            let mut seq = engine.new_sequence(1, text);
+            engine.prefill(&mut seq)?;
+            let sel = seq.kv.mean_selectivity();
+            println!(
+                "{:>10.2} {:>8.2} {:>10.4} {:>+9.2}% {:>11.1}%",
+                ratio,
+                beta,
+                ppl,
+                (ppl / baseline - 1.0) * 100.0,
+                sel * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md, EXPERIMENTS.md §E2E).
+//!
+//! Loads the trained tiny model, starts the HTTP server + continuous
+//! batcher, floods it with concurrent client requests over real TCP, and
+//! reports latency/throughput — the full serving stack in one run:
+//! HTTP → batcher → engine → PJRT artifacts ("GPU") ∥ rust CPU sparse
+//! attention → LSE merge → sampler.
+//!
+//! Run: cargo run --release --example serve_bench [-- --requests 24 --batch 4]
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::batcher::{Batcher, Request};
+use hgca::engine::{Engine, Policy};
+use hgca::runtime::PjrtRuntime;
+use hgca::util::argparse::Args;
+use hgca::util::stats::summarize;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[])?;
+    let n_requests = args.usize("requests", 24)?;
+    let batch = args.usize("batch", 4)?;
+    let max_new = args.usize("max-new", 24)?;
+
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let rt = Rc::new(PjrtRuntime::new(&dir)?);
+    let mr = rt.load_model(args.get_or("model", "tiny"))?;
+    let n_arts = mr.warmup()?;
+    println!("model {} warmed ({n_arts} artifacts compiled)", mr.cfg.name);
+
+    // ---------------- phase 1: HTTP round-trip smoke ----------------
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (addr, _h) = hgca::server::serve("127.0.0.1:0", tx)?;
+    println!("http server on {addr}");
+    let client = std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+        let mut lat = Vec::new();
+        for i in 0..4 {
+            let t0 = Instant::now();
+            let mut s = TcpStream::connect(addr)?;
+            let body = format!(
+                r#"{{"prompt": "The garrison defended route {i} through ", "max_new_tokens": 16}}"#
+            );
+            write!(
+                s,
+                "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+                body.len(),
+                body
+            )?;
+            let mut out = String::new();
+            s.read_to_string(&mut out)?;
+            anyhow::ensure!(out.starts_with("HTTP/1.1 200"), "bad response: {out}");
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(lat)
+    });
+    {
+        let cfg = HgcaConfig::default();
+        let mut engine = Engine::new(&mr, cfg, Policy::Hgca { beta: 1.0 });
+        // serve exactly the smoke requests then fall through
+        let mut served = 0;
+        for inc in &rx {
+            let resp = hgca::server::api::handle_generate(&mut engine, &inc.req.body, served);
+            let _ = inc.reply.send(resp);
+            served += 1;
+            if served >= 4 {
+                break;
+            }
+        }
+    }
+    let http_lat = client.join().expect("client thread")?;
+    let hs = summarize(&http_lat);
+    println!(
+        "http smoke: 4 requests ok, latency p50 {:.1} ms, max {:.1} ms",
+        hs.p50 * 1e3,
+        hs.max * 1e3
+    );
+
+    // ---------------- phase 2: batched serving benchmark ----------------
+    let cfg = HgcaConfig::default();
+    let mut engine = Engine::new(&mr, cfg, Policy::Hgca { beta: 1.0 });
+    let mut batcher = Batcher::new(batch);
+    let prompts = [
+        "The settlement was established near the Brazos River ",
+        "Historical records show that the cattle drive ",
+        "In the following decade, the territorial legislature ",
+        "The trading post shipped grain from Galveston ",
+    ];
+    for i in 0..n_requests {
+        batcher.submit(Request {
+            id: i as u64,
+            prompt: prompts[i % prompts.len()].as_bytes().to_vec(),
+            max_new_tokens: max_new,
+        });
+    }
+    let t0 = Instant::now();
+    let done = batcher.run_to_completion(&mut engine)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    anyhow::ensure!(done.len() == n_requests, "lost requests");
+    let total_tokens: usize = done.iter().map(|c| c.text.len()).sum();
+    let m = &engine.metrics;
+    let tbt = m.tbt_summary().unwrap();
+    println!("\n=== serve_bench results (policy=hgca, batch={batch}) ===");
+    println!("requests completed : {}", done.len());
+    println!("tokens generated   : {total_tokens}");
+    println!("wall time          : {wall:.2} s");
+    println!("throughput         : {:.1} tok/s (wall)", total_tokens as f64 / wall);
+    println!("sim throughput     : {:.1} tok/s (paper testbed model)", m.sim_throughput());
+    println!(
+        "TBT p50/p90/p99    : {:.1} / {:.1} / {:.1} ms",
+        tbt.p50 * 1e3,
+        tbt.p90 * 1e3,
+        tbt.p99 * 1e3
+    );
+    println!(
+        "peak kv memory     : gpu {} | cpu {}",
+        hgca::util::fmt_bytes(m.peak_gpu_kv_bytes as u64),
+        hgca::util::fmt_bytes(m.peak_cpu_kv_bytes as u64)
+    );
+    let st = mr.stats.borrow();
+    println!(
+        "pjrt: {} calls, exec {:.2}s, upload {:.2}s, download {:.2}s",
+        st.calls, st.exec_secs, st.upload_secs, st.download_secs
+    );
+    println!("\nsample completion [{}]: {:?}", done[0].id, String::from_utf8_lossy(&done[0].text));
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT lowering: JAX entry points → HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact takes model weights as runtime inputs, so a single compiled
+executable serves all layers of a model. ``artifacts/manifest.json`` is the
+contract with ``rust/src/runtime/artifacts.rs``: it records, per artifact,
+the entry kind, static shapes (batch, window, chunk) and the exact input /
+output order.
+
+Usage: python -m compile.aot [--out ../artifacts] [--models tiny,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import DEFAULT_SHAPES, TRAINED_MODELS, ModelConfig
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# set by main() from --pallas; module-level so build_entries closures see it
+USE_PALLAS = False
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(names_shapes):
+    return [{"name": n, "shape": list(s.shape), "dtype": str(s.dtype)} for n, s in names_shapes]
+
+
+def build_entries(cfg: ModelConfig, B: int, W: int, C: int):
+    """Yield (kind, name, fn, arg_specs, input_names, output_names) tuples."""
+    D, H, dh, F, V = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ffn, cfg.vocab
+
+    for N, tag in ((1, "d"), (C, "p")):
+        # ---- embed ----
+        args = [
+            ("tokens", _spec((B, N), I32)),
+            ("positions", _spec((B, N), I32)),
+            ("tok_emb", _spec((V, D))),
+            ("pos_emb", _spec((cfg.max_pos, D))),
+        ]
+        yield ("embed", f"embed_{tag}_b{B}", M.embed, args,
+               ["hidden"], [(B, N, D)])
+
+        # ---- attn_step (GPU half of Algorithm 2) ----
+        def attn_fn(hidden, ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, k_win, v_win,
+                    win_len, n_valid, _cfg=cfg):
+            # use_pallas=False for CPU-PJRT serving artifacts (§Perf L2):
+            # the interpret-mode pallas emulation is ~100x slower on the CPU
+            # plugin; pass --pallas to embed the kernel (TPU-faithful path,
+            # numerics identical — pytest pins kernel == ref oracle).
+            return M.attn_step(_cfg, hidden, ln1_g, ln1_b, wq, bq, wk, bk, wv,
+                               bv, k_win, v_win, win_len, n_valid,
+                               use_pallas=USE_PALLAS)
+
+        args = [
+            ("hidden", _spec((B, N, D))),
+            ("ln1_g", _spec((D,))), ("ln1_b", _spec((D,))),
+            ("wq", _spec((D, D))), ("bq", _spec((D,))),
+            ("wk", _spec((D, D))), ("bk", _spec((D,))),
+            ("wv", _spec((D, D))), ("bv", _spec((D,))),
+            ("k_win", _spec((B, H, W, dh))),
+            ("v_win", _spec((B, H, W, dh))),
+            ("win_len", _spec((B,), I32)),
+            ("n_valid", _spec((B,), I32)),
+        ]
+        yield ("attn_step", f"attn_{tag}_b{B}_w{W}", attn_fn, args,
+               ["q", "k_new", "v_new", "o_gpu", "lse", "a_sum"],
+               [(B, H, N, dh)] * 4 + [(B, H, N), (B, H, W + N)])
+
+        # ---- post_attn ----
+        args = [
+            ("hidden", _spec((B, N, D))),
+            ("o_merged", _spec((B, N, D))),
+            ("wo", _spec((D, D))), ("bo", _spec((D,))),
+            ("ln2_g", _spec((D,))), ("ln2_b", _spec((D,))),
+            ("w1", _spec((D, F))), ("b1", _spec((F,))),
+            ("w2", _spec((F, D))), ("b2", _spec((D,))),
+        ]
+        yield ("post_attn", f"post_{tag}_b{B}", M.post_attn, args,
+               ["hidden_out"], [(B, N, D)])
+
+    # ---- lm_head (decode position only) ----
+    args = [
+        ("hidden", _spec((B, 1, D))),
+        ("lnf_g", _spec((D,))), ("lnf_b", _spec((D,))),
+        ("tok_emb", _spec((V, D))),
+    ]
+    yield ("lm_head", f"lm_head_b{B}", M.lm_head, args, ["logits"], [(B, 1, V)])
+
+
+def lower_model(cfg: ModelConfig, shapes, out_dir: str, manifest: list, seen: set) -> None:
+    for sh in shapes:
+        for kind, name, fn, args, out_names, out_shapes in build_entries(
+                cfg, sh.batch, sh.window, sh.chunk):
+            full = f"{cfg.name}__{name}"
+            if full in seen:
+                continue
+            seen.add(full)
+            specs = [s for _, s in args]
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{full}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest.append({
+                "model": cfg.name,
+                "kind": kind,
+                "name": full,
+                "file": fname,
+                "batch": sh.batch,
+                "window": sh.window,
+                "chunk": sh.chunk,
+                "inputs": _io(args),
+                "outputs": [{"name": n, "shape": list(s)} for n, s in zip(out_names, out_shapes)],
+            })
+            print(f"lowered {full} ({len(text)//1024} KiB)", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(c.name for c in TRAINED_MODELS))
+    ap.add_argument("--fast", action="store_true",
+                    help="only lower the (b=1,w=256) tiny variants (CI smoke)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="embed the L1 pallas kernel in the attention "
+                         "artifacts (TPU-faithful; slow under CPU interpret)")
+    args = ap.parse_args()
+    global USE_PALLAS
+    USE_PALLAS = args.pallas
+    os.makedirs(args.out, exist_ok=True)
+
+    wanted = set(args.models.split(","))
+    manifest = []
+    seen = set()
+    for cfg in TRAINED_MODELS:
+        if cfg.name not in wanted:
+            continue
+        if args.fast or cfg.name != "tiny":
+            shapes = [s for s in DEFAULT_SHAPES if s.batch == 1 and s.window == 256]
+        else:
+            shapes = DEFAULT_SHAPES
+        lower_model(cfg, shapes, args.out, manifest, seen)
+
+    models = {c.name: c.to_json_dict() for c in TRAINED_MODELS if c.name in wanted}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "models": models, "artifacts": manifest}, f, indent=1)
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Shared model / artifact-shape configuration for the HGCA build path.
+
+The same configs are mirrored on the rust side in ``rust/src/config/model.rs``
+(presets ``tiny``, ``tiny-small``, ``tiny-large``). Any change here must be
+reflected there; ``artifacts/manifest.json`` carries the authoritative shapes
+so the rust runtime validates at load time.
+"""
+
+from dataclasses import dataclass, asdict, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the (byte-level) decoder-only transformer."""
+
+    name: str
+    vocab: int = 256
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    d_ffn: int = 512
+    max_pos: int = 20480  # learned absolute positions (OPT-style)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, l = self.d_model, self.d_ffn, self.n_layers
+        per_layer = 4 * d * d + 4 * d + 2 * d * f + f + d + 4 * d  # qkvo + ffn + lns
+        return self.vocab * d + self.max_pos * d + l * per_layer + 2 * d
+
+    def to_json_dict(self) -> dict:
+        dd = asdict(self)
+        dd["d_head"] = self.d_head
+        return dd
+
+
+# Models actually trained + served end-to-end (real numerics).
+TINY = ModelConfig(name="tiny", n_layers=4, d_model=128, n_heads=4, d_ffn=512)
+TINY_SMALL = ModelConfig(name="tiny-small", n_layers=2, d_model=64, n_heads=2, d_ffn=256)
+TINY_LARGE = ModelConfig(name="tiny-large", n_layers=6, d_model=192, n_heads=6, d_ffn=768)
+
+TRAINED_MODELS = [TINY, TINY_SMALL, TINY_LARGE]
+
+
+@dataclass(frozen=True)
+class ArtifactShapes:
+    """Static shapes compiled into the PJRT artifacts.
+
+    batch: compiled batch size (engine pads with an active mask).
+    window: GPU-resident KV window W (blk_num * blk_size on the rust side).
+    chunk: prefill/append chunk length.
+    """
+
+    batch: int
+    window: int
+    chunk: int
+
+
+# Compiled variants. The engine selects the smallest fitting (batch, window).
+DEFAULT_SHAPES: List[ArtifactShapes] = [
+    ArtifactShapes(batch=1, window=256, chunk=64),
+    ArtifactShapes(batch=4, window=256, chunk=64),
+    ArtifactShapes(batch=1, window=1024, chunk=64),
+    ArtifactShapes(batch=4, window=1024, chunk=64),
+]
+
+# Pallas kernel tiling (see DESIGN.md §6). block_k must divide padded S.
+BLOCK_Q = 64
+BLOCK_K = 128

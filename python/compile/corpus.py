@@ -1,0 +1,126 @@
+"""Deterministic synthetic corpus generator (WikiText stand-in).
+
+The container has no network access, so WikiText cannot be downloaded. This
+module generates a fixed-seed, English-like corpus with the two statistical
+properties the paper's analysis relies on:
+
+* **repeated named entities** spread across long ranges -> contextual
+  locality (paper Fig. 5: a few old KV entries stay influential), and
+* **local syntactic structure** -> spatial locality / recency skew
+  (Fig. 3/5) once a model is trained on it.
+
+The generator is a template-grammar Markov-ish process; output is pure
+ASCII so the byte-level tokenizer (vocab 256) covers it exactly. The same
+text is produced on every run (fixed LCG seed), so artifacts are
+reproducible bit-for-bit.
+"""
+
+import hashlib
+
+
+class _Lcg:
+    """Tiny deterministic PRNG (no numpy dependency for reproducibility)."""
+
+    def __init__(self, seed: int):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next(self) -> int:
+        self.state = (self.state * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        return self.state >> 33
+
+    def choice(self, seq):
+        return seq[self.next() % len(seq)]
+
+    def randint(self, lo, hi):
+        return lo + self.next() % (hi - lo + 1)
+
+
+_ENTITIES = [
+    "Arlington", "the Brazos River", "Fort Concho", "Palo Duro Canyon",
+    "Governor Coke", "the Texas and Pacific Railway", "Colonel Mackenzie",
+    "the Red River", "Judge Roy Bean", "the Chisholm Trail", "Galveston",
+    "the Comanche nation", "Captain Goodnight", "the Llano Estacado",
+    "the Rio Grande", "General Sheridan", "the Pecos valley", "Austin",
+]
+
+_SUBJECTS = [
+    "The settlement", "The expedition", "The railway company", "The garrison",
+    "A survey party", "The territorial legislature", "The cattle drive",
+    "The river crossing", "The trading post", "The county court",
+]
+
+_VERBS = [
+    "was established near", "expanded along", "negotiated with",
+    "was abandoned after the flood at", "mapped the region around",
+    "granted land adjacent to", "defended the route through",
+    "recorded the first census of", "shipped grain from", "surveyed",
+]
+
+_CLAUSES = [
+    "during the spring of that year", "despite repeated delays",
+    "under the terms of the treaty", "before the winter storms arrived",
+    "with support from the federal government", "after the drought ended",
+    "at considerable expense", "according to contemporary accounts",
+    "as noted in the annual report", "following the election",
+]
+
+_CONNECTORS = [
+    "Meanwhile,", "In the following decade,", "By contrast,", "Soon after,",
+    "Historical records show that", "According to later historians,",
+    "In the same period,", "Two years later,",
+]
+
+
+def generate(n_bytes: int = 262144, seed: int = 0x48474341) -> str:  # "HGCA"
+    rng = _Lcg(seed)
+    out = []
+    total = 0
+    para_len = 0
+    # each "document" gets a small set of focal entities, reused heavily ->
+    # long-range repeated tokens (contextual locality).
+    focal = [rng.choice(_ENTITIES) for _ in range(3)]
+    while total < n_bytes:
+        if para_len > rng.randint(400, 900):
+            out.append("\n\n")
+            total += 2
+            para_len = 0
+            if rng.randint(0, 3) == 0:  # new document, new focal entities
+                focal = [rng.choice(_ENTITIES) for _ in range(3)]
+                hdr = f"= {rng.choice(_ENTITIES).title()} =\n\n"
+                out.append(hdr)
+                total += len(hdr)
+        ent = focal[rng.next() % 3] if rng.randint(0, 9) < 7 else rng.choice(_ENTITIES)
+        parts = []
+        if rng.randint(0, 2) == 0:
+            parts.append(rng.choice(_CONNECTORS))
+        parts.append(rng.choice(_SUBJECTS).lower() if parts else rng.choice(_SUBJECTS))
+        parts.append(rng.choice(_VERBS))
+        parts.append(ent)
+        if rng.randint(0, 1) == 0:
+            parts.append(rng.choice(_CLAUSES))
+        if rng.randint(0, 4) == 0:
+            parts.append(f"in 18{rng.randint(40, 99)}")
+        sent = " ".join(parts) + ". "
+        out.append(sent)
+        total += len(sent)
+        para_len += len(sent)
+    text = "".join(out)[:n_bytes]
+    return text
+
+
+def corpus_sha(text: str) -> str:
+    return hashlib.sha256(text.encode("ascii")).hexdigest()[:16]
+
+
+def main() -> None:
+    import sys
+
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "../data/corpus.txt"
+    text = generate()
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} bytes, sha={corpus_sha(text)}")
+
+
+if __name__ == "__main__":
+    main()

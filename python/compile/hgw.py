@@ -1,0 +1,66 @@
+"""`.hgw` — the tiny binary weight format shared with the rust loader.
+
+Layout (little-endian):
+  magic  b"HGW1"
+  u32    n_tensors
+  per tensor:
+    u16    name_len, name (utf-8)
+    u8     ndim
+    u32*   dims
+    f32*   row-major data
+
+The rust loader lives in ``rust/src/tensor/weights.rs``; keep the two in
+lockstep.
+"""
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"HGW1"
+
+
+def save(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode("utf-8")
+            (nd,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+            cnt = int(np.prod(dims)) if nd else 1
+            data = np.frombuffer(f.read(4 * cnt), dtype="<f4").reshape(dims)
+            out[name] = data
+    return out
+
+
+def params_to_tensors(params) -> Dict[str, np.ndarray]:
+    """Flatten a model.Params into the .hgw name space."""
+    t = {
+        "tok_emb": np.asarray(params.tok_emb),
+        "pos_emb": np.asarray(params.pos_emb),
+        "lnf_g": np.asarray(params.lnf_g),
+        "lnf_b": np.asarray(params.lnf_b),
+    }
+    for i, lp in enumerate(params.layers):
+        for fname in lp._fields:
+            t[f"layer{i}.{fname}"] = np.asarray(getattr(lp, fname))
+    return t

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: dense window attention with LSE output.
+
+This is the paper's GPU-side hot spot (the "GPU-local dense attention" of
+HGCA §3.3) re-thought for TPU per DESIGN.md §6:
+
+* grid = (B*H, ceil(N / BLOCK_Q)) — one program per (head, q-tile);
+* the KV window is streamed tile-by-tile (BLOCK_K) through an online-softmax
+  loop (`lax.fori_loop`), the FlashAttention schedule. On TPU each tile is an
+  HBM→VMEM copy feeding the MXU; `interpret=True` (mandatory on the CPU PJRT
+  plugin — Mosaic custom-calls cannot run there) executes the same schedule
+  with numpy semantics, so numerics and loop structure are what we validate.
+* outputs are the partial attention O *and* the raw log-sum-exp, which the
+  rust coordinator merges with the CPU-side sparse attention
+  (Algorithm 2, line 13).
+
+Shapes: q [B,H,N,dh] (pre-scaled), k/v [B,H,S,dh], bias [B,N,S] additive
+mask. S must be a multiple of BLOCK_K (the L2 wrapper pads and masks).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..configs import BLOCK_Q, BLOCK_K
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, lse_ref, *, block_k: int):
+    """One (head, q-tile) program: online softmax over KV tiles."""
+    q = q_ref[0, 0]  # [bq, dh]
+    bq, dh = q.shape
+    s_total = k_ref.shape[2]
+    n_kv = s_total // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.dslice(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.dslice(j * block_k, block_k), slice(None)))
+        b = pl.load(bias_ref, (0, slice(None), pl.dslice(j * block_k, block_k)))
+        s = jnp.dot(q, k.T) + b  # [bq, bk] — MXU matmul on real TPU
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # rescale previous accumulator to the new running max
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dh), dtype=jnp.float32)
+    m, l, acc = lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[0, 0] = (m + jnp.log(l_safe)).astype(lse_ref.dtype)
+
+
+def flash_window_attention(q, k, v, bias, *, block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                           interpret: bool = True):
+    """Tiled dense attention with LSE. See module docstring for shapes.
+
+    Pads N up to a multiple of block_q and S up to a multiple of block_k
+    internally; padded KV slots are masked via `bias` padding with NEG_INF,
+    padded query rows are dropped from the output.
+    """
+    B, H, N, dh = q.shape
+    S = k.shape[2]
+    bq = min(block_q, _ceil_to(N, 8))
+    bk = min(block_k, _ceil_to(S, 8))
+
+    n_pad = _ceil_to(N, bq) - N
+    s_pad = _ceil_to(S, bk) - S
+    if n_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, n_pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, n_pad), (0, 0)))
+    if s_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, 0), (0, s_pad)), constant_values=NEG_INF)
+
+    Np, Sp = N + n_pad, S + s_pad
+    grid = (B * H, Np // bq)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, H, Np, dh), jnp.float32),
+        jax.ShapeDtypeStruct((B, H, Np), jnp.float32),
+    )
+    kernel = functools.partial(_flash_kernel, block_k=bk)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda bh, qb: (bh // H, bh % H, qb, 0)),
+            pl.BlockSpec((1, 1, Sp, dh), lambda bh, qb: (bh // H, bh % H, 0, 0)),
+            pl.BlockSpec((1, 1, Sp, dh), lambda bh, qb: (bh // H, bh % H, 0, 0)),
+            pl.BlockSpec((1, bq, Sp), lambda bh, qb: (bh // H, qb, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, bq, dh), lambda bh, qb: (bh // H, bh % H, qb, 0)),
+            pl.BlockSpec((1, 1, bq), lambda bh, qb: (bh // H, bh % H, qb)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(q, k, v, bias)
+
+    if n_pad:
+        o = o[:, :, :N]
+        lse = lse[:, :, :N]
+    return o, lse
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def vmem_footprint_bytes(block_q: int = BLOCK_Q, block_k: int = BLOCK_K, dh: int = 32) -> int:
+    """Estimated VMEM bytes per grid step (DESIGN.md §6): q-tile + k/v tile +
+    score tile + accumulator, fp32."""
+    return 4 * (block_q * dh + 2 * block_k * dh + block_q * block_k + block_q * dh)

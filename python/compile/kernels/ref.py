@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the ground truth the pallas kernels are verified against (pytest +
+hypothesis) and also the semantics the rust-side CPU attention and LSE merge
+replicate (rust/src/attention/). Keep them boring and obviously correct.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_with_lse(q, k, v, bias):
+    """Dense attention with log-sum-exp statistics.
+
+    q:    [B, H, N, dh]   (already scaled by 1/sqrt(dh))
+    k, v: [B, H, S, dh]
+    bias: [B, N, S]       additive mask, 0 for valid, -inf (large neg) invalid
+    returns (o [B,H,N,dh], lse [B,H,N])
+
+    lse is the *raw* log-sum-exp of the masked scores, the quantity used by
+    the FlashAttention-style merge: softmax_i = exp(s_i - lse).
+    """
+    s = jnp.einsum("bhnd,bhsd->bhns", q, k) + bias[:, None, :, :]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # guard fully-masked rows: keep m finite so exp() stays well-defined
+    m = jnp.maximum(m, -1e30)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhns,bhsd->bhnd", p, v) / jnp.maximum(l, 1e-30)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]
+    return o, lse
+
+
+def attention_probs(q, k, bias, lse):
+    """Recover per-slot softmax probabilities from scores + lse.
+
+    returns probs [B, H, N, S]; rows whose slots are masked get ~0.
+    """
+    s = jnp.einsum("bhnd,bhsd->bhns", q, k) + bias[:, None, :, :]
+    return jnp.exp(s - lse[..., None])
+
+
+def merge_lse(o_a, lse_a, o_b, lse_b):
+    """FlashAttention/FlashInfer-style merge of two partial attentions.
+
+    Each (o, lse) pair is a locally-normalized attention over a disjoint set
+    of KV entries. Returns the (o, lse) of attention over the union — the
+    paper's "merging states" (§3.3), numerically stabilized.
+
+    o_*:   [..., dh], lse_*: [...]
+    """
+    m = jnp.maximum(lse_a, lse_b)
+    wa = jnp.exp(lse_a - m)
+    wb = jnp.exp(lse_b - m)
+    z = wa + wb
+    o = (wa[..., None] * o_a + wb[..., None] * o_b) / z[..., None]
+    lse = m + jnp.log(z)
+    return o, lse

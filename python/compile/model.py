@@ -1,0 +1,230 @@
+"""L2: the transformer compute graph (JAX, build-time only).
+
+Decoder-only, OPT-style: byte-level vocab, learned absolute positional
+embeddings, pre-LayerNorm blocks, GELU FFN, tied LM head. The per-layer
+attention step is split exactly along the paper's hybrid boundary:
+
+  * ``attn_step``  — everything the "GPU" does for one layer (Algorithm 2,
+    line 10): LN → QKV projection → dense windowed attention over the
+    GPU-resident KV window (the L1 pallas kernel) → (O_gpu, LSE_gpu) plus the
+    per-slot attention mass A_gpu used for MAW tracking (Algorithm 1, line 8).
+  * the CPU sparse attention runs in rust between the two artifacts;
+  * ``post_attn`` — output projection + residual + FFN, consuming the merged
+    attention output.
+
+All entry points take weights as *inputs* so one compiled artifact serves
+every layer. ``full_forward`` is the monolithic causal forward used for
+training and as the python-side oracle.
+"""
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.flash_window import flash_window_attention, NEG_INF
+from .kernels import ref
+
+
+class LayerParams(NamedTuple):
+    ln1_g: jax.Array
+    ln1_b: jax.Array
+    wq: jax.Array
+    bq: jax.Array
+    wk: jax.Array
+    bk: jax.Array
+    wv: jax.Array
+    bv: jax.Array
+    wo: jax.Array
+    bo: jax.Array
+    ln2_g: jax.Array
+    ln2_b: jax.Array
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+
+
+class Params(NamedTuple):
+    tok_emb: jax.Array  # [vocab, d]
+    pos_emb: jax.Array  # [max_pos, d]
+    layers: list        # list[LayerParams]
+    lnf_g: jax.Array
+    lnf_b: jax.Array
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    d, f = cfg.d_model, cfg.d_ffn
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    std = 0.02
+
+    def dense(k, i, o):
+        return jax.random.normal(k, (i, o), jnp.float32) * std
+
+    layers = []
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + li], 6)
+        layers.append(LayerParams(
+            ln1_g=jnp.ones((d,)), ln1_b=jnp.zeros((d,)),
+            wq=dense(ks[0], d, d), bq=jnp.zeros((d,)),
+            wk=dense(ks[1], d, d), bk=jnp.zeros((d,)),
+            wv=dense(ks[2], d, d), bv=jnp.zeros((d,)),
+            wo=dense(ks[3], d, d), bo=jnp.zeros((d,)),
+            ln2_g=jnp.ones((d,)), ln2_b=jnp.zeros((d,)),
+            w1=dense(ks[4], d, f), b1=jnp.zeros((f,)),
+            w2=dense(ks[5], f, d), b2=jnp.zeros((d,)),
+        ))
+    return Params(
+        tok_emb=jax.random.normal(keys[0], (cfg.vocab, d), jnp.float32) * std,
+        pos_emb=jax.random.normal(keys[1], (cfg.max_pos, d), jnp.float32) * std,
+        layers=layers,
+        lnf_g=jnp.ones((d,)), lnf_b=jnp.zeros((d,)),
+    )
+
+
+def layernorm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    # tanh approximation — mirrored exactly in rust/src/tensor/ops.rs
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (weights passed as inputs; shapes static per artifact)
+# ---------------------------------------------------------------------------
+
+def embed(tokens, positions, tok_emb, pos_emb):
+    """tokens/positions i32[B,N] → hidden f32[B,N,D]."""
+    return tok_emb[tokens] + pos_emb[positions]
+
+
+def _split_heads(x, n_heads):
+    B, N, D = x.shape
+    dh = D // n_heads
+    return x.reshape(B, N, n_heads, dh).transpose(0, 2, 1, 3)
+
+
+def attn_step(cfg: ModelConfig, hidden, ln1_g, ln1_b, wq, bq, wk, bk, wv, bv,
+              k_win, v_win, win_len, n_valid, use_pallas: bool = True):
+    """GPU-side half of one hybrid attention layer (Algorithm 2, line 10).
+
+    hidden:       f32[B, N, D]    (N=1 decode, N=chunk append/prefill)
+    k_win, v_win: f32[B, H, W, dh] GPU-resident window, chronological order,
+                  only the first win_len[b] slots valid.
+    win_len:      i32[B]
+    n_valid:      i32[B]  valid query rows per sequence (chunk padding: the
+                  tail rows beyond n_valid are inert — masked out of a_sum
+                  and never appended by the coordinator)
+
+    Returns:
+      q      f32[B,H,N,dh]  scaled queries (consumed by rust CPU attention)
+      k_new  f32[B,H,N,dh]  new KV entries (rust appends them to the window)
+      v_new  f32[B,H,N,dh]
+      o_gpu  f32[B,H,N,dh]  partial attention over [window ; new tokens]
+      lse    f32[B,H,N]
+      a_sum  f32[B,H,W+N]   per-slot attention mass summed over the valid
+                            queries (MAW update, Algorithm 1 line 8)
+    """
+    B, N, D = hidden.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    W = k_win.shape[2]
+    x = layernorm(hidden, ln1_g, ln1_b)
+    q = _split_heads(x @ wq + bq, H) * (1.0 / math.sqrt(dh))
+    k_new = _split_heads(x @ wk + bk, H)
+    v_new = _split_heads(x @ wv + bv, H)
+
+    k_all = jnp.concatenate([k_win, k_new], axis=2)  # [B,H,W+N,dh]
+    v_all = jnp.concatenate([v_win, v_new], axis=2)
+
+    # slot validity: window slot j valid iff j < win_len[b];
+    # new slot W+i visible to query n iff i <= n (causal within the chunk)
+    # and i < n_valid[b] (padded KV slots are never attended).
+    slot = jnp.arange(W + N)[None, None, :]                      # [1,1,S]
+    qpos = jnp.arange(N)[None, :, None]                          # [1,N,1]
+    valid_win = slot < win_len[:, None, None]                    # [B,1,S]
+    valid_new = (slot >= W) & ((slot - W) <= qpos) \
+        & ((slot - W) < n_valid[:, None, None])                  # [B,N,S]
+    bias = jnp.where(valid_win | valid_new, 0.0, NEG_INF).astype(jnp.float32)
+    bias = jnp.broadcast_to(bias, (B, N, W + N))
+
+    if use_pallas:
+        # L1 pallas flash kernel — the TPU-targeted path (Mosaic on real
+        # hardware; interpret=True emulation on the CPU PJRT plugin).
+        o_gpu, lse = flash_window_attention(q, k_all, v_all, bias)
+    else:
+        # XLA-fused equivalent for CPU-serving artifacts (§Perf L2): the
+        # interpret-mode grid emulation costs ~100x on the CPU plugin;
+        # numerics are identical (pytest pins kernel == ref).
+        o_gpu, lse = ref.attention_with_lse(q, k_all, v_all, bias)
+    probs = ref.attention_probs(q, k_all, bias, lse)             # [B,H,N,S]
+    # zero out padded query rows so their mass never reaches the MAW
+    q_mask = (jnp.arange(N)[None, :] < n_valid[:, None]).astype(jnp.float32)
+    a_sum = jnp.einsum("bhns,bn->bhs", probs, q_mask)            # [B,H,S]
+    return q, k_new, v_new, o_gpu, lse, a_sum
+
+
+def post_attn(hidden, o_merged, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2):
+    """Output projection + residual + FFN, after the rust-side LSE merge.
+
+    hidden:   f32[B,N,D] residual input (same tensor attn_step consumed)
+    o_merged: f32[B,N,D] merged attention output, heads already flattened
+    """
+    h = hidden + (o_merged @ wo + bo)
+    x = layernorm(h, ln2_g, ln2_b)
+    return h + (gelu(x @ w1 + b1) @ w2 + b2)
+
+
+def lm_head(hidden, lnf_g, lnf_b, tok_emb):
+    """hidden f32[B,N,D] → logits f32[B,N,vocab] (tied embedding)."""
+    return layernorm(hidden, lnf_g, lnf_b) @ tok_emb.T
+
+
+# ---------------------------------------------------------------------------
+# Monolithic forward (training + oracle)
+# ---------------------------------------------------------------------------
+
+def full_forward(cfg: ModelConfig, params: Params, tokens):
+    """Standard full causal attention over tokens i32[B,T] → logits [B,T,V]."""
+    B, T = tokens.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    h = embed(tokens, jnp.broadcast_to(jnp.arange(T)[None, :], (B, T)),
+              params.tok_emb, params.pos_emb)
+    causal = jnp.where(jnp.arange(T)[:, None] >= jnp.arange(T)[None, :], 0.0, NEG_INF)
+    bias = jnp.broadcast_to(causal[None], (B, T, T)).astype(jnp.float32)
+    for lp in params.layers:
+        x = layernorm(h, lp.ln1_g, lp.ln1_b)
+        q = _split_heads(x @ lp.wq + lp.bq, H) * (1.0 / math.sqrt(dh))
+        k = _split_heads(x @ lp.wk + lp.bk, H)
+        v = _split_heads(x @ lp.wv + lp.bv, H)
+        o, _ = ref.attention_with_lse(q, k, v, bias)
+        o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.d_model)
+        h = post_attn(h, o, lp.wo, lp.bo, lp.ln2_g, lp.ln2_b, lp.w1, lp.b1, lp.w2, lp.b2)
+    return lm_head(h, params.lnf_g, params.lnf_b, params.tok_emb)
+
+
+def full_forward_attn_probs(cfg: ModelConfig, params: Params, tokens):
+    """Forward that also returns per-layer attention probabilities
+    [L][B,H,T,T] — used by the analysis benches (paper Figs. 3–5)."""
+    B, T = tokens.shape
+    H, dh = cfg.n_heads, cfg.d_head
+    h = embed(tokens, jnp.broadcast_to(jnp.arange(T)[None, :], (B, T)),
+              params.tok_emb, params.pos_emb)
+    causal = jnp.where(jnp.arange(T)[:, None] >= jnp.arange(T)[None, :], 0.0, NEG_INF)
+    bias = jnp.broadcast_to(causal[None], (B, T, T)).astype(jnp.float32)
+    all_probs = []
+    for lp in params.layers:
+        x = layernorm(h, lp.ln1_g, lp.ln1_b)
+        q = _split_heads(x @ lp.wq + lp.bq, H) * (1.0 / math.sqrt(dh))
+        k = _split_heads(x @ lp.wk + lp.bk, H)
+        v = _split_heads(x @ lp.wv + lp.bv, H)
+        o, lse = ref.attention_with_lse(q, k, v, bias)
+        all_probs.append(ref.attention_probs(q, k, bias, lse))
+        o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.d_model)
+        h = post_attn(h, o, lp.wo, lp.bo, lp.ln2_g, lp.ln2_b, lp.w1, lp.b1, lp.w2, lp.b2)
+    return lm_head(h, params.lnf_g, params.lnf_b, params.tok_emb), all_probs

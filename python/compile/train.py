@@ -1,0 +1,128 @@
+"""Build-time trainer for the demo models (real numerics for the accuracy
+experiments, Table 1 / Figs. 3–5, 15).
+
+Trains byte-level decoder-only transformers (configs.TRAINED_MODELS) on the
+bundled deterministic corpus with Adam, then exports weights as
+``artifacts/<name>.hgw`` + ``artifacts/<name>_config.json``. Runs once under
+``make artifacts``; never on the serving path.
+
+Usage: python -m compile.train [--steps N] [--out DIR] [--models tiny,...]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from . import hgw
+from .configs import TRAINED_MODELS, ModelConfig
+from .model import Params, full_forward, init_params
+
+SEQ_LEN = 256
+BATCH = 8
+
+
+def load_corpus(repo_root: str) -> np.ndarray:
+    path = os.path.join(repo_root, "data", "corpus.txt")
+    if not os.path.exists(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(corpus_mod.generate())
+    with open(path, "rb") as f:
+        data = np.frombuffer(f.read(), dtype=np.uint8)
+    return data.astype(np.int32)
+
+
+def batches(data: np.ndarray, rng: np.random.Generator, batch: int, seq: int):
+    while True:
+        idx = rng.integers(0, len(data) - seq - 1, size=batch)
+        x = np.stack([data[i:i + seq] for i in idx])
+        y = np.stack([data[i + 1:i + seq + 1] for i in idx])
+        yield jnp.asarray(x), jnp.asarray(y)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, x, y):
+    logits = full_forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def adam_update(grads, params_flat, m, v, step, lr=3e-4, b1=0.9, b2=0.999, eps=1e-8):
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    for g, p, mi, vi in zip(grads, params_flat, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        p = p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        new_p.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def train_one(cfg: ModelConfig, data: np.ndarray, steps: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    flat, treedef = jax.tree.flatten(params)
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+
+    @jax.jit
+    def step_fn(flat, m, v, step, x, y):
+        params = jax.tree.unflatten(treedef, flat)
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y))(params)
+        gflat = jax.tree.flatten(grads)[0]
+        flat, m, v = adam_update(gflat, flat, m, v, step)
+        return flat, m, v, loss
+
+    rng = np.random.default_rng(seed + 1)
+    gen = batches(data, rng, BATCH, SEQ_LEN)
+    losses = []
+    t0 = time.time()
+    for i in range(1, steps + 1):
+        x, y = next(gen)
+        flat, m, v, loss = step_fn(flat, m, v, jnp.float32(i), x, y)
+        if i == 1 or i % 50 == 0 or i == steps:
+            lv = float(loss)
+            losses.append((i, lv))
+            print(f"[{cfg.name}] step {i:4d} loss {lv:.4f} ppl {np.exp(lv):8.2f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return jax.tree.unflatten(treedef, flat), losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(c.name for c in TRAINED_MODELS))
+    args = ap.parse_args()
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(os.path.dirname(__file__))))
+    os.makedirs(args.out, exist_ok=True)
+    data = load_corpus(repo_root)
+    print(f"corpus: {len(data)} bytes, sha={corpus_mod.corpus_sha(bytes(data.astype(np.uint8)).decode('ascii'))}")
+
+    wanted = set(args.models.split(","))
+    log = {}
+    for cfg in TRAINED_MODELS:
+        if cfg.name not in wanted:
+            continue
+        params, losses = train_one(cfg, data, args.steps)
+        hgw.save(os.path.join(args.out, f"{cfg.name}.hgw"), hgw.params_to_tensors(params))
+        with open(os.path.join(args.out, f"{cfg.name}_config.json"), "w") as f:
+            json.dump(cfg.to_json_dict(), f, indent=1)
+        log[cfg.name] = {"params": cfg.param_count(), "loss_curve": losses}
+        print(f"[{cfg.name}] exported {cfg.param_count()} params")
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""AOT path: every entry point lowers to parseable HLO text with the input /
+output arity the manifest promises (the rust runtime trusts this contract)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.configs import TINY_SMALL, ArtifactShapes
+
+
+SHAPE = ArtifactShapes(batch=1, window=32, chunk=8)
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return list(aot.build_entries(TINY_SMALL, SHAPE.batch, SHAPE.window, SHAPE.chunk))
+
+
+def test_expected_entry_set(entries):
+    kinds = sorted(e[0] for e in entries)
+    assert kinds == sorted(["embed", "attn_step", "post_attn"] * 2 + ["lm_head"])
+
+
+def test_all_entries_lower_to_hlo_text(entries):
+    for kind, name, fn, args, out_names, out_shapes in entries:
+        specs = [s for _, s in args]
+        text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+        assert text.startswith("HloModule"), f"{name}: no HloModule header"
+        # param count must match declared inputs
+        assert text.count("parameter(") >= len(args), name
+
+
+def test_attn_entry_output_arity(entries):
+    for kind, name, fn, args, out_names, out_shapes in entries:
+        if kind != "attn_step":
+            continue
+        specs = [s for _, s in args]
+        outs = jax.eval_shape(fn, *specs)
+        assert len(outs) == 6 == len(out_names)
+        for o, expect in zip(outs, out_shapes):
+            assert list(o.shape) == list(expect), f"{name}: {o.shape} != {expect}"
+
+
+def test_manifest_roundtrip(tmp_path, entries):
+    manifest = []
+    aot.lower_model(TINY_SMALL, [SHAPE], str(tmp_path), manifest, set())
+    with open(tmp_path / "m.json", "w") as f:
+        json.dump({"artifacts": manifest}, f)
+    loaded = json.load(open(tmp_path / "m.json"))
+    assert len(loaded["artifacts"]) == len(entries)
+    for a in loaded["artifacts"]:
+        assert os.path.exists(tmp_path / a["file"])
+        assert a["model"] == "tiny-small"
+        assert all(k in a for k in ("kind", "inputs", "outputs", "batch", "window", "chunk"))
+
+
+def test_lowering_is_deterministic(entries):
+    kind, name, fn, args, *_ = entries[0]
+    specs = [s for _, s in args]
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert t1 == t2

@@ -1,0 +1,131 @@
+"""L1 correctness: pallas flash_window_attention vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, masking patterns and scales; fixed cases pin the
+regression corners (single query, fully-masked rows, non-divisible tiles).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_window import flash_window_attention, vmem_footprint_bytes, NEG_INF
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _mk(B, H, N, S, dh, seed=0, mask_p=0.0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, N, dh)) * scale, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, dh)) * scale, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, dh)), jnp.float32)
+    mask = rng.random((B, N, S)) < mask_p
+    # never mask slot 0 so no row is fully masked (separate test covers that)
+    mask[:, :, 0] = False
+    bias = jnp.asarray(np.where(mask, NEG_INF, 0.0), jnp.float32)
+    return q, k, v, bias
+
+
+def _check(q, k, v, bias, block_q=64, block_k=128):
+    o1, l1 = flash_window_attention(q, k, v, bias, block_q=block_q, block_k=block_k)
+    o2, l2 = ref.attention_with_lse(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=RTOL, atol=ATOL)
+
+
+# ---------------- fixed regression cases ----------------
+
+def test_single_query_single_head():
+    _check(*_mk(1, 1, 1, 16, 8))
+
+
+def test_decode_shape_window_257():
+    # W + 1 slot (decode appends one KV) — deliberately not tile-divisible
+    _check(*_mk(2, 4, 1, 257, 32))
+
+
+def test_prefill_chunk():
+    _check(*_mk(2, 4, 64, 320, 32, mask_p=0.2))
+
+
+def test_tile_exact_multiples():
+    _check(*_mk(1, 2, 64, 256, 32))
+
+
+def test_tile_non_multiples():
+    _check(*_mk(1, 2, 17, 131, 32))
+
+
+def test_small_blocks():
+    _check(*_mk(1, 2, 30, 70, 16), block_q=8, block_k=16)
+
+
+def test_large_scores_numerically_stable():
+    q, k, v, bias = _mk(1, 2, 4, 64, 16, scale=30.0)
+    _check(q, k, v, bias)
+
+
+def test_fully_masked_row_is_finite_with_neg_inf_lse():
+    # A fully-masked row never occurs on the engine path (a token always
+    # attends to itself), but it must stay *finite* and carry lse ≈ -inf so
+    # a downstream LSE merge assigns it ~zero weight.
+    q, k, v, bias = _mk(1, 1, 2, 32, 8)
+    bias = bias.at[0, 1, :].set(NEG_INF)
+    o, lse = flash_window_attention(q, k, v, bias)
+    assert np.all(np.isfinite(np.asarray(o)))
+    assert float(lse[0, 0, 1]) < -1e29  # merge weight exp(lse - m) ≈ 0
+
+
+def test_mask_prefix_equals_truncation():
+    # masking the tail of the KVs must equal attention over the prefix only
+    q, k, v, _ = _mk(1, 2, 3, 48, 16, seed=3)
+    valid = 29
+    bias = jnp.asarray(
+        np.where(np.arange(48)[None, None, :] < valid, 0.0, NEG_INF), jnp.float32
+    )
+    bias = jnp.broadcast_to(bias, (1, 3, 48))
+    o1, l1 = flash_window_attention(q, k, v, bias)
+    o2, l2 = ref.attention_with_lse(q, k[:, :, :valid], v[:, :, :valid],
+                                    jnp.zeros((1, 3, valid), jnp.float32))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=RTOL, atol=ATOL)
+
+
+def test_vmem_footprint_within_budget():
+    # DESIGN.md §6: default tiling must fit comfortably in 16 MiB VMEM
+    assert vmem_footprint_bytes() < 2 * 1024 * 1024
+
+
+# ---------------- hypothesis sweeps ----------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 3),
+    H=st.integers(1, 4),
+    N=st.integers(1, 40),
+    S=st.integers(1, 200),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    mask_p=st.floats(0.0, 0.6),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shapes(B, H, N, S, dh, mask_p, seed):
+    _check(*_mk(B, H, N, S, dh, seed=seed, mask_p=mask_p))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block_q=st.sampled_from([8, 16, 64, 128]),
+    block_k=st.sampled_from([8, 32, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_block_shapes(block_q, block_k, seed):
+    # tiling must never change numerics
+    q, k, v, bias = _mk(2, 2, 20, 150, 16, seed=seed, mask_p=0.3)
+    _check(q, k, v, bias, block_q=block_q, block_k=block_k)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.01, 50.0), seed=st.integers(0, 2**16))
+def test_hypothesis_score_scales(scale, seed):
+    _check(*_mk(1, 2, 8, 96, 16, seed=seed, scale=scale))

@@ -1,0 +1,75 @@
+"""LSE-merge semantics (Algorithm 2 line 13): merging disjoint partial
+attentions must equal one softmax over the union — the paper's 'lossless
+aggregation' claim, which the rust coordinator relies on."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def _attn_parts(seed, B=2, H=2, N=3, S=40, dh=8, split=17, scale=1.0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, N, dh)) * scale, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, dh)), jnp.float32)
+    z = jnp.zeros((B, N, S), jnp.float32)
+    full = ref.attention_with_lse(q, k, v, z)
+    a = ref.attention_with_lse(q, k[:, :, :split], v[:, :, :split], z[:, :, :split])
+    b = ref.attention_with_lse(q, k[:, :, split:], v[:, :, split:], z[:, :, split:])
+    return full, a, b
+
+
+def test_merge_equals_union():
+    (of, lf), (oa, la), (ob, lb) = _attn_parts(0)
+    om, lm = ref.merge_lse(oa, la, ob, lb)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(of), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(lf), rtol=1e-5, atol=1e-5)
+
+
+def test_merge_commutative():
+    _, (oa, la), (ob, lb) = _attn_parts(1)
+    o1, l1 = ref.merge_lse(oa, la, ob, lb)
+    o2, l2 = ref.merge_lse(ob, lb, oa, la)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6, atol=1e-6)
+
+
+def test_merge_with_empty_side_is_identity():
+    # an empty domain has lse = -inf; merge must return the other side
+    _, (oa, la), _ = _attn_parts(2)
+    o_empty = jnp.zeros_like(oa)
+    l_empty = jnp.full_like(la, -1e30)
+    om, lm = ref.merge_lse(oa, la, o_empty, l_empty)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(oa), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(la), rtol=1e-5, atol=1e-5)
+
+
+def test_merge_associative_three_way():
+    rng = np.random.default_rng(3)
+    B, H, N, S, dh = 1, 2, 2, 60, 8
+    q = jnp.asarray(rng.normal(size=(B, H, N, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, dh)), jnp.float32)
+    z = jnp.zeros((B, N, S), jnp.float32)
+    of, lf = ref.attention_with_lse(q, k, v, z)
+    parts = [(0, 20), (20, 45), (45, 60)]
+    os_, ls_ = [], []
+    for s0, s1 in parts:
+        o, l = ref.attention_with_lse(q, k[:, :, s0:s1], v[:, :, s0:s1], z[:, :, s0:s1])
+        os_.append(o)
+        ls_.append(l)
+    om, lm = ref.merge_lse(os_[0], ls_[0], os_[1], ls_[1])
+    om, lm = ref.merge_lse(om, lm, os_[2], ls_[2])
+    np.testing.assert_allclose(np.asarray(om), np.asarray(of), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(lf), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), split=st.integers(1, 39), scale=st.floats(0.1, 20.0))
+def test_hypothesis_merge_union(seed, split, scale):
+    (of, lf), (oa, la), (ob, lb) = _attn_parts(seed, split=split, scale=scale)
+    om, lm = ref.merge_lse(oa, la, ob, lb)
+    np.testing.assert_allclose(np.asarray(om), np.asarray(of), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lm), np.asarray(lf), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,233 @@
+"""L2 model semantics: the split decode/prefill path (attn_step + rust-side
+merge + post_attn) must reproduce the monolithic causal forward, for every
+stage pattern the engine uses (decode N=1, prefill chunks, window eviction
+handled by masking)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import TINY_SMALL, ModelConfig
+from compile.kernels import ref
+
+CFG = TINY_SMALL
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(7))
+
+
+def _decode_all(cfg, params, toks, W):
+    """Run the split path token-by-token with everything in-window."""
+    B, T = toks.shape
+    H, dh, D = cfg.n_heads, cfg.d_head, cfg.d_model
+    k_win = [jnp.zeros((B, H, W, dh)) for _ in range(cfg.n_layers)]
+    v_win = [jnp.zeros((B, H, W, dh)) for _ in range(cfg.n_layers)]
+    outs = []
+    for t in range(T):
+        hid = M.embed(toks[:, t:t + 1], jnp.full((B, 1), t, jnp.int32),
+                      params.tok_emb, params.pos_emb)
+        for li, lp in enumerate(params.layers):
+            q, k_new, v_new, o, lse, a_sum = M.attn_step(
+                cfg, hid, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq, lp.wk, lp.bk,
+                lp.wv, lp.bv, k_win[li], v_win[li], jnp.full((B,), t, jnp.int32),
+                jnp.full((B,), 1, jnp.int32))
+            k_win[li] = k_win[li].at[:, :, t].set(k_new[:, :, 0])
+            v_win[li] = v_win[li].at[:, :, t].set(v_new[:, :, 0])
+            o_flat = o.transpose(0, 2, 1, 3).reshape(B, 1, D)
+            hid = M.post_attn(hid, o_flat, lp.wo, lp.bo, lp.ln2_g, lp.ln2_b,
+                              lp.w1, lp.b1, lp.w2, lp.b2)
+        outs.append(M.lm_head(hid, params.lnf_g, params.lnf_b, params.tok_emb))
+    return jnp.concatenate(outs, axis=1)
+
+
+def test_incremental_decode_matches_full(params):
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 10), 0, 255)
+    full = M.full_forward(CFG, params, toks)
+    inc = _decode_all(CFG, params, toks, W=16)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_chunk_matches_full(params):
+    """One attn_step call with N=chunk must equal per-token decode."""
+    B, T, W = 1, 8, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, 255)
+    full = M.full_forward(CFG, params, toks)
+
+    H, dh, D = CFG.n_heads, CFG.d_head, CFG.d_model
+    k_win = [jnp.zeros((B, H, W, dh)) for _ in range(CFG.n_layers)]
+    v_win = [jnp.zeros((B, H, W, dh)) for _ in range(CFG.n_layers)]
+    hid = M.embed(toks, jnp.arange(T)[None, :], params.tok_emb, params.pos_emb)
+    for li, lp in enumerate(params.layers):
+        q, k_new, v_new, o, lse, a_sum = M.attn_step(
+            CFG, hid, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq, lp.wk, lp.bk,
+            lp.wv, lp.bv, k_win[li], v_win[li], jnp.zeros((B,), jnp.int32),
+            jnp.full((B,), T, jnp.int32))
+        o_flat = o.transpose(0, 2, 1, 3).reshape(B, T, D)
+        hid = M.post_attn(hid, o_flat, lp.wo, lp.bo, lp.ln2_g, lp.ln2_b,
+                          lp.w1, lp.b1, lp.w2, lp.b2)
+    logits = M.lm_head(hid, params.lnf_g, params.lnf_b, params.tok_emb)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+def test_attn_step_asum_is_probability_mass(params):
+    """a_sum must sum to N over valid slots per (b, h) — softmax rows sum to 1."""
+    B, N, W = 2, 4, 12
+    H, dh = CFG.n_heads, CFG.d_head
+    rng = np.random.default_rng(0)
+    hid = jnp.asarray(rng.normal(size=(B, N, CFG.d_model)), jnp.float32)
+    k_win = jnp.asarray(rng.normal(size=(B, H, W, dh)), jnp.float32)
+    v_win = jnp.asarray(rng.normal(size=(B, H, W, dh)), jnp.float32)
+    lp = params.layers[0]
+    win_len = jnp.array([5, 12], jnp.int32)
+    *_, a_sum = M.attn_step(CFG, hid, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq,
+                            lp.wk, lp.bk, lp.wv, lp.bv, k_win, v_win, win_len,
+                            jnp.full((B,), N, jnp.int32))
+    total = np.asarray(jnp.sum(a_sum, axis=-1))  # [B,H]
+    np.testing.assert_allclose(total, N, rtol=1e-4)
+    # masked window slots get ~0 mass
+    a = np.asarray(a_sum)
+    assert np.all(a[0, :, 5:W] < 1e-6)
+
+
+def test_attn_step_win_len_masks_stale_slots(params):
+    """Garbage beyond win_len must not affect the output."""
+    B, N, W = 1, 1, 8
+    H, dh = CFG.n_heads, CFG.d_head
+    rng = np.random.default_rng(1)
+    hid = jnp.asarray(rng.normal(size=(B, N, CFG.d_model)), jnp.float32)
+    k_win = jnp.asarray(rng.normal(size=(B, H, W, dh)), jnp.float32)
+    v_win = jnp.asarray(rng.normal(size=(B, H, W, dh)), jnp.float32)
+    lp = params.layers[0]
+    wl = jnp.array([3], jnp.int32)
+    nv = jnp.full((1,), N, jnp.int32)
+    out1 = M.attn_step(CFG, hid, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq, lp.wk,
+                       lp.bk, lp.wv, lp.bv, k_win, v_win, wl, nv)
+    k2 = k_win.at[:, :, 3:].set(999.0)
+    v2 = v_win.at[:, :, 3:].set(-999.0)
+    out2 = M.attn_step(CFG, hid, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq, lp.wk,
+                       lp.bk, lp.wv, lp.bv, k2, v2, wl, nv)
+    np.testing.assert_allclose(np.asarray(out1[3]), np.asarray(out2[3]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out1[4]), np.asarray(out2[4]), atol=1e-6)
+
+
+def test_hybrid_split_window_plus_cpu_side(params):
+    """The actual HGCA dataflow: window holds only the recent tokens, the
+    older KVs live 'on the CPU'; dense window attention merged with CPU
+    attention over the evicted entries must equal full attention."""
+    B, T, W = 1, 10, 4  # window holds 4 most-recent
+    H, dh, D = CFG.n_heads, CFG.d_head, CFG.d_model
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, 255)
+    full = M.full_forward(CFG, params, toks)
+
+    # caches per layer: full K/V history (the "CPU" store) + rolling window
+    hist_k = [[] for _ in range(CFG.n_layers)]
+    hist_v = [[] for _ in range(CFG.n_layers)]
+    outs = []
+    for t in range(T):
+        hid = M.embed(toks[:, t:t + 1], jnp.full((B, 1), t, jnp.int32),
+                      params.tok_emb, params.pos_emb)
+        for li, lp in enumerate(params.layers):
+            n_cpu = max(0, t - W)            # evicted entries
+            n_win = t - n_cpu                # in-window entries
+            if n_win > 0:
+                k_w = jnp.stack(hist_k[li][n_cpu:], axis=2)
+                v_w = jnp.stack(hist_v[li][n_cpu:], axis=2)
+                pad = W - n_win
+                k_w = jnp.pad(k_w, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v_w = jnp.pad(v_w, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            else:
+                k_w = jnp.zeros((B, H, W, dh))
+                v_w = jnp.zeros((B, H, W, dh))
+            q, k_new, v_new, o_g, lse_g, _ = M.attn_step(
+                CFG, hid, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq, lp.wk, lp.bk,
+                lp.wv, lp.bv, k_w, v_w, jnp.full((B,), n_win, jnp.int32),
+                jnp.full((B,), 1, jnp.int32))
+            if n_cpu > 0:  # "CPU" dense attention over evicted KVs + merge
+                k_c = jnp.stack(hist_k[li][:n_cpu], axis=2)
+                v_c = jnp.stack(hist_v[li][:n_cpu], axis=2)
+                o_c, lse_c = ref.attention_with_lse(
+                    q, k_c, v_c, jnp.zeros((B, 1, n_cpu), jnp.float32))
+                o_g, lse_g = ref.merge_lse(o_c, lse_c, o_g, lse_g)
+            hist_k[li].append(k_new[:, :, 0])
+            hist_v[li].append(v_new[:, :, 0])
+            o_flat = o_g.transpose(0, 2, 1, 3).reshape(B, 1, D)
+            hid = M.post_attn(hid, o_flat, lp.wo, lp.bo, lp.ln2_g, lp.ln2_b,
+                              lp.w1, lp.b1, lp.w2, lp.b2)
+        outs.append(M.lm_head(hid, params.lnf_g, params.lnf_b, params.tok_emb))
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(full), rtol=3e-4, atol=3e-4)
+
+
+def test_param_count_matches_config():
+    p = M.init_params(CFG, jax.random.PRNGKey(0))
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+    assert n == CFG.param_count()
+
+
+def test_gelu_matches_reference_constants():
+    # rust mirrors these exact constants; pin them
+    x = jnp.linspace(-4, 4, 17)
+    y = M.gelu(x)
+    expected = 0.5 * x * (1 + np.tanh(np.sqrt(2 / np.pi) * (np.asarray(x) + 0.044715 * np.asarray(x) ** 3)))
+    np.testing.assert_allclose(np.asarray(y), expected, rtol=1e-5, atol=1e-6)
+
+
+def test_attn_step_padded_queries_are_inert(params):
+    """n_valid masking: padded query rows must not contribute to a_sum and
+    the valid rows' outputs must match an unpadded call (the §Perf padded-
+    chunk prefill path relies on this)."""
+    B, W = 1, 8
+    H, dh = CFG.n_heads, CFG.d_head
+    rng = np.random.default_rng(5)
+    lp = params.layers[0]
+    k_win = jnp.asarray(rng.normal(size=(B, H, W, dh)), jnp.float32)
+    v_win = jnp.asarray(rng.normal(size=(B, H, W, dh)), jnp.float32)
+    wl = jnp.array([W], jnp.int32)
+
+    n_real, n_pad = 3, 8  # 3 valid queries padded to a chunk of 8
+    hid_real = jnp.asarray(rng.normal(size=(B, n_real, CFG.d_model)), jnp.float32)
+    hid_padded = jnp.concatenate(
+        [hid_real, jnp.asarray(rng.normal(size=(B, n_pad - n_real, CFG.d_model)), jnp.float32)],
+        axis=1,
+    )
+    out_ref = M.attn_step(CFG, hid_real, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq,
+                          lp.wk, lp.bk, lp.wv, lp.bv, k_win, v_win, wl,
+                          jnp.array([n_real], jnp.int32))
+    out_pad = M.attn_step(CFG, hid_padded, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq,
+                          lp.wk, lp.bk, lp.wv, lp.bv, k_win, v_win, wl,
+                          jnp.array([n_real], jnp.int32))
+    # valid query rows identical
+    np.testing.assert_allclose(np.asarray(out_pad[3])[:, :, :n_real],
+                               np.asarray(out_ref[3]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_pad[4])[:, :, :n_real],
+                               np.asarray(out_ref[4]), rtol=1e-5, atol=1e-5)
+    # a_sum over window slots matches (padded rows contribute nothing there)
+    np.testing.assert_allclose(np.asarray(out_pad[5])[:, :, :W],
+                               np.asarray(out_ref[5])[:, :, :W], rtol=1e-4, atol=1e-5)
+    # total attention mass equals the number of VALID queries only
+    total = np.asarray(jnp.sum(out_pad[5], axis=-1))
+    np.testing.assert_allclose(total, n_real, rtol=1e-4)
+
+
+def test_attn_step_pallas_and_fused_paths_agree(params):
+    """use_pallas=True (TPU-faithful) and use_pallas=False (CPU-serving
+    artifact) must be numerically interchangeable."""
+    B, N, W = 1, 4, 8
+    H, dh = CFG.n_heads, CFG.d_head
+    rng = np.random.default_rng(6)
+    lp = params.layers[0]
+    hid = jnp.asarray(rng.normal(size=(B, N, CFG.d_model)), jnp.float32)
+    k_win = jnp.asarray(rng.normal(size=(B, H, W, dh)), jnp.float32)
+    v_win = jnp.asarray(rng.normal(size=(B, H, W, dh)), jnp.float32)
+    wl = jnp.array([5], jnp.int32)
+    nv = jnp.array([N], jnp.int32)
+    a = M.attn_step(CFG, hid, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq, lp.wk, lp.bk,
+                    lp.wv, lp.bv, k_win, v_win, wl, nv, use_pallas=True)
+    b = M.attn_step(CFG, hid, lp.ln1_g, lp.ln1_b, lp.wq, lp.bq, lp.wk, lp.bk,
+                    lp.wv, lp.bv, k_win, v_win, wl, nv, use_pallas=False)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-5)

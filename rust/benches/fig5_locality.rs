@@ -1,0 +1,45 @@
+//! Fig. 5 — attention weights vs KV position at two decoding depths for
+//! one head: spatial locality (recency + sinks) and contextual locality
+//! (persistent mid-sequence spikes). Real probabilities (wall domain).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::analysis::{critical_set, positional_weights};
+use hgca::model::RefModel;
+use hgca::runtime::PjrtRuntime;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Rc::new(PjrtRuntime::new(&dir).expect("make artifacts first"));
+    let mr = rt.load_model(&std::env::var("HGCA_MODEL").unwrap_or("tiny".into())).unwrap();
+    let oracle = RefModel::new(mr.cfg.clone(), mr.weights.clone()).unwrap();
+    let text = std::fs::read(Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
+    let (t1, t2) = if hgca::bench::full_mode() { (256usize, 512usize) } else { (128, 255) };
+    let (_, probs) = oracle.forward(&text[3000..3000 + t2 + 1], true);
+    let mid = mr.cfg.n_layers / 2;
+    let head = 1.min(mr.cfg.n_heads - 1);
+
+    println!("=== Fig. 5: attention vs KV position, layer {mid} head {head}, decode @{t1} and @{t2} ===");
+    println!("{:>8} {:>12} {:>12}", "pos", format!("w@{t1}"), format!("w@{t2}"));
+    let w1 = positional_weights(&probs[mid], head, t1);
+    let w2 = positional_weights(&probs[mid], head, t2);
+    let stride = (t2 / 48).max(1);
+    for p in (0..w2.len()).step_by(stride) {
+        let a = if p < w1.len() { format!("{:.5}", w1[p]) } else { "-".into() };
+        println!("{p:>8} {a:>12} {:>12.5}", w2[p]);
+    }
+    let c1 = critical_set(&w1, 0.9);
+    let c2 = critical_set(&w2, 0.9);
+    println!("\n[shape check] 90% critical set: {} of {} entries @{t1}; {} of {} @{t2}", 
+        c1.len(), w1.len(), c2.len(), w2.len());
+    // spatial locality: how much of the critical set is recent?
+    let recent = |c: &Vec<usize>, t: usize| c.iter().filter(|&&p| p + 32 >= t).count();
+    println!("critical entries within last 32 tokens: {}/{} @{t1}, {}/{} @{t2}",
+        recent(&c1, t1), c1.len(), recent(&c2, t2), c2.len());
+    // contextual locality: persistent old entries influential at both depths
+    let old_persistent: Vec<usize> = c1.iter().filter(|p| c2.contains(p) && **p + 64 < t1).copied().collect();
+    println!("persistent old (contextual) entries in both critical sets: {:?}",
+        &old_persistent[..old_persistent.len().min(12)]);
+    println!("(paper O-2: spatial locality + a few persistent contextual KVs)");
+}

@@ -1,0 +1,108 @@
+//! Hot-path microbenchmarks (wall domain, this machine): the inner loops
+//! the §Perf pass optimizes — CPU sparse attention, LSE merge, MAW update,
+//! window staging, PJRT call overhead. Baseline + after numbers live in
+//! EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::attention::{merge_states, sparse_attention, HeadJob};
+use hgca::bench::bench;
+use hgca::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let dh = 32;
+
+    // ---- CPU sparse attention across job counts/sizes ----
+    for (jobs_n, n) in [(4usize, 512usize), (16, 512), (16, 4096), (64, 1024)] {
+        let kvs: Vec<(Vec<f32>, Vec<f32>)> = (0..jobs_n)
+            .map(|_| {
+                let mut k = vec![0.0f32; n * dh];
+                let mut v = vec![0.0f32; n * dh];
+                rng.fill_normal(&mut k, 1.0);
+                rng.fill_normal(&mut v, 1.0);
+                (k, v)
+            })
+            .collect();
+        let jobs: Vec<HeadJob> = kvs.iter().map(|(k, v)| HeadJob { k, v, n }).collect();
+        let mut q = vec![0.0f32; jobs_n * dh];
+        rng.fill_normal(&mut q, 0.2);
+        for threads in [1usize, 4] {
+            let s = bench(3, 15, || {
+                let _ = sparse_attention(&jobs, &q, 1, dh, threads, false);
+            });
+            let gb = (2.0 * (jobs_n * n * dh * 4) as f64) / s.p50 / 1e9;
+            println!(
+                "cpu_attn jobs={jobs_n:>3} n={n:>5} threads={threads}: p50 {:>9.3} ms  ({gb:>5.2} GB/s)",
+                s.p50 * 1e3
+            );
+        }
+    }
+
+    // ---- LSE merge ----
+    let rows = 128;
+    let mut og = vec![0.5f32; rows * dh];
+    let mut lg = vec![0.1f32; rows];
+    let oc = vec![0.25f32; rows * dh];
+    let lc = vec![0.3f32; rows];
+    let s = bench(10, 200, || {
+        merge_states(&mut og, &mut lg, &oc, &lc, dh);
+    });
+    println!("merge_states rows={rows}: p50 {:.1} µs", s.p50 * 1e6);
+
+    // ---- MAW update ----
+    {
+        use hgca::kv::GpuLayerCache;
+        let mut c = GpuLayerCache::new(32, 128, 32, 32, 0.3); // opt-ish layer
+        let n = 1024;
+        let k = vec![0.1f32; 32 * n * 128];
+        let v = vec![0.1f32; 32 * n * 128];
+        let pos: Vec<usize> = (0..n).collect();
+        c.append(&k, &v, &pos);
+        let a = vec![0.001f32; 32 * (1024 + 1)];
+        let s = bench(5, 100, || {
+            c.update_maw(&a, 1025, 1024, 0, 1);
+        });
+        println!("maw_update 32h x 1024: p50 {:.1} µs", s.p50 * 1e6);
+    }
+
+    // ---- PJRT call overhead (artifact exec round trip) ----
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if let Ok(rt) = hgca::runtime::PjrtRuntime::new(&dir) {
+        let rt = Rc::new(rt);
+        let mr = rt.load_model("tiny-small").unwrap();
+        let exec = hgca::runtime::Executor::new(&mr);
+        let tokens = [5i32];
+        let positions = [0i32];
+        let _ = exec.embed(1, 1, &tokens, &positions).unwrap();
+        let s = bench(5, 50, || {
+            let _ = exec.embed(1, 1, &tokens, &positions).unwrap();
+        });
+        println!("pjrt embed call (b1 n1): p50 {:.1} µs", s.p50 * 1e6);
+        let st = mr.stats.borrow();
+        println!(
+            "pjrt split: exec {:.1} µs/call, upload {:.1} µs, download {:.1} µs",
+            st.exec_secs * 1e6 / st.calls as f64,
+            st.upload_secs * 1e6 / st.calls as f64,
+            st.download_secs * 1e6 / st.calls as f64
+        );
+    }
+
+    // ---- end-to-end decode step (tiny, b=1) ----
+    if let Ok(rt) = hgca::runtime::PjrtRuntime::new(&dir) {
+        use hgca::config::HgcaConfig;
+        use hgca::engine::{Engine, Policy};
+        let rt = Rc::new(rt);
+        let mr = rt.load_model("tiny").unwrap();
+        let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        let mut seq = engine.new_sequence(0, &vec![b'a'; 300]);
+        engine.generate(&mut seq, 40).unwrap();
+        let s = hgca::util::stats::summarize(&engine.metrics.tbt[engine.metrics.tbt.len() - 40..]);
+        println!(
+            "decode step e2e (tiny, ctx 300+): p50 {:.2} ms  ({:.1} tok/s)",
+            s.p50 * 1e3,
+            1.0 / s.p50
+        );
+    }
+}

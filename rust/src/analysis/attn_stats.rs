@@ -1,0 +1,163 @@
+//! Attention-pattern analysis over the trained model — regenerates the
+//! paper's motivation figures (Figs. 3–5) from real attention
+//! probabilities captured by the rust oracle forward.
+
+/// probs[h][t] is the softmax row of query t at one layer (len t+1).
+pub type LayerProbs = Vec<Vec<Vec<f32>>>;
+
+/// Fig. 3: cumulative attention mass of the last query inside a
+/// (start-window × recent-window) grid, averaged over heads.
+/// Returns grid[si][ri] ∈ [0, 1].
+pub fn cumulative_heatmap(
+    probs: &LayerProbs,
+    start_windows: &[usize],
+    recent_windows: &[usize],
+) -> Vec<Vec<f32>> {
+    let heads = probs.len();
+    let t_last = probs[0].len() - 1;
+    let row_len = t_last + 1;
+    let mut grid = vec![vec![0.0f32; recent_windows.len()]; start_windows.len()];
+    for (si, &s) in start_windows.iter().enumerate() {
+        for (ri, &r) in recent_windows.iter().enumerate() {
+            let mut total = 0.0f32;
+            for hp in probs.iter() {
+                let row = &hp[t_last];
+                let start_sum: f32 = row[..s.min(row_len)].iter().sum();
+                let recent_from = row_len.saturating_sub(r).max(s.min(row_len));
+                let recent_sum: f32 = row[recent_from..].iter().sum();
+                total += start_sum + recent_sum;
+            }
+            grid[si][ri] = total / heads as f32;
+        }
+    }
+    let _ = heads;
+    grid
+}
+
+/// Fig. 4: fraction of KV entries needed to reach `target` cumulative
+/// attention per head (at the last query of the captured layer).
+pub fn coverage_per_head(probs: &LayerProbs, target: f32) -> Vec<f32> {
+    probs
+        .iter()
+        .map(|hp| {
+            let row = hp.last().unwrap();
+            let mut sorted = row.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut acc = 0.0f32;
+            let mut k = 0usize;
+            for &w in &sorted {
+                acc += w;
+                k += 1;
+                if acc >= target {
+                    break;
+                }
+            }
+            k as f32 / row.len() as f32
+        })
+        .collect()
+}
+
+/// Fig. 5: attention weight by KV position for one head at one decoding
+/// position (query index `t`).
+pub fn positional_weights(probs: &LayerProbs, head: usize, t: usize) -> Vec<f32> {
+    probs[head][t].clone()
+}
+
+/// Entries needed (by position, greedy-by-weight) to reach `target`
+/// cumulative mass — the paper's red-line threshold in Fig. 5.
+pub fn critical_set(row: &[f32], target: f32) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+    let mut acc = 0.0;
+    let mut out = Vec::new();
+    for &i in &idx {
+        if acc >= target {
+            break;
+        }
+        acc += row[i];
+        out.push(i);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Skewness proxy: share of mass held by the top-10% entries, averaged
+/// over heads (used to show entry→exit layer skew growth, Fig. 3's trend).
+pub fn top_decile_mass(probs: &LayerProbs) -> f32 {
+    let mut total = 0.0f32;
+    for hp in probs.iter() {
+        let row = hp.last().unwrap();
+        let mut sorted = row.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let k = (sorted.len() / 10).max(1);
+        total += sorted[..k].iter().sum::<f32>();
+    }
+    total / probs.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// hand-built layer: 2 heads, 4 queries; head 0 peaked on slot 0,
+    /// head 1 uniform.
+    fn demo() -> LayerProbs {
+        let mut h0 = Vec::new();
+        let mut h1 = Vec::new();
+        for t in 0..4usize {
+            let n = t + 1;
+            let mut peaked = vec![0.05 / n as f32; n];
+            peaked[0] += 0.95;
+            let s: f32 = peaked.iter().sum();
+            for p in peaked.iter_mut() {
+                *p /= s;
+            }
+            h0.push(peaked);
+            h1.push(vec![1.0 / n as f32; n]);
+        }
+        vec![h0, h1]
+    }
+
+    #[test]
+    fn heatmap_monotone_in_windows() {
+        let probs = demo();
+        let grid = cumulative_heatmap(&probs, &[0, 1, 2], &[0, 1, 2]);
+        // larger windows capture at least as much mass
+        for si in 0..3 {
+            for ri in 1..3 {
+                assert!(grid[si][ri] >= grid[si][ri - 1] - 1e-6);
+            }
+        }
+        for ri in 0..3 {
+            for si in 1..3 {
+                assert!(grid[si][ri] >= grid[si - 1][ri] - 1e-6);
+            }
+        }
+        // full coverage reaches ~1
+        let full = cumulative_heatmap(&probs, &[4], &[4]);
+        assert!((full[0][0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn coverage_separates_peaked_from_uniform() {
+        let cov = coverage_per_head(&demo(), 0.95);
+        assert!(cov[0] < cov[1], "peaked head needs fewer entries: {cov:?}");
+        assert!((cov[1] - 1.0).abs() < 0.26); // uniform needs ~all
+    }
+
+    #[test]
+    fn critical_set_reaches_target() {
+        let row = vec![0.5, 0.1, 0.05, 0.3, 0.05];
+        let set = critical_set(&row, 0.8);
+        let mass: f32 = set.iter().map(|&i| row[i]).sum();
+        assert!(mass >= 0.8);
+        assert!(set.contains(&0) && set.contains(&3));
+    }
+
+    #[test]
+    fn top_decile_higher_for_peaked() {
+        let peaked = demo();
+        let uniform: LayerProbs = vec![peaked[1].clone(), peaked[1].clone()];
+        assert!(top_decile_mass(&peaked) > top_decile_mass(&uniform));
+    }
+}

@@ -1,0 +1,5 @@
+//! Attention-pattern analysis toolkit (paper §2.3, Figs. 3–5).
+
+pub mod attn_stats;
+
+pub use attn_stats::{coverage_per_head, critical_set, cumulative_heatmap, positional_weights, top_decile_mass, LayerProbs};

@@ -1,0 +1,313 @@
+//! CPU-local sparse attention (paper §3.3).
+//!
+//! Each (batch row, head) attends its own variable-length KV subset — the
+//! contextual cache during decode, the full CPU store during append
+//! re-evaluation. Jobs are packed into ≈`threads` contiguous tasks
+//! (the paper's adjacent-head merging, §3.3: thread count stays near
+//! batch×heads / cores instead of one thread per head), each task runs on
+//! its own std thread, and every job writes to a disjoint slice of a
+//! pre-allocated output buffer (the paper's pinned-buffer offsets).
+//!
+//! Returns partial outputs + log-sum-exp per (row, head, query) for the
+//! LSE merge, and optionally the per-slot attention mass (A_cpu) used by
+//! MAW re-evaluation (Algorithm 1 line 19).
+
+use crate::tensor::ops::{axpy, dot, softmax_lse};
+
+/// One (row, head) unit of work: attention over `n` KV entries stored
+/// contiguously ([n][d_head] row-major).
+#[derive(Debug, Clone, Copy)]
+pub struct HeadJob<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub n: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct CpuAttnOutput {
+    /// [jobs][n_query][d_head]
+    pub o: Vec<f32>,
+    /// [jobs][n_query]; EMPTY (-1e30) where the job had no entries
+    pub lse: Vec<f32>,
+    /// per-job attention mass per KV slot, summed over queries ([n] each);
+    /// only filled when requested
+    pub probs: Option<Vec<Vec<f32>>>,
+    /// number of spawned tasks (diagnostics; ≈ min(threads, jobs))
+    pub tasks: usize,
+}
+
+pub const EMPTY_LSE: f32 = -1e30;
+
+/// q is [jobs][n_query][d_head] flat, aligned with `jobs`.
+pub fn sparse_attention(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    threads: usize,
+    want_probs: bool,
+) -> CpuAttnOutput {
+    sparse_attention_masked(jobs, q, n_query, d_head, threads, want_probs, None)
+}
+
+/// Like [`sparse_attention`] but with an optional per-job count of *valid*
+/// query rows (chunk padding support): rows >= q_valid[job] are skipped --
+/// zero output, EMPTY lse, and no contribution to `probs`.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attention_masked(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    threads: usize,
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+) -> CpuAttnOutput {
+    let nj = jobs.len();
+    assert_eq!(q.len(), nj * n_query * d_head, "q layout mismatch");
+    let mut o = vec![0.0f32; nj * n_query * d_head];
+    let mut lse = vec![EMPTY_LSE; nj * n_query];
+    let mut probs: Vec<Vec<f32>> = if want_probs {
+        jobs.iter().map(|j| vec![0.0; j.n]).collect()
+    } else {
+        Vec::new()
+    };
+
+    let threads = threads.max(1).min(nj.max(1));
+    // contiguous job ranges per task — the "adjacent head packing"
+    let per_task = nj.div_ceil(threads.max(1)).max(1);
+    let mut tasks = 0;
+
+    if nj == 0 {
+        return CpuAttnOutput { o, lse, probs: want_probs.then_some(probs), tasks: 0 };
+    }
+
+    std::thread::scope(|s| {
+        let mut o_rest: &mut [f32] = &mut o;
+        let mut lse_rest: &mut [f32] = &mut lse;
+        let mut probs_rest: &mut [Vec<f32>] = &mut probs;
+        let mut start = 0;
+        while start < nj {
+            let count = per_task.min(nj - start);
+            let (o_task, o_next) = o_rest.split_at_mut(count * n_query * d_head);
+            let (lse_task, lse_next) = lse_rest.split_at_mut(count * n_query);
+            let (p_task, p_next) = if want_probs {
+                probs_rest.split_at_mut(count)
+            } else {
+                (&mut [][..], &mut [][..])
+            };
+            o_rest = o_next;
+            lse_rest = lse_next;
+            probs_rest = p_next;
+            let task_jobs = &jobs[start..start + count];
+            let task_q = &q[start * n_query * d_head..(start + count) * n_query * d_head];
+            let task_valid = q_valid.map(|v| &v[start..start + count]);
+            tasks += 1;
+            s.spawn(move || {
+                run_task(
+                    task_jobs, task_q, n_query, d_head, o_task, lse_task, p_task, want_probs,
+                    task_valid,
+                )
+            });
+            start += count;
+        }
+    });
+
+    CpuAttnOutput {
+        o,
+        lse,
+        probs: want_probs.then_some(probs),
+        tasks,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_task(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    o: &mut [f32],
+    lse: &mut [f32],
+    probs: &mut [Vec<f32>],
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+) {
+    // reused score buffer — zero allocation per job in the steady state
+    let max_n = jobs.iter().map(|j| j.n).max().unwrap_or(0);
+    let mut scores = vec![0.0f32; max_n];
+    for (ji, job) in jobs.iter().enumerate() {
+        if job.n == 0 {
+            continue; // lse stays EMPTY, o stays zero
+        }
+        debug_assert_eq!(job.k.len(), job.n * d_head);
+        let nq_limit = q_valid.map(|v| v[ji].min(n_query)).unwrap_or(n_query);
+        for nq in 0..nq_limit {
+            let qv = &q[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
+            let sc = &mut scores[..job.n];
+            for (t, sv) in sc.iter_mut().enumerate() {
+                *sv = dot(qv, &job.k[t * d_head..(t + 1) * d_head]);
+            }
+            let l = softmax_lse(sc);
+            lse[ji * n_query + nq] = l;
+            let orow = &mut o[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
+            for (t, &w) in sc.iter().enumerate() {
+                if w != 0.0 {
+                    axpy(w, &job.v[t * d_head..(t + 1) * d_head], orow);
+                }
+            }
+            if want_probs {
+                for (t, &w) in sc.iter().enumerate() {
+                    probs[ji][t] += w;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure_all_close, ensure_close};
+    use crate::util::rng::Rng;
+
+    fn naive_one(q: &[f32], k: &[f32], v: &[f32], n: usize, dh: usize) -> (Vec<f32>, f32) {
+        let mut s: Vec<f32> = (0..n).map(|t| dot(q, &k[t * dh..(t + 1) * dh])).collect();
+        let lse = softmax_lse(&mut s);
+        let mut o = vec![0.0; dh];
+        for (t, &w) in s.iter().enumerate() {
+            axpy(w, &v[t * dh..(t + 1) * dh], &mut o);
+        }
+        (o, lse)
+    }
+
+    fn rand_kv(rng: &mut Rng, n: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut k = vec![0.0; n * dh];
+        let mut v = vec![0.0; n * dh];
+        rng.fill_normal(&mut k, 1.0);
+        rng.fill_normal(&mut v, 1.0);
+        (k, v)
+    }
+
+    #[test]
+    fn single_job_matches_naive() {
+        let mut rng = Rng::new(1);
+        let (dh, n) = (8, 13);
+        let (k, v) = rand_kv(&mut rng, n, dh);
+        let mut q = vec![0.0; dh];
+        rng.fill_normal(&mut q, 1.0);
+        let jobs = [HeadJob { k: &k, v: &v, n }];
+        let out = sparse_attention(&jobs, &q, 1, dh, 1, false);
+        let (oe, le) = naive_one(&q, &k, &v, n, dh);
+        for j in 0..dh {
+            assert!((out.o[j] - oe[j]).abs() < 1e-5);
+        }
+        assert!((out.lse[0] - le).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_job_gets_empty_lse() {
+        let dh = 4;
+        let q = vec![1.0; dh];
+        let jobs = [HeadJob { k: &[], v: &[], n: 0 }];
+        let out = sparse_attention(&jobs, &q, 1, dh, 2, false);
+        assert_eq!(out.lse[0], EMPTY_LSE);
+        assert!(out.o.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn threading_does_not_change_results() {
+        let mut rng = Rng::new(2);
+        let dh = 16;
+        let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..9)
+            .map(|i| {
+                let n = 1 + i * 3;
+                let (k, v) = rand_kv(&mut rng, n, dh);
+                (k, v, n)
+            })
+            .collect();
+        let jobs: Vec<HeadJob> = kvs
+            .iter()
+            .map(|(k, v, n)| HeadJob { k, v, n: *n })
+            .collect();
+        let mut q = vec![0.0; jobs.len() * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let a = sparse_attention(&jobs, &q, 1, dh, 1, true);
+        let b = sparse_attention(&jobs, &q, 1, dh, 4, true);
+        let c = sparse_attention(&jobs, &q, 1, dh, 16, true);
+        assert_eq!(a.o, b.o);
+        assert_eq!(a.o, c.o);
+        assert_eq!(a.lse, b.lse);
+        assert_eq!(a.probs, c.probs);
+        assert!(b.tasks <= 4);
+        assert_eq!(c.tasks, 9); // capped at job count
+    }
+
+    #[test]
+    fn probs_sum_to_queries() {
+        let mut rng = Rng::new(3);
+        let (dh, n, nq) = (8, 10, 3);
+        let (k, v) = rand_kv(&mut rng, n, dh);
+        let jobs = [HeadJob { k: &k, v: &v, n }];
+        let mut q = vec![0.0; nq * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let out = sparse_attention(&jobs, &q, nq, dh, 1, true);
+        let total: f32 = out.probs.as_ref().unwrap()[0].iter().sum();
+        assert!((total - nq as f32).abs() < 1e-4);
+    }
+
+    #[test]
+    fn multi_query_matches_per_query() {
+        let mut rng = Rng::new(4);
+        let (dh, n, nq) = (8, 7, 4);
+        let (k, v) = rand_kv(&mut rng, n, dh);
+        let jobs = [HeadJob { k: &k, v: &v, n }];
+        let mut q = vec![0.0; nq * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let out = sparse_attention(&jobs, &q, nq, dh, 1, false);
+        for i in 0..nq {
+            let (oe, le) = naive_one(&q[i * dh..(i + 1) * dh], &k, &v, n, dh);
+            for j in 0..dh {
+                assert!((out.o[i * dh + j] - oe[j]).abs() < 1e-5);
+            }
+            assert!((out.lse[i] - le).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prop_thread_invariance_and_correctness() {
+        check("cpu_attn_threads", 25, |rng: &mut Rng| {
+            let dh = *rng.choice(&[4usize, 8, 32]);
+            let njobs = rng.range(1, 12);
+            let nq = rng.range(1, 4);
+            let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..njobs)
+                .map(|_| {
+                    let n = rng.range(0, 30);
+                    let (k, v) = rand_kv(rng, n, dh);
+                    (k, v, n)
+                })
+                .collect();
+            let jobs: Vec<HeadJob> = kvs
+                .iter()
+                .map(|(k, v, n)| HeadJob { k, v, n: *n })
+                .collect();
+            let mut q = vec![0.0; njobs * nq * dh];
+            rng.fill_normal(&mut q, 1.0);
+            let t1 = sparse_attention(&jobs, &q, nq, dh, 1, false);
+            let tn = sparse_attention(&jobs, &q, nq, dh, rng.range(2, 9), false);
+            ensure_all_close(&t1.o, &tn.o, 1e-6, "o")?;
+            ensure_all_close(&t1.lse, &tn.lse, 1e-6, "lse")?;
+            // spot-check one non-empty job against naive
+            for (ji, (k, v, n)) in kvs.iter().enumerate() {
+                if *n == 0 {
+                    continue;
+                }
+                let (oe, le) = naive_one(&q[ji * nq * dh..ji * nq * dh + dh], k, v, *n, dh);
+                ensure_all_close(&t1.o[ji * nq * dh..ji * nq * dh + dh], &oe, 1e-4, "o_naive")?;
+                ensure_close(t1.lse[ji * nq], le, 1e-4, "lse_naive")?;
+                break;
+            }
+            Ok(())
+        });
+    }
+}

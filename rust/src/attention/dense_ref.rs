@@ -1,0 +1,88 @@
+//! Dense attention reference (rust oracle). Semantics identical to
+//! python/compile/kernels/ref.py::attention_with_lse; used to cross-check
+//! the PJRT artifacts and as the full-attention baseline ("HF full").
+
+use crate::tensor::ops::{axpy, dot, softmax_lse};
+
+/// Attention of one query over `n` KV entries ([n][dh] contiguous) with an
+/// optional additive bias per slot. Returns (o, lse).
+pub fn attend_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d_head: usize,
+    bias: Option<&[f32]>,
+) -> (Vec<f32>, f32) {
+    let mut scores: Vec<f32> = (0..n)
+        .map(|t| dot(q, &k[t * d_head..(t + 1) * d_head]))
+        .collect();
+    if let Some(b) = bias {
+        for (s, &bv) in scores.iter_mut().zip(b.iter()) {
+            *s += bv;
+        }
+    }
+    let lse = softmax_lse(&mut scores);
+    let mut o = vec![0.0; d_head];
+    for (t, &w) in scores.iter().enumerate() {
+        axpy(w, &v[t * d_head..(t + 1) * d_head], &mut o);
+    }
+    (o, lse)
+}
+
+/// Full softmax probabilities of one query (analysis path, Figs. 3–5).
+pub fn attend_probs(q: &[f32], k: &[f32], n: usize, d_head: usize) -> Vec<f32> {
+    let mut scores: Vec<f32> = (0..n)
+        .map(|t| dot(q, &k[t * d_head..(t + 1) * d_head]))
+        .collect();
+    softmax_lse(&mut scores);
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_keys_give_uniform_probs() {
+        let dh = 4;
+        let q = vec![1.0; dh];
+        let k = vec![0.5; 3 * dh];
+        let p = attend_probs(&q, &k, 3, dh);
+        for &w in &p {
+            assert!((w - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bias_shifts_selection() {
+        let dh = 2;
+        let q = vec![0.0; dh]; // all scores 0 without bias
+        let k = vec![0.0; 3 * dh];
+        let mut v = vec![0.0; 3 * dh];
+        v[2 * dh] = 1.0; // entry 2 has v = [1, 0]
+        let bias = [0.0, 0.0, 50.0];
+        let (o, _) = attend_one(&q, &k, &v, 3, dh, Some(&bias));
+        assert!((o[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matches_cpu_sparse_attention() {
+        use crate::attention::cpu_attention::{sparse_attention, HeadJob};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let (dh, n) = (16, 21);
+        let mut k = vec![0.0; n * dh];
+        let mut v = vec![0.0; n * dh];
+        let mut q = vec![0.0; dh];
+        rng.fill_normal(&mut k, 1.0);
+        rng.fill_normal(&mut v, 1.0);
+        rng.fill_normal(&mut q, 1.0);
+        let (o1, l1) = attend_one(&q, &k, &v, n, dh, None);
+        let out = sparse_attention(&[HeadJob { k: &k, v: &v, n }], &q, 1, dh, 2, false);
+        for j in 0..dh {
+            assert!((o1[j] - out.o[j]).abs() < 1e-6);
+        }
+        assert!((l1 - out.lse[0]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,171 @@
+//! Log-sum-exp state merge (Algorithm 2 line 13; §3.3 "Merging states").
+//!
+//! Combines two locally-normalized partial attentions over disjoint KV sets
+//! into the attention over their union:
+//!
+//! ```text
+//! z = e^{lse_c} + e^{lse_g}
+//! O = (e^{lse_c}·O_cpu + e^{lse_g}·O_gpu) / z
+//! ```
+//!
+//! computed with the max-subtraction trick for stability. Mirrors
+//! python/compile/kernels/ref.py::merge_lse and FlashInfer's merge_state.
+
+/// Merge one head's states. Returns the merged lse.
+/// `o_acc` holds O_a on entry and the merged output on exit (the paper's
+/// in-place accumulation into the GPU output buffer).
+pub fn merge_head(o_acc: &mut [f32], lse_a: f32, o_b: &[f32], lse_b: f32) -> f32 {
+    debug_assert_eq!(o_acc.len(), o_b.len());
+    let m = lse_a.max(lse_b);
+    if m == f32::NEG_INFINITY || m < -1e29 {
+        // both sides empty — leave zeros
+        for v in o_acc.iter_mut() {
+            *v = 0.0;
+        }
+        return f32::NEG_INFINITY;
+    }
+    let wa = (lse_a - m).exp();
+    let wb = (lse_b - m).exp();
+    let z = wa + wb;
+    let ia = wa / z;
+    let ib = wb / z;
+    for (a, &b) in o_acc.iter_mut().zip(o_b.iter()) {
+        *a = ia * *a + ib * b;
+    }
+    m + z.ln()
+}
+
+/// Batched merge over [rows][heads]: o_* laid out [row][head][d_head],
+/// lse_* laid out [row][head]. CPU side may mark absent heads with
+/// lse = -inf (e.g. empty contextual cache), which merges as identity.
+pub fn merge_states(
+    o_gpu: &mut [f32],
+    lse_gpu: &mut [f32],
+    o_cpu: &[f32],
+    lse_cpu: &[f32],
+    d_head: usize,
+) {
+    assert_eq!(o_gpu.len(), o_cpu.len());
+    assert_eq!(lse_gpu.len(), lse_cpu.len());
+    assert_eq!(o_gpu.len(), lse_gpu.len() * d_head);
+    for (i, lg) in lse_gpu.iter_mut().enumerate() {
+        let o = &mut o_gpu[i * d_head..(i + 1) * d_head];
+        let oc = &o_cpu[i * d_head..(i + 1) * d_head];
+        *lg = merge_head(o, *lg, oc, lse_cpu[i]);
+    }
+}
+
+/// lse value denoting "no entries on this side".
+pub const EMPTY_LSE: f32 = -1e30;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::softmax_lse;
+    use crate::util::proptest::{check, ensure_all_close, ensure_close};
+    use crate::util::rng::Rng;
+
+    /// Naive attention over explicit scores/values; returns (o, lse).
+    fn naive(scores: &[f32], values: &[Vec<f32>], dh: usize) -> (Vec<f32>, f32) {
+        let mut p = scores.to_vec();
+        let lse = softmax_lse(&mut p);
+        let mut o = vec![0.0; dh];
+        for (w, v) in p.iter().zip(values.iter()) {
+            for j in 0..dh {
+                o[j] += w * v[j];
+            }
+        }
+        (o, lse)
+    }
+
+    #[test]
+    fn merge_equals_union_small() {
+        let dh = 3;
+        let scores = [0.5f32, -1.0, 2.0, 0.3, 1.1];
+        let values: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32, -(i as f32), 0.5]).collect();
+        let (of, lf) = naive(&scores, &values, dh);
+        let (mut oa, la) = naive(&scores[..2], &values[..2], dh);
+        let (ob, lb) = naive(&scores[2..], &values[2..], dh);
+        let lm = merge_head(&mut oa, la, &ob, lb);
+        for j in 0..dh {
+            assert!((oa[j] - of[j]).abs() < 1e-5, "{:?} vs {:?}", oa, of);
+        }
+        assert!((lm - lf).abs() < 1e-5);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut o = vec![1.0, 2.0, 3.0];
+        let l = merge_head(&mut o, 0.7, &[9.0, 9.0, 9.0], EMPTY_LSE);
+        assert_eq!(o, vec![1.0, 2.0, 3.0]);
+        assert!((l - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_both_empty_stays_empty() {
+        let mut o = vec![5.0, 5.0];
+        let l = merge_head(&mut o, EMPTY_LSE, &[7.0, 7.0], EMPTY_LSE);
+        assert_eq!(o, vec![0.0, 0.0]);
+        assert_eq!(l, f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn merge_extreme_lse_stable() {
+        let mut o = vec![1.0];
+        let l = merge_head(&mut o, 100.0, &[2.0], -100.0);
+        assert!(o[0].is_finite() && l.is_finite());
+        assert!((o[0] - 1.0).abs() < 1e-6); // the +100 side dominates fully
+    }
+
+    #[test]
+    fn batched_merge_matches_per_head() {
+        let dh = 2;
+        let mut og = vec![1.0, 0.0, 0.0, 1.0];
+        let mut lg = vec![0.5, 1.5];
+        let oc = vec![0.0, 1.0, 1.0, 0.0];
+        let lc = vec![0.5, EMPTY_LSE];
+        let mut og2 = og.clone();
+        let l0 = merge_head(&mut og2[0..2], 0.5, &oc[0..2], 0.5);
+        merge_states(&mut og, &mut lg, &oc, &lc, dh);
+        assert_eq!(&og[0..2], &og2[0..2]);
+        assert!((lg[0] - l0).abs() < 1e-6);
+        assert_eq!(&og[2..4], &[0.0, 1.0]); // empty cpu side → unchanged
+    }
+
+    #[test]
+    fn prop_merge_equals_union() {
+        check("merge_union", 50, |rng: &mut Rng| {
+            let dh = 1 + rng.range(1, 16);
+            let n = rng.range(2, 40);
+            let split = rng.range(1, n);
+            let scale = 0.1 + rng.f32() * 10.0;
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+            let values: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dh).map(|_| rng.normal()).collect())
+                .collect();
+            let (of, lf) = naive(&scores, &values, dh);
+            let (mut oa, la) = naive(&scores[..split], &values[..split], dh);
+            let (ob, lb) = naive(&scores[split..], &values[split..], dh);
+            let lm = merge_head(&mut oa, la, &ob, lb);
+            ensure_all_close(&oa, &of, 1e-4, "o")?;
+            ensure_close(lm, lf, 1e-4, "lse")
+        });
+    }
+
+    #[test]
+    fn prop_merge_commutative() {
+        check("merge_commutative", 30, |rng: &mut Rng| {
+            let dh = 4;
+            let oa: Vec<f32> = (0..dh).map(|_| rng.normal()).collect();
+            let ob: Vec<f32> = (0..dh).map(|_| rng.normal()).collect();
+            let la = rng.normal() * 5.0;
+            let lb = rng.normal() * 5.0;
+            let mut x = oa.clone();
+            let lx = merge_head(&mut x, la, &ob, lb);
+            let mut y = ob.clone();
+            let ly = merge_head(&mut y, lb, &oa, la);
+            ensure_all_close(&x, &y, 1e-5, "o")?;
+            ensure_close(lx, ly, 1e-5, "lse")
+        });
+    }
+}

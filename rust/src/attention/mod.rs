@@ -1,0 +1,9 @@
+//! Hybrid attention primitives (paper §3.3): CPU-side multithreaded sparse
+//! attention, the log-sum-exp merge, and a dense reference oracle.
+
+pub mod cpu_attention;
+pub mod dense_ref;
+pub mod merge;
+
+pub use cpu_attention::{sparse_attention, CpuAttnOutput, HeadJob};
+pub use merge::{merge_head, merge_states, EMPTY_LSE};

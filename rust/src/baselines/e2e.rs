@@ -1,0 +1,328 @@
+//! End-to-end generation cost model for the large simulated models
+//! (Figs. 12–14): steps a simulated clock through prefill + decode,
+//! tracking KV placement, PCIe traffic, per-system memory overheads and
+//! OOM conditions on the paper's testbed (A6000 48 GB).
+
+use crate::config::ModelConfig;
+use crate::engine::Policy;
+use crate::simulator::{Breakdown, Testbed};
+
+pub const A6000_BYTES: usize = 48 * 1024 * 1024 * 1024;
+pub const HOST_BYTES: usize = 512 * 1024 * 1024 * 1024;
+
+/// Which serving system's composition rules apply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SystemKind {
+    /// FlexGen-style: full attention, KV 100% host-resident, loaded on
+    /// demand (the paper's FlexGen baseline configuration).
+    FlexGen,
+    /// H2O on FlexGen: sparse top-20% attention, selected set on GPU.
+    H2o,
+    /// InfiniGen on FlexGen: predictive prefetch + rehearsal memory.
+    Infinigen,
+    /// HGCA: recent window on GPU, per-head sparse CPU attention.
+    Hgca,
+    /// HF-style full attention with dynamic allocation, no offload.
+    HfFull,
+}
+
+#[derive(Debug, Clone)]
+pub struct E2eConfig {
+    pub system: SystemKind,
+    pub batch: usize,
+    pub prefill: usize,
+    pub gen: usize,
+    /// fraction of model weights resident on GPU (paper: 0.75 for OPT-30B,
+    /// 0.25 for OPT-66B, 1.0 for smaller)
+    pub gpu_weight_frac: f64,
+    /// HGCA GPU window (KV entries)
+    pub window: usize,
+    /// measured mean per-head selectivity for HGCA (from the trained
+    /// model; paper reports ≤ 30% per head at β = 1)
+    pub hgca_selectivity: f64,
+    /// top-k fraction for H2O / InfiniGen (paper: 0.2)
+    pub topk_frac: f64,
+    /// number of GPUs (Figs. 13/14 scale HF/HGCA across devices)
+    pub n_gpus: usize,
+}
+
+impl Default for E2eConfig {
+    fn default() -> Self {
+        E2eConfig {
+            system: SystemKind::Hgca,
+            batch: 1,
+            prefill: 1920,
+            gen: 128,
+            gpu_weight_frac: 1.0,
+            window: 1024,
+            hgca_selectivity: 0.2,
+            topk_frac: 0.2,
+            n_gpus: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct E2eResult {
+    pub total_secs: f64,
+    pub decode_secs: f64,
+    pub prefill_secs: f64,
+    pub breakdown: Breakdown,
+    pub peak_gpu_bytes: usize,
+    pub peak_host_bytes: usize,
+    pub oom: bool,
+    pub tokens_per_sec: f64,
+    /// per-step wall times (token-rate curves, Figs. 13–15)
+    pub step_secs: Vec<f64>,
+}
+
+fn policy_for(system: SystemKind, cfg: &E2eConfig) -> Policy {
+    match system {
+        SystemKind::FlexGen => Policy::FullOffload,
+        SystemKind::H2o => Policy::H2o { frac: cfg.topk_frac as f32 },
+        SystemKind::Infinigen => Policy::Infinigen { frac: cfg.topk_frac as f32 },
+        SystemKind::Hgca => Policy::Hgca { beta: 1.0 },
+        SystemKind::HfFull => Policy::GpuOnly,
+    }
+}
+
+/// Step the simulated clock through an entire generation run.
+pub fn simulate_generation(tb: &Testbed, model: &ModelConfig, cfg: &E2eConfig) -> E2eResult {
+    let policy = policy_for(cfg.system, cfg);
+    let kv_tok = model.kv_bytes_per_token() * cfg.batch; // all layers
+    let weight_gpu = (model.weight_bytes() as f64 * cfg.gpu_weight_frac) as usize;
+    let gpu_budget = A6000_BYTES * cfg.n_gpus;
+
+    let mut breakdown = Breakdown::new();
+    let mut peak_gpu = weight_gpu;
+    let mut peak_host = model.weight_bytes() - weight_gpu;
+    let mut oom = false;
+    let mut step_secs = Vec::with_capacity(cfg.gen);
+
+    // ---- prefill: compute-bound GEMM over the prompt + KV placement ----
+    let prefill_secs = tb.prefill_weights(model, cfg.batch, cfg.prefill) / cfg.n_gpus as f64;
+    breakdown.add("prefill", prefill_secs);
+    // where do prompt KVs land?
+    let (mut n_gpu_kv, mut n_cpu_kv) = match cfg.system {
+        // paper setup: FlexGen-family places 100% of KV in host memory
+        SystemKind::FlexGen | SystemKind::Infinigen => (0usize, cfg.prefill),
+        SystemKind::H2o => (((cfg.prefill as f64) * cfg.topk_frac) as usize, 0),
+        SystemKind::Hgca => {
+            let on_gpu = cfg.prefill.min(cfg.window);
+            (on_gpu, cfg.prefill - on_gpu)
+        }
+        SystemKind::HfFull => (cfg.prefill, 0),
+    };
+    // prompt KV must cross PCIe when host-resident
+    if n_cpu_kv > 0 {
+        breakdown.add(
+            "pcie_kv_offload",
+            tb.link.transfer_time((n_cpu_kv * kv_tok) as f64),
+        );
+    }
+
+    // ---- decode loop ----
+    let mut decode_secs = 0.0;
+    for _t in 0..cfg.gen {
+        // attention: use per-layer sizes (uniform across layers here) and
+        // multiply by layer count — each layer attends its own KV
+        let n_sel = match cfg.system {
+            SystemKind::Hgca => (n_cpu_kv as f64 * cfg.hgca_selectivity) as usize,
+            SystemKind::H2o => 0, // selected set already inside n_gpu_kv
+            SystemKind::Infinigen | SystemKind::FlexGen => {
+                (n_cpu_kv as f64 * cfg.topk_frac) as usize
+            }
+            SystemKind::HfFull => 0,
+        };
+        let (attn_wall, attn_bd) = policy.sim_attention(
+            tb,
+            model,
+            cfg.batch,
+            1,
+            n_gpu_kv,
+            n_cpu_kv,
+            n_sel,
+        );
+        let weights = tb.decode_step_weights(model, cfg.batch, cfg.gpu_weight_frac);
+        let step = attn_wall * model.n_layers as f64 / cfg.n_gpus as f64
+            + weights.total() / cfg.n_gpus as f64;
+        decode_secs += step;
+        step_secs.push(step);
+        for (l, s) in &attn_bd.segments {
+            breakdown.add(l, s * model.n_layers as f64 / cfg.n_gpus as f64);
+        }
+        breakdown.add("weights", weights.total() / cfg.n_gpus as f64);
+
+        // KV growth per new token
+        match cfg.system {
+            SystemKind::HfFull => n_gpu_kv += 1,
+            SystemKind::Hgca => {
+                if n_gpu_kv < cfg.window {
+                    n_gpu_kv += 1;
+                } else {
+                    n_cpu_kv += 1; // block eviction amortized per-token
+                }
+            }
+            SystemKind::H2o => {
+                n_gpu_kv = (((cfg.prefill + _t) as f64) * cfg.topk_frac) as usize;
+            }
+            SystemKind::FlexGen | SystemKind::Infinigen => n_cpu_kv += 1,
+        }
+
+        // memory accounting + OOM checks (per step, peak-tracked)
+        // HF's dynamic allocation fragments (paper §5.2: HGCA's
+        // pre-allocated pool avoids this); charge a fragmentation factor.
+        let frag = if cfg.system == SystemKind::HfFull { 5 } else { 4 };
+        let mut gpu_mem = weight_gpu + n_gpu_kv * kv_tok * frag / 4;
+        let mut host_mem = (model.weight_bytes() - weight_gpu) + n_cpu_kv * kv_tok;
+        if cfg.system == SystemKind::Infinigen {
+            // rehearsal buffers live in *GPU* memory per in-flight entry —
+            // the OOM driver the paper observes
+            let per_entry = policy.overhead_bytes_per_entry(model)
+                * model.n_layers
+                * model.n_heads
+                * cfg.batch;
+            gpu_mem += (n_cpu_kv + n_gpu_kv) * per_entry;
+            host_mem += (n_cpu_kv + n_gpu_kv) * per_entry;
+        }
+        if cfg.system == SystemKind::FlexGen {
+            // staging buffer for the KV reload of the largest layer batch
+            gpu_mem += n_cpu_kv * kv_tok / model.n_layers;
+        }
+        peak_gpu = peak_gpu.max(gpu_mem);
+        peak_host = peak_host.max(host_mem);
+        if gpu_mem > gpu_budget || host_mem > HOST_BYTES {
+            oom = true;
+            break;
+        }
+    }
+
+    let total = prefill_secs + decode_secs;
+    E2eResult {
+        total_secs: total,
+        decode_secs,
+        prefill_secs,
+        breakdown: breakdown.collapsed(),
+        peak_gpu_bytes: peak_gpu,
+        peak_host_bytes: peak_host,
+        oom,
+        tokens_per_sec: if oom || decode_secs == 0.0 {
+            0.0
+        } else {
+            (cfg.gen * cfg.batch) as f64 / decode_secs
+        },
+        step_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::simulated;
+
+    fn run(system: SystemKind, model: &str, batch: usize) -> E2eResult {
+        let tb = Testbed::paper();
+        let m = simulated(model).unwrap();
+        let frac = match model {
+            "opt-30b" => 0.75,
+            "opt-66b" => 0.25,
+            _ => 1.0,
+        };
+        simulate_generation(
+            &tb,
+            &m,
+            &E2eConfig {
+                system,
+                batch,
+                gpu_weight_frac: frac,
+                // paper fig 12: HGCA keeps 5% of KV on GPU
+                window: ((1920 + 128) / 20).max(64),
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn fig12_shape_hgca_beats_flexgen_and_h2o() {
+        for model in ["opt-6.7b", "opt-30b"] {
+            let hgca = run(SystemKind::Hgca, model, 4);
+            let flexgen = run(SystemKind::FlexGen, model, 4);
+            let h2o = run(SystemKind::H2o, model, 4);
+            assert!(!hgca.oom);
+            assert!(
+                hgca.total_secs < flexgen.total_secs,
+                "{model}: hgca {} vs flexgen {}",
+                hgca.total_secs,
+                flexgen.total_secs
+            );
+            assert!(
+                hgca.total_secs < h2o.total_secs * 1.6,
+                "{model}: hgca should be competitive with h2o (sparser but GPU-bound)"
+            );
+        }
+    }
+
+    #[test]
+    fn fig12_infinigen_memory_pressure() {
+        // InfiniGen's rehearsal overhead must dwarf HGCA's footprint and
+        // OOM first as batch grows (paper's observation on OPT-66B)
+        let inf = run(SystemKind::Infinigen, "opt-66b", 8);
+        let hgca = run(SystemKind::Hgca, "opt-66b", 8);
+        assert!(
+            inf.peak_gpu_bytes > hgca.peak_gpu_bytes,
+            "inf {} vs hgca {}",
+            inf.peak_gpu_bytes,
+            hgca.peak_gpu_bytes
+        );
+        assert!(inf.oom, "infinigen should OOM on opt-66b at batch 8");
+        assert!(!hgca.oom, "hgca must survive (peak {})", hgca.peak_gpu_bytes);
+    }
+
+    #[test]
+    fn fig13_hf_ooms_on_long_generation() {
+        // GPT-NeoX-12B on 2 GPUs: HF (no offload) dies as KV grows; HGCA
+        // scales to the full 4096 tokens on a single GPU
+        let tb = Testbed::paper();
+        let m = simulated("gpt-neox-12b").unwrap();
+        let hf = simulate_generation(
+            &tb,
+            &m,
+            &E2eConfig {
+                system: SystemKind::HfFull,
+                batch: 32,
+                prefill: 128,
+                gen: 4096,
+                n_gpus: 2,
+                ..Default::default()
+            },
+        );
+        let hgca = simulate_generation(
+            &tb,
+            &m,
+            &E2eConfig {
+                system: SystemKind::Hgca,
+                batch: 32,
+                prefill: 128,
+                gen: 4096,
+                window: 256,
+                n_gpus: 1,
+                ..Default::default()
+            },
+        );
+        assert!(hf.oom, "HF without offload must OOM");
+        assert!(!hgca.oom, "HGCA must finish on one GPU");
+    }
+
+    #[test]
+    fn batch_scaling_increases_throughput() {
+        let t1 = run(SystemKind::Hgca, "opt-6.7b", 1);
+        let t8 = run(SystemKind::Hgca, "opt-6.7b", 8);
+        assert!(t8.tokens_per_sec > t1.tokens_per_sec * 2.0);
+    }
+
+    #[test]
+    fn step_times_grow_with_context() {
+        let r = run(SystemKind::Hgca, "opt-6.7b", 1);
+        assert!(r.step_secs.last().unwrap() >= r.step_secs.first().unwrap());
+    }
+}

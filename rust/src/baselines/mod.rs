@@ -1,0 +1,10 @@
+//! End-to-end baseline system models for the paper's comparisons
+//! (Figs. 12–14). Accuracy-side baselines run through the real engine via
+//! [`crate::engine::Policy`]; this module adds the *system-level* cost
+//! composition — weight placement, per-step KV movement, OOM detection —
+//! for the large simulated models (OPT-30B/66B etc.) that cannot
+//! materialize on this machine.
+
+pub mod e2e;
+
+pub use e2e::{simulate_generation, E2eConfig, E2eResult, SystemKind};

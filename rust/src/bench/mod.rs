@@ -1,0 +1,71 @@
+//! Mini benchmark harness (criterion is not in the vendored registry):
+//! warmup + timed iterations + summary, and a row-printer for the
+//! paper-figure tables every bench target emits.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Time `f` for `iters` iterations after `warmup` runs; returns per-call
+/// seconds summary.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    pub widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Table {
+        let t = Table { widths: widths.to_vec() };
+        t.row(headers);
+        let total: usize = widths.iter().sum::<usize>() + widths.len() * 2;
+        println!("{}", "-".repeat(total));
+        t
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let mut line = String::new();
+        for (c, w) in cells.iter().zip(self.widths.iter()) {
+            line.push_str(&format!("{:>w$}  ", c, w = w));
+        }
+        println!("{}", line.trim_end());
+    }
+}
+
+/// Quick-mode switch: benches print full sweeps only with HGCA_BENCH_FULL=1
+/// (CI and `cargo bench` default to the fast subset).
+pub fn full_mode() -> bool {
+    std::env::var("HGCA_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let s = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn full_mode_reads_env() {
+        // just exercise the call; value depends on environment
+        let _ = full_mode();
+    }
+}

@@ -1,0 +1,7 @@
+//! User-facing configuration: model architectures + HGCA runtime knobs.
+
+pub mod model;
+pub mod runtime;
+
+pub use model::ModelConfig;
+pub use runtime::HgcaConfig;

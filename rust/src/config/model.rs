@@ -1,0 +1,202 @@
+//! Model architecture configs.
+//!
+//! Two families:
+//! * **trained** — the byte-level demo models exported by `make artifacts`
+//!   (`tiny`, `tiny-small`, `tiny-large`); real weights + real numerics.
+//! * **simulated** — config-accurate shapes of the paper's evaluation models
+//!   (OPT-6.7B…66B, GPT-NeoX-12B, LLaMA-2-7B/13B, LLaMA/Vicuna-33B) used by
+//!   the performance benches through the device cost model; weights never
+//!   materialize.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub max_pos: usize,
+    /// fp16 bytes/param for simulated models, fp32 for trained ones.
+    pub bytes_per_param: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Per-token, per-layer KV bytes (K + V, all heads).
+    pub fn kv_bytes_per_token_layer(&self) -> usize {
+        2 * self.d_model * self.bytes_per_param
+    }
+
+    /// Per-token KV bytes across all layers.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * self.kv_bytes_per_token_layer()
+    }
+
+    pub fn param_count(&self) -> usize {
+        let (d, f, l) = (self.d_model, self.d_ffn, self.n_layers);
+        let per_layer = 4 * d * d + 4 * d + 2 * d * f + f + d + 4 * d;
+        self.vocab * d + self.max_pos * d + l * per_layer + 2 * d
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.param_count() * self.bytes_per_param
+    }
+
+    /// Parse the python-exported `<name>_config.json`.
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            vocab: j.req_usize("vocab")?,
+            n_layers: j.req_usize("n_layers")?,
+            d_model: j.req_usize("d_model")?,
+            n_heads: j.req_usize("n_heads")?,
+            d_ffn: j.req_usize("d_ffn")?,
+            max_pos: j.req_usize("max_pos")?,
+            bytes_per_param: 4,
+        })
+    }
+}
+
+fn m(name: &str, n_layers: usize, d_model: usize, n_heads: usize, max_pos: usize) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        vocab: 50272,
+        n_layers,
+        d_model,
+        n_heads,
+        d_ffn: 4 * d_model,
+        max_pos,
+        bytes_per_param: 2, // fp16 serving
+    }
+}
+
+/// Simulated model presets — layer/head/dim taken from the published configs.
+/// The paper's micro-bench (Fig. 10) notes all OPT models share d_head = 128.
+pub fn simulated(name: &str) -> Option<ModelConfig> {
+    Some(match name {
+        "opt-6.7b" => m("opt-6.7b", 32, 4096, 32, 2048),
+        "opt-13b" => m("opt-13b", 40, 5120, 40, 2048),
+        "opt-30b" => m("opt-30b", 48, 7168, 56, 2048),
+        "opt-66b" => m("opt-66b", 64, 9216, 72, 2048),
+        "gpt-neox-12b" => {
+            let mut c = m("gpt-neox-12b", 36, 5120, 40, 2048);
+            c.vocab = 50432;
+            c
+        }
+        "llama-2-7b" => {
+            let mut c = m("llama-2-7b", 32, 4096, 32, 4096);
+            c.vocab = 32000;
+            c.d_ffn = 11008;
+            c
+        }
+        "llama-2-13b" => {
+            let mut c = m("llama-2-13b", 40, 5120, 40, 4096);
+            c.vocab = 32000;
+            c.d_ffn = 13824;
+            c
+        }
+        "llama-33b" | "vicuna-33b" => {
+            let mut c = m("llama-33b", 60, 6656, 52, 2048);
+            c.vocab = 32000;
+            c.d_ffn = 17920;
+            c
+        }
+        _ => return None,
+    })
+}
+
+/// Built-in copies of the trained configs (authoritative copy is the
+/// exported JSON; these are used when artifacts are absent, e.g. unit tests).
+pub fn trained(name: &str) -> Option<ModelConfig> {
+    let mk = |name: &str, n_layers, d_model, n_heads, d_ffn| ModelConfig {
+        name: name.into(),
+        vocab: 256,
+        n_layers,
+        d_model,
+        n_heads,
+        d_ffn,
+        max_pos: 20480,
+        bytes_per_param: 4,
+    };
+    Some(match name {
+        "tiny" => mk("tiny", 4, 128, 4, 512),
+        "tiny-small" => mk("tiny-small", 2, 64, 2, 256),
+        "tiny-large" => mk("tiny-large", 6, 192, 6, 768),
+        _ => return None,
+    })
+}
+
+pub fn lookup(name: &str) -> Option<ModelConfig> {
+    trained(name).or_else(|| simulated(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt_presets_have_paper_head_dim() {
+        for name in ["opt-6.7b", "opt-13b", "opt-30b", "opt-66b"] {
+            let c = simulated(name).unwrap();
+            assert_eq!(c.d_head(), 128, "{name}");
+        }
+    }
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // within 20% of the nameplate size (simulated models fp16)
+        let cases = [("opt-6.7b", 6.7e9), ("opt-13b", 13e9), ("opt-30b", 30e9), ("opt-66b", 66e9)];
+        for (name, want) in cases {
+            let c = simulated(name).unwrap();
+            let got = c.param_count() as f64;
+            assert!(
+                (got / want - 1.0).abs() < 0.2,
+                "{name}: {got:.3e} vs {want:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn kv_bytes_formula() {
+        let c = simulated("opt-6.7b").unwrap();
+        // 2 (K+V) * 4096 * 2 bytes = 16 KiB per token per layer
+        assert_eq!(c.kv_bytes_per_token_layer(), 16384);
+        assert_eq!(c.kv_bytes_per_token(), 16384 * 32);
+    }
+
+    #[test]
+    fn trained_matches_python_configs() {
+        let t = trained("tiny").unwrap();
+        assert_eq!((t.n_layers, t.d_model, t.n_heads, t.d_ffn), (4, 128, 4, 512));
+        assert_eq!(t.d_head(), 32);
+        let s = trained("tiny-small").unwrap();
+        assert_eq!((s.n_layers, s.d_model), (2, 64));
+    }
+
+    #[test]
+    fn lookup_both_families() {
+        assert!(lookup("tiny").is_some());
+        assert!(lookup("opt-66b").is_some());
+        assert!(lookup("nope").is_none());
+    }
+
+    #[test]
+    fn from_json_parses_exported_config() {
+        let j = Json::parse(
+            r#"{"name":"tiny","vocab":256,"n_layers":4,"d_model":128,
+                "n_heads":4,"d_ffn":512,"max_pos":20480,"d_head":32}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, trained("tiny").unwrap());
+    }
+}

@@ -1,0 +1,109 @@
+//! HGCA runtime configuration (Algorithm 1's tunables + engine knobs).
+
+/// Everything the KV manager + hybrid attention need. Defaults follow the
+/// paper's evaluation settings (β = 1, MAW α = 0.3, block-granular eviction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HgcaConfig {
+    /// KV entries per eviction block (Algorithm 1: blk_size).
+    pub blk_size: usize,
+    /// Blocks in the per-layer GPU circular buffer (blk_num);
+    /// window W = blk_num * blk_size.
+    pub blk_num: usize,
+    /// Moving-average factor for attention-weight tracking (α, line 8).
+    pub alpha: f32,
+    /// Sparsification threshold factor (β, §3.2.2). Entry kept iff
+    /// maw > β / window_len.
+    pub beta: f32,
+    /// CPU threads for sparse attention (heads get packed, §3.3).
+    pub cpu_threads: usize,
+    /// Prefill/append chunk length (must match a compiled artifact).
+    pub chunk: usize,
+    /// Max batch rows (must match a compiled artifact batch).
+    pub max_batch: usize,
+    /// Disable the CPU side entirely (GPU-only full attention; "GPU KV
+    /// ratio 1" configuration in Figs. 13/14).
+    pub gpu_only: bool,
+}
+
+impl Default for HgcaConfig {
+    fn default() -> Self {
+        HgcaConfig {
+            blk_size: 32,
+            blk_num: 8,
+            alpha: 0.3,
+            beta: 1.0,
+            // oversubscribing threads costs context switches (§3.3); match
+            // the cores we actually have
+            cpu_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            chunk: 64,
+            max_batch: 4,
+            gpu_only: false,
+        }
+    }
+}
+
+impl HgcaConfig {
+    /// GPU window length W.
+    pub fn window(&self) -> usize {
+        self.blk_size * self.blk_num
+    }
+
+    pub fn with_window(mut self, window: usize) -> Self {
+        assert_eq!(window % self.blk_size, 0, "window must be block-aligned");
+        self.blk_num = window / self.blk_size;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.blk_size > 0, "blk_size must be positive");
+        anyhow::ensure!(self.blk_num > 0, "blk_num must be positive");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.alpha),
+            "alpha must be in [0,1]"
+        );
+        anyhow::ensure!(self.beta >= 0.0, "beta must be non-negative");
+        anyhow::ensure!(self.cpu_threads > 0, "cpu_threads must be positive");
+        anyhow::ensure!(self.chunk > 0 && self.max_batch > 0, "chunk/batch positive");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_window() {
+        let c = HgcaConfig::default();
+        assert_eq!(c.window(), 256);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn with_window_adjusts_blocks() {
+        let c = HgcaConfig::default().with_window(1024);
+        assert_eq!(c.blk_num, 32);
+        assert_eq!(c.window(), 1024);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unaligned_window_panics() {
+        HgcaConfig::default().with_window(100);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = HgcaConfig::default();
+        c.alpha = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = HgcaConfig::default();
+        c.blk_size = 0;
+        assert!(c.validate().is_err());
+        let mut c = HgcaConfig::default();
+        c.beta = -0.1;
+        assert!(c.validate().is_err());
+    }
+}

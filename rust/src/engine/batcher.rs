@@ -1,0 +1,122 @@
+//! Continuous batcher: admits queued requests into free batch rows each
+//! step, retires finished sequences (vLLM-style iteration-level
+//! scheduling, shaped to the fixed-batch artifacts).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::engine::{Engine, Sequence};
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub text: Vec<u8>,
+    pub prompt_len: usize,
+    pub decode_steps: usize,
+}
+
+struct Active {
+    seq: Sequence,
+    target: usize,
+    generated: usize,
+}
+
+/// Iteration-level scheduler over a fixed-batch engine.
+pub struct Batcher {
+    pub batch: usize,
+    queue: VecDeque<Request>,
+    active: Vec<Active>,
+    done: Vec<Completion>,
+    next_admit: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize) -> Batcher {
+        Batcher {
+            batch,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            next_admit: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    /// Run one scheduling iteration: admit + prefill newcomers (prefill is
+    /// per-sequence, batch=1 artifacts), then one batched decode step over
+    /// all active rows. Returns newly finished completions.
+    pub fn tick(&mut self, engine: &mut Engine<'_>) -> Result<Vec<Completion>> {
+        // admit
+        while self.active.len() < self.batch {
+            let Some(req) = self.queue.pop_front() else { break };
+            let mut seq = engine.new_sequence(req.id, &req.prompt);
+            let logits = engine.prefill(&mut seq)?;
+            // first sampled token comes from the prefill logits
+            let mut generated = 0;
+            if !logits.is_empty() && req.max_new_tokens > 0 {
+                let t = engine.sampler.sample(&logits, &mut engine.rng);
+                seq.tokens.push(t);
+                generated = 1;
+            }
+            self.active.push(Active {
+                seq,
+                target: req.max_new_tokens,
+                generated,
+            });
+            self.next_admit += 1;
+        }
+        if self.active.is_empty() {
+            return Ok(Vec::new());
+        }
+        // batched decode over the active rows
+        {
+            let mut refs: Vec<&mut Sequence> = self.active.iter_mut().map(|a| &mut a.seq).collect();
+            engine.decode_step(&mut refs, self.batch, None)?;
+        }
+        for a in self.active.iter_mut() {
+            a.generated += 1;
+        }
+        // retire finished
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].generated >= self.active[i].target {
+                let a = self.active.swap_remove(i);
+                let prompt_len = a.seq.tokens.len() - a.generated;
+                finished.push(Completion {
+                    id: a.seq.id,
+                    text: a.seq.tokens[prompt_len..].to_vec(),
+                    prompt_len,
+                    decode_steps: a.generated,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        self.done.extend(finished.clone());
+        Ok(finished)
+    }
+
+    /// Drive ticks until every submitted request completes.
+    pub fn run_to_completion(&mut self, engine: &mut Engine<'_>) -> Result<Vec<Completion>> {
+        while self.pending() > 0 {
+            self.tick(engine)?;
+        }
+        Ok(std::mem::take(&mut self.done))
+    }
+}

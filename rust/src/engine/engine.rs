@@ -1,0 +1,667 @@
+//! The HGCA inference engine: per-layer hybrid attention (Algorithm 2),
+//! chunked prefill/append, batched decode, teacher-forced evaluation.
+//!
+//! Real numerics flow through the PJRT artifacts ("GPU") + the rust CPU
+//! sparse attention; simulated time is charged per the active policy on
+//! the paper's testbed model (DESIGN.md §1 — two timing domains).
+
+use anyhow::{bail, Result};
+
+use crate::attention::{merge_states, HeadJob, EMPTY_LSE};
+use crate::config::{HgcaConfig, ModelConfig};
+use crate::kv::KvManager;
+use crate::metrics::{Metrics, Timer};
+use crate::model::Sampler;
+use crate::runtime::{Executor, ModelRuntime};
+use crate::simulator::Testbed;
+use crate::util::rng::Rng;
+
+use super::strategy::Policy;
+
+/// One in-flight sequence.
+pub struct Sequence {
+    pub id: u64,
+    pub tokens: Vec<u8>,
+    pub kv: KvManager,
+    /// tokens already absorbed into the KV cache
+    pub processed: usize,
+}
+
+impl Sequence {
+    pub fn new(id: u64, prompt: &[u8], model: &ModelConfig, cfg: &HgcaConfig) -> Sequence {
+        Sequence {
+            id,
+            tokens: prompt.to_vec(),
+            kv: KvManager::new(model, cfg),
+            processed: 0,
+        }
+    }
+
+    pub fn total_kv_entries(&self) -> usize {
+        self.kv.seq_len
+    }
+}
+
+pub struct Engine<'m> {
+    pub mr: &'m ModelRuntime,
+    pub cfg: HgcaConfig,
+    pub policy: Policy,
+    pub testbed: Testbed,
+    pub sampler: Sampler,
+    pub metrics: Metrics,
+    pub rng: Rng,
+    /// scratch: batch window staging buffers, reused across steps
+    k_win: Vec<f32>,
+    v_win: Vec<f32>,
+}
+
+impl<'m> Engine<'m> {
+    pub fn new(mr: &'m ModelRuntime, cfg: HgcaConfig, policy: Policy) -> Engine<'m> {
+        Engine {
+            mr,
+            cfg,
+            policy,
+            testbed: Testbed::paper(),
+            sampler: Sampler::Greedy,
+            metrics: Metrics::new(),
+            rng: Rng::new(0x48474341),
+            k_win: Vec::new(),
+            v_win: Vec::new(),
+        }
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        &self.mr.cfg
+    }
+
+    /// Smallest compiled attention window that fits the logical window.
+    fn artifact_window(&self) -> Result<usize> {
+        let lw = self.cfg.window();
+        let windows = self.mr.rt.manifest.windows_for(&self.mr.cfg.name);
+        windows
+            .iter()
+            .copied()
+            .find(|&w| w >= lw)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no compiled attention window ≥ {lw} for model {} (compiled: {windows:?})",
+                    self.mr.cfg.name
+                )
+            })
+    }
+
+    pub fn new_sequence(&self, id: u64, prompt: &[u8]) -> Sequence {
+        Sequence::new(id, prompt, &self.mr.cfg, &self.cfg)
+    }
+
+    // ------------------------------------------------------------------
+    // core step: process `n` already-known tokens per active sequence
+    // (decode: n = 1 new token; prefill chunk: n = cfg.chunk) and return
+    // the logits of the last position per row.
+    // ------------------------------------------------------------------
+    fn step(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        batch: usize,
+        n: usize,
+        need_logits: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        let valid: Vec<usize> = seqs.iter().map(|_| n).collect();
+        self.step_masked(seqs, batch, n, &valid, need_logits)
+    }
+
+    /// `step` with per-row valid token counts: rows may carry fewer than
+    /// `n` real tokens (chunk padding); padded query rows are inert in the
+    /// artifact (n_valid mask) and never appended to the caches.
+    fn step_masked(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        batch: usize,
+        n: usize,
+        valid: &[usize],
+        need_logits: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        let model = self.mr.cfg.clone();
+        let (h_n, dh, d) = (model.n_heads, model.d_head(), model.d_model);
+        // logical window (eviction capacity) vs compiled artifact window:
+        // the artifact buffer may be larger; win_len masks the unused tail.
+        let lw = self.cfg.window();
+        let w = self.artifact_window()?;
+        let nactive = seqs.len();
+        assert!(nactive <= batch);
+        let is_append = n > 1;
+        let wall = Timer::start();
+        let mut sim_secs = 0.0f64;
+
+        // ---- token + position staging (padded rows repeat pos 0/token 0) ----
+        let mut tokens = vec![0i32; batch * n];
+        let mut positions = vec![0i32; batch * n];
+        for (b, seq) in seqs.iter().enumerate() {
+            for i in 0..valid[b] {
+                let p = seq.processed + i;
+                tokens[b * n + i] = seq.tokens[p] as i32;
+                positions[b * n + i] = p as i32;
+            }
+        }
+
+        let exec = Executor::new(self.mr);
+        let mut hidden = exec.embed(batch, n, &tokens, &positions)?;
+
+        // ---- per-layer hybrid attention ----
+        let s_total = w + n;
+        self.k_win.resize(batch * h_n * w * dh, 0.0);
+        self.v_win.resize(batch * h_n * w * dh, 0.0);
+        for li in 0..model.n_layers {
+            // eviction (Algorithm 1 lines 10–14) + window staging
+            let mut win_len = vec![0i32; batch];
+            let mut prior_len = vec![0usize; batch];
+            for (b, seq) in seqs.iter_mut().enumerate() {
+                if matches!(self.policy, Policy::GpuOnly) {
+                    if seq.kv.layers[li].gpu.blocks_to_evict(valid[b]) > 0 {
+                        bail!(
+                            "OOM: sequence {} exceeds GPU KV window ({} entries) under gpu-only \
+                             policy",
+                            seq.id,
+                            self.cfg.window()
+                        );
+                    }
+                } else {
+                    // a chunk larger than the logical window sends its
+                    // oldest (v - lw) entries straight to the CPU store
+                    seq.kv.make_room(li, valid[b].min(lw));
+                }
+                let gpu = &seq.kv.layers[li].gpu;
+                let len = gpu.len;
+                prior_len[b] = len;
+                win_len[b] = len as i32;
+                // per-head strided copy: cache rows are lw-wide, the
+                // artifact buffer is w-wide (w ≥ lw; tail is masked)
+                let row = b * h_n * w * dh;
+                for h in 0..h_n {
+                    let src = h * lw * dh;
+                    let dst = row + h * w * dh;
+                    self.k_win[dst..dst + lw * dh].copy_from_slice(&gpu.k[src..src + lw * dh]);
+                    self.v_win[dst..dst + lw * dh].copy_from_slice(&gpu.v[src..src + lw * dh]);
+                }
+            }
+
+            let mut n_valid = vec![0i32; batch];
+            for (b, &v) in valid.iter().enumerate() {
+                n_valid[b] = v as i32;
+            }
+            let out = exec.attn_step(
+                li, batch, w, n, &hidden, &self.k_win, &self.v_win, &win_len, &n_valid,
+            )?;
+
+            // append new KV + MAW update per row; chunk entries beyond the
+            // logical window overflow into the CPU store — but only AFTER
+            // this step's CPU attention (they were already attended inside
+            // the artifact as causal chunk slots; adding them first would
+            // double-count them in the LSE merge).
+            let mut deferred: Vec<(usize, crate::kv::KvBlock)> = Vec::new();
+            for (b, seq) in seqs.iter_mut().enumerate() {
+                let v_cnt = valid[b];
+                if v_cnt == 0 {
+                    continue;
+                }
+                let overflow = v_cnt.saturating_sub(lw);
+                let row = b * h_n * n * dh;
+                let k_new = &out.k_new[row..row + h_n * n * dh];
+                let v_new = &out.v_new[row..row + h_n * n * dh];
+                let arow = &out.a_sum[b * h_n * s_total..(b + 1) * h_n * s_total];
+                if overflow > 0 {
+                    // package the oldest `overflow` entries as an evicted
+                    // block, with their first-observed attention mass as MAW
+                    let mut blk = crate::kv::KvBlock::new(h_n, dh, overflow);
+                    for h in 0..h_n {
+                        let src = (h * n) * dh;
+                        blk.k[h * overflow * dh..(h + 1) * overflow * dh]
+                            .copy_from_slice(&k_new[src..src + overflow * dh]);
+                        blk.v[h * overflow * dh..(h + 1) * overflow * dh]
+                            .copy_from_slice(&v_new[src..src + overflow * dh]);
+                        for t in 0..overflow {
+                            blk.maw[h * overflow + t] =
+                                arow[h * s_total + (s_total - n) + t] / v_cnt as f32;
+                        }
+                    }
+                    for (t, p) in blk.pos.iter_mut().enumerate() {
+                        *p = seq.processed + t;
+                    }
+                    deferred.push((b, blk));
+                    // append the surviving tail [overflow..v_cnt) per head
+                    let keep = v_cnt - overflow;
+                    let mut kk = vec![0.0f32; h_n * keep * dh];
+                    let mut vv = vec![0.0f32; h_n * keep * dh];
+                    for h in 0..h_n {
+                        let src = (h * n + overflow) * dh;
+                        kk[h * keep * dh..(h + 1) * keep * dh]
+                            .copy_from_slice(&k_new[src..src + keep * dh]);
+                        vv[h * keep * dh..(h + 1) * keep * dh]
+                            .copy_from_slice(&v_new[src..src + keep * dh]);
+                    }
+                    let pos: Vec<usize> =
+                        (seq.processed + overflow..seq.processed + v_cnt).collect();
+                    seq.kv.append(li, &kk, &vv, &pos);
+                    // compact a_sum: window prefix + the kept new slots
+                    let compact = compact_asum(arow, h_n, s_total, prior_len[b], n, overflow, keep);
+                    seq.kv.layers[li].gpu.update_maw(
+                        &compact,
+                        prior_len[b] + keep,
+                        prior_len[b],
+                        keep,
+                        v_cnt,
+                    );
+                } else if v_cnt == n {
+                    let pos: Vec<usize> = (seq.processed..seq.processed + n).collect();
+                    seq.kv.append(li, k_new, v_new, &pos);
+                    seq.kv.layers[li]
+                        .gpu
+                        .update_maw(arow, s_total, prior_len[b], n, n);
+                } else {
+                    // padded chunk: append only the v_cnt valid entries
+                    let mut kk = vec![0.0f32; h_n * v_cnt * dh];
+                    let mut vv = vec![0.0f32; h_n * v_cnt * dh];
+                    for h in 0..h_n {
+                        let src = (h * n) * dh;
+                        kk[h * v_cnt * dh..(h + 1) * v_cnt * dh]
+                            .copy_from_slice(&k_new[src..src + v_cnt * dh]);
+                        vv[h * v_cnt * dh..(h + 1) * v_cnt * dh]
+                            .copy_from_slice(&v_new[src..src + v_cnt * dh]);
+                    }
+                    let pos: Vec<usize> = (seq.processed..seq.processed + v_cnt).collect();
+                    seq.kv.append(li, &kk, &vv, &pos);
+                    let compact = compact_asum(arow, h_n, s_total, prior_len[b], n, 0, v_cnt);
+                    seq.kv.layers[li].gpu.update_maw(
+                        &compact,
+                        prior_len[b] + v_cnt,
+                        prior_len[b],
+                        v_cnt,
+                        v_cnt,
+                    );
+                }
+            }
+
+            // ---- CPU-side sparse attention (Algorithm 2 lines 6–7, 11–12) ----
+            let mut o_gpu = out.o_gpu;
+            let mut lse_gpu = out.lse;
+            if self.policy.uses_cpu_side() {
+                // gather per-(row, head) jobs; on append attend the FULL
+                // store so re-evaluation sees complete scores (§3.2.2)
+                let mut gathered: Vec<(Vec<f32>, Vec<f32>, usize)> = Vec::with_capacity(batch * h_n);
+                for (b, seq) in seqs.iter().enumerate() {
+                    let store = &seq.kv.layers[li].cpu;
+                    let g = if is_append && !store.is_empty() {
+                        Policy::FullOffload.gather_jobs(store, seq.kv.seq_len)
+                    } else {
+                        self.policy.gather_jobs(store, seq.kv.seq_len)
+                    };
+                    debug_assert_eq!(g.len(), h_n);
+                    gathered.extend(g);
+                    let _ = b;
+                }
+                for _ in nactive..batch {
+                    for _ in 0..h_n {
+                        gathered.push((Vec::new(), Vec::new(), 0));
+                    }
+                }
+                let jobs: Vec<HeadJob> = gathered
+                    .iter()
+                    .map(|(k, v, cnt)| HeadJob { k, v, n: *cnt })
+                    .collect();
+                let mut q_valid = Vec::with_capacity(jobs.len());
+                for b in 0..batch {
+                    let v = if b < nactive { valid[b] } else { 0 };
+                    for _ in 0..h_n {
+                        q_valid.push(v);
+                    }
+                }
+                let cpu_out = crate::attention::cpu_attention::sparse_attention_masked(
+                    &jobs, &out.q, n, dh, self.cfg.cpu_threads, is_append, Some(&q_valid),
+                );
+
+                merge_states(&mut o_gpu, &mut lse_gpu, &cpu_out.o, &cpu_out.lse, dh);
+
+                // append-time re-evaluation (Algorithm 1 lines 19–22)
+                if is_append {
+                    if let (Policy::Hgca { beta }, Some(probs)) = (&self.policy, &cpu_out.probs) {
+                        let beta = *beta;
+                        for (b, seq) in seqs.iter_mut().enumerate() {
+                            let store = &mut seq.kv.layers[li].cpu;
+                            let cnt = store.len();
+                            if cnt == 0 {
+                                continue;
+                            }
+                            let mut a_cpu = vec![0.0f32; h_n * cnt];
+                            let qn = valid[b].max(1) as f32;
+                            for h in 0..h_n {
+                                let p = &probs[b * h_n + h];
+                                for (i, &m) in p.iter().enumerate() {
+                                    a_cpu[h * cnt + i] = m / qn;
+                                }
+                            }
+                            store.reevaluate(&a_cpu, beta);
+                        }
+                    }
+                }
+                // flush this chunk's overflow into the CPU store (with
+                // evict-time selection) now that attention is complete
+                for (b, blk) in deferred.drain(..) {
+                    let beta = self.cfg.beta;
+                    let denom = lw;
+                    seqs[b].kv.layers[li].cpu.add_evicted(&blk, beta, denom);
+                    seqs[b].kv.evict_bytes += blk_bytes(&blk);
+                }
+                // H2O/Static: discard unselected permanently
+                if self.policy.discards_unselected() {
+                    for seq in seqs.iter_mut() {
+                        let store = &mut seq.kv.layers[li].cpu;
+                        if !store.is_empty() {
+                            prune_store(store, &self.policy, seqs_len_hint(store));
+                        }
+                    }
+                }
+                // simulated time for this layer (per the active policy)
+                let (n_win, n_cpu, n_sel) = kv_sizes(seqs, li, &gathered, h_n);
+                let (t, _) = self.policy.sim_attention(
+                    &self.testbed,
+                    &model,
+                    nactive.max(1),
+                    n,
+                    n_win,
+                    n_cpu,
+                    n_sel,
+                );
+                sim_secs += t;
+            } else {
+                for (b, blk) in deferred.drain(..) {
+                    let beta = self.cfg.beta;
+                    seqs[b].kv.layers[li].cpu.add_evicted(&blk, beta, lw);
+                }
+                let n_win = seqs.iter().map(|s| s.kv.window_len(li)).max().unwrap_or(0);
+                let (t, _) = self.policy.sim_attention(
+                    &self.testbed,
+                    &model,
+                    nactive.max(1),
+                    n,
+                    n_win,
+                    0,
+                    0,
+                );
+                sim_secs += t;
+            }
+
+            // lse values for fully-empty rows (padding) stay EMPTY; their
+            // o is zero — harmless, rows are masked out at sampling.
+            debug_assert!(lse_gpu.iter().all(|l| l.is_finite() || *l <= EMPTY_LSE));
+
+            // o layout [B,H,N,dh] → o_merged [B,N,D]: for n=1 this is a
+            // straight copy; for chunks transpose (H, N).
+            let o_merged = heads_to_flat(&o_gpu, batch, h_n, n, dh);
+            hidden = exec.post_attn(li, batch, n, &hidden, &o_merged)?;
+            let _ = d;
+        }
+
+        // per-step weight-streaming cost (shared by every policy)
+        sim_secs += self
+            .testbed
+            .decode_step_weights(&model, nactive.max(1), 1.0)
+            .total()
+            * if is_append { n as f64 } else { 1.0 };
+
+        for (b, seq) in seqs.iter_mut().enumerate() {
+            seq.processed += valid[b];
+            seq.kv.advance(valid[b]);
+        }
+
+        // memory + timing bookkeeping
+        let gpu_b: usize = seqs.iter().map(|s| s.kv.gpu_bytes()).sum();
+        let cpu_b: usize = seqs.iter().map(|s| s.kv.cpu_bytes()).sum();
+        self.metrics.observe_memory(gpu_b, cpu_b);
+        self.metrics
+            .record_step(wall.secs(), sim_secs, if is_append { 0 } else { nactive as u64 });
+
+        if need_logits {
+            // logits only needed at the last *valid* position per row
+            let last = slice_last_valid(&hidden, batch, n, self.mr.cfg.d_model, valid);
+            let logits = exec.lm_head(batch, &last)?;
+            let v = self.mr.cfg.vocab;
+            Ok((0..nactive)
+                .map(|b| logits[b * v..(b + 1) * v].to_vec())
+                .collect())
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    /// Absorb a sequence's pending tokens (prompt or forced text) into the
+    /// KV cache: full chunks via the append artifact, remainder token-wise.
+    /// Returns last-position logits when the caller needs them.
+    pub fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>> {
+        let chunk = self.cfg.chunk;
+        let mut logits = Vec::new();
+        while seq.processed < seq.tokens.len() {
+            let remaining = seq.tokens.len() - seq.processed;
+            let need = remaining <= chunk;
+            let out = if remaining == 1 {
+                self.step(&mut [seq], 1, 1, need)?
+            } else {
+                // padded chunk: one artifact call regardless of remainder
+                let v = remaining.min(chunk);
+                self.step_masked(&mut [seq], 1, chunk, &[v], need)?
+            };
+            if need {
+                logits = out.into_iter().next().unwrap_or_default();
+            }
+            self.metrics.prefill_tokens += remaining.min(chunk) as u64;
+        }
+        Ok(logits)
+    }
+
+    /// One batched decode step. `forced` supplies the *input* token per row
+    /// (teacher forcing); with `None`, each row consumes its one pending
+    /// token (appended by the previous sample) and a new token is sampled
+    /// from the produced logits. Returns (id, token, logits-of-next).
+    pub fn decode_step(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        batch: usize,
+        forced: Option<&[u8]>,
+    ) -> Result<Vec<(u64, u8, Vec<f32>)>> {
+        if let Some(f) = forced {
+            for (b, seq) in seqs.iter_mut().enumerate() {
+                anyhow::ensure!(
+                    seq.processed == seq.tokens.len(),
+                    "forced decode with pending tokens on sequence {}",
+                    seq.id
+                );
+                seq.tokens.push(f[b]);
+            }
+        }
+        for seq in seqs.iter() {
+            anyhow::ensure!(
+                seq.processed + 1 == seq.tokens.len(),
+                "decode_step needs exactly one pending token (seq {}: {} processed, {} total)",
+                seq.id,
+                seq.processed,
+                seq.tokens.len()
+            );
+        }
+        let logits = self.step(seqs, batch, 1, true)?;
+        let mut out = Vec::with_capacity(seqs.len());
+        for (b, seq) in seqs.iter_mut().enumerate() {
+            let tok = match forced {
+                Some(f) => f[b],
+                None => {
+                    let next = self.sampler.sample(&logits[b], &mut self.rng);
+                    seq.tokens.push(next);
+                    next
+                }
+            };
+            out.push((seq.id, tok, logits[b].clone()));
+        }
+        Ok(out)
+    }
+
+    /// Generate `n_new` tokens for one sequence (prefill + decode loop).
+    pub fn generate(&mut self, seq: &mut Sequence, n_new: usize) -> Result<Vec<u8>> {
+        if seq.processed < seq.tokens.len() {
+            let logits = self.prefill(seq)?;
+            if !logits.is_empty() && n_new > 0 {
+                let next = self.sampler.sample(&logits, &mut self.rng);
+                seq.tokens.push(next);
+            }
+        }
+        let mut out: Vec<u8> = seq.tokens[seq.processed.min(seq.tokens.len())..].to_vec();
+        while out.len() < n_new {
+            let step = self.decode_step(&mut [seq], 1, None)?;
+            out.push(step[0].1);
+        }
+        out.truncate(n_new);
+        Ok(out)
+    }
+
+    /// Teacher-forced perplexity of `text` under this engine's policy —
+    /// the Table 1 measurement (full generation path, not just token 1).
+    /// The first `burn_in` positions are excluded (no context yet).
+    pub fn perplexity(&mut self, text: &[u8], burn_in: usize) -> Result<f64> {
+        anyhow::ensure!(text.len() >= burn_in + 2, "text too short");
+        let mut seq = self.new_sequence(0, &text[..burn_in.max(1)]);
+        let logits0 = self.prefill(&mut seq)?;
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        // logits0 predicts text[burn_in]
+        nll -= crate::tensor::ops::log_softmax_at(&logits0, text[burn_in] as usize) as f64;
+        count += 1;
+        for t in burn_in..text.len() - 1 {
+            let step = self.decode_step(&mut [&mut seq], 1, Some(&text[t..t + 1]))?;
+            let logits = &step[0].2;
+            nll -= crate::tensor::ops::log_softmax_at(logits, text[t + 1] as usize) as f64;
+            count += 1;
+        }
+        Ok((nll / count as f64).exp())
+    }
+}
+
+/// [B,H,N,dh] → [B,N,H*dh]
+fn heads_to_flat(o: &[f32], batch: usize, h_n: usize, n: usize, dh: usize) -> Vec<f32> {
+    if n == 1 {
+        return o.to_vec(); // [B,H,1,dh] ≡ [B,1,H*dh]
+    }
+    let d = h_n * dh;
+    let mut out = vec![0.0f32; batch * n * d];
+    for b in 0..batch {
+        for h in 0..h_n {
+            for t in 0..n {
+                let src = ((b * h_n + h) * n + t) * dh;
+                let dst = (b * n + t) * d + h * dh;
+                out[dst..dst + dh].copy_from_slice(&o[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// hidden [B,N,D] → [B,1,D] taking the last valid position of each row.
+fn slice_last_valid(hidden: &[f32], batch: usize, n: usize, d: usize, valid: &[usize]) -> Vec<f32> {
+    if n == 1 {
+        return hidden.to_vec();
+    }
+    let mut out = vec![0.0f32; batch * d];
+    for b in 0..batch {
+        let v = valid.get(b).copied().unwrap_or(n).max(1);
+        let src = (b * n + (v - 1)) * d;
+        out[b * d..(b + 1) * d].copy_from_slice(&hidden[src..src + d]);
+    }
+    out
+}
+
+fn blk_bytes(blk: &crate::kv::KvBlock) -> u64 {
+    blk.size_bytes() as u64
+}
+
+/// Compact a_sum rows: window prefix [0..prior) + new slots
+/// [S-n+skip .. S-n+skip+keep) into a contiguous [heads][prior+keep] buffer.
+fn compact_asum(
+    arow: &[f32],
+    h_n: usize,
+    s_total: usize,
+    prior: usize,
+    n: usize,
+    skip: usize,
+    keep: usize,
+) -> Vec<f32> {
+    let width = prior + keep;
+    let mut out = vec![0.0f32; h_n * width];
+    for h in 0..h_n {
+        let src = &arow[h * s_total..(h + 1) * s_total];
+        out[h * width..h * width + prior].copy_from_slice(&src[..prior]);
+        let new0 = s_total - n + skip;
+        out[h * width + prior..(h + 1) * width].copy_from_slice(&src[new0..new0 + keep]);
+    }
+    out
+}
+
+fn kv_sizes(
+    seqs: &[&mut Sequence],
+    li: usize,
+    gathered: &[(Vec<f32>, Vec<f32>, usize)],
+    h_n: usize,
+) -> (usize, usize, usize) {
+    let n_win = seqs.iter().map(|s| s.kv.window_len(li)).max().unwrap_or(0);
+    let n_cpu = seqs
+        .iter()
+        .map(|s| s.kv.layers[li].cpu.len())
+        .max()
+        .unwrap_or(0);
+    // mean selected entries per head (rounded up)
+    let sel_total: usize = gathered.iter().map(|(_, _, n)| n).sum();
+    let denom = (seqs.len() * h_n).max(1);
+    (n_win, n_cpu, sel_total.div_ceil(denom))
+}
+
+/// For H2O/Static: shrink the full store to the policy's selected set.
+fn prune_store(store: &mut crate::kv::CpuLayerStore, policy: &Policy, seq_len: usize) {
+    let dh = store.d_head;
+    for h in 0..store.heads {
+        let hs = &store.full[h];
+        let sel: Vec<u32> = match policy {
+            Policy::H2o { frac } => {
+                use crate::sparse::{SelectInput, SparsePolicy, TopK};
+                TopK::new(*frac).select(&SelectInput {
+                    maw: &hs.maw,
+                    pos: &hs.pos,
+                    seq_len,
+                })
+            }
+            Policy::Static { sinks, recent } => {
+                use crate::sparse::{SelectInput, SparsePolicy, StaticWindow};
+                StaticWindow::new(*sinks, *recent).select(&SelectInput {
+                    maw: &hs.maw,
+                    pos: &hs.pos,
+                    seq_len,
+                })
+            }
+            _ => return,
+        };
+        let mut nk = Vec::with_capacity(sel.len() * dh);
+        let mut nv = Vec::with_capacity(sel.len() * dh);
+        let mut nm = Vec::with_capacity(sel.len());
+        let mut np = Vec::with_capacity(sel.len());
+        for &i in &sel {
+            let i = i as usize;
+            nk.extend_from_slice(&hs.k[i * dh..(i + 1) * dh]);
+            nv.extend_from_slice(&hs.v[i * dh..(i + 1) * dh]);
+            nm.push(hs.maw[i]);
+            np.push(hs.pos[i]);
+        }
+        let hs = &mut store.full[h];
+        hs.k = nk;
+        hs.v = nv;
+        hs.maw = nm;
+        hs.pos = np;
+    }
+}
+
+fn seqs_len_hint(store: &crate::kv::CpuLayerStore) -> usize {
+    store.full[0].pos.last().map(|p| p + 1).unwrap_or(0)
+}

@@ -1,0 +1,10 @@
+//! Inference engine: hybrid attention orchestration (Algorithm 2),
+//! generation loops, continuous batching, policy strategies.
+
+pub mod batcher;
+pub mod engine;
+pub mod strategy;
+
+pub use batcher::Batcher;
+pub use engine::{Engine, Sequence};
+pub use strategy::Policy;

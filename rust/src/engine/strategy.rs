@@ -1,0 +1,270 @@
+//! Attention-placement policies: HGCA plus every baseline the paper
+//! compares against (§5). A policy decides (a) which CPU-resident KV
+//! entries the sparse side attends (numerics → accuracy results) and
+//! (b) how the step is charged on the simulated testbed (→ performance
+//! results, Figs. 6/10–14).
+
+use crate::config::ModelConfig;
+use crate::kv::cpu_store::CpuLayerStore;
+use crate::simulator::{AttnWork, Breakdown, Testbed};
+use crate::sparse::{SelectInput, SparsePolicy, StaticWindow, TopK};
+
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// HGCA hybrid attention: GPU dense window ∥ CPU sparse over the
+    /// per-head contextual cache (evict-time β selection + append re-eval).
+    Hgca { beta: f32 },
+    /// Full attention, no offloading (HF-style): OOMs when the window fills.
+    GpuOnly,
+    /// Full attention with KV offload (FlexGen-style): CPU-resident KV is
+    /// attended exactly (numerics = full attention), but the simulated cost
+    /// is the PCIe reload the paper measures.
+    FullOffload,
+    /// H2O: fixed top-`frac` by cumulative attention; unselected entries
+    /// are *discarded permanently* (accuracy impact) but stay on-GPU
+    /// (no reload cost).
+    H2o { frac: f32 },
+    /// InfiniGen: predictive top-`frac` prefetch from CPU memory; keeps
+    /// everything (no accuracy loss vs H2O at same frac) but pays
+    /// rehearsal memory overhead + prefetch transfers.
+    Infinigen { frac: f32 },
+    /// StreamingLLM-style static sinks + recency window.
+    Static { sinks: usize, recent: usize },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Hgca { .. } => "hgca",
+            Policy::GpuOnly => "gpu-only",
+            Policy::FullOffload => "full-offload",
+            Policy::H2o { .. } => "h2o",
+            Policy::Infinigen { .. } => "infinigen",
+            Policy::Static { .. } => "static",
+        }
+    }
+
+    /// Does this policy attend CPU-resident entries at decode time?
+    pub fn uses_cpu_side(&self) -> bool {
+        !matches!(self, Policy::GpuOnly)
+    }
+
+    /// Build the per-head (k, v) gather for one layer's CPU-side attention.
+    /// Returns (k, v, n) per head — contiguous buffers ready for HeadJob.
+    /// HGCA uses the pre-packed contextual cache (zero gather — §3.3);
+    /// other policies gather from the full store on the fly.
+    pub fn gather_jobs(
+        &self,
+        store: &CpuLayerStore,
+        seq_len: usize,
+    ) -> Vec<(Vec<f32>, Vec<f32>, usize)> {
+        let dh = store.d_head;
+        match self {
+            Policy::GpuOnly => (0..store.heads).map(|_| (Vec::new(), Vec::new(), 0)).collect(),
+            Policy::Hgca { .. } => store
+                .ctx
+                .iter()
+                .map(|c| (c.k.clone(), c.v.clone(), c.len()))
+                .collect(),
+            Policy::FullOffload => store
+                .full
+                .iter()
+                .map(|h| (h.k.clone(), h.v.clone(), h.len()))
+                .collect(),
+            Policy::H2o { frac } | Policy::Infinigen { frac } => {
+                let pol = TopK::new(*frac);
+                store
+                    .full
+                    .iter()
+                    .map(|h| {
+                        let sel = pol.select(&SelectInput {
+                            maw: &h.maw,
+                            pos: &h.pos,
+                            seq_len,
+                        });
+                        gather(&h.k, &h.v, &sel, dh)
+                    })
+                    .collect()
+            }
+            Policy::Static { sinks, recent } => {
+                let pol = StaticWindow::new(*sinks, *recent);
+                store
+                    .full
+                    .iter()
+                    .map(|h| {
+                        let sel = pol.select(&SelectInput {
+                            maw: &h.maw,
+                            pos: &h.pos,
+                            seq_len,
+                        });
+                        gather(&h.k, &h.v, &sel, dh)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Simulated wall time + breakdown of one layer's attention step.
+    /// `n_win`: GPU-window entries; `n_cpu`: CPU-resident entries;
+    /// `n_sel`: entries the CPU side actually attends.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sim_attention(
+        &self,
+        tb: &Testbed,
+        model: &ModelConfig,
+        batch: usize,
+        n_query: usize,
+        n_win: usize,
+        n_cpu: usize,
+        n_sel: usize,
+    ) -> (f64, Breakdown) {
+        let w = |n_kv: usize| AttnWork {
+            batch,
+            heads: model.n_heads,
+            d_head: model.d_head(),
+            n_query,
+            n_kv,
+            bytes_per_el: model.bytes_per_param,
+        };
+        match self {
+            Policy::Hgca { .. } => {
+                let mb = Testbed::merge_bytes(batch, model.n_heads, model.d_head());
+                tb.hybrid_attention(&w(n_win + n_query), &w(n_sel), mb)
+            }
+            Policy::GpuOnly => {
+                let b = tb.gpu_resident_attention(&w(n_win + n_query));
+                (b.total(), b)
+            }
+            Policy::FullOffload => {
+                let b = tb.gpu_attention_with_load(&w(n_win + n_cpu + n_query), n_cpu);
+                (b.total(), b)
+            }
+            Policy::H2o { .. } | Policy::Static { .. } => {
+                // selected set stays on-GPU; attention over window + selection
+                let b = tb.gpu_resident_attention(&w(n_win + n_sel + n_query));
+                (b.total(), b)
+            }
+            Policy::Infinigen { .. } => {
+                // prefetch the predicted set over PCIe, overlapped with the
+                // previous layer's compute: charge max(transfer, attn)
+                let attn = tb.gpu_resident_attention(&w(n_win + n_sel + n_query));
+                let prefetch = tb.link.transfer_time(w(n_sel).kv_bytes());
+                let mut b = Breakdown::new();
+                b.add("gpu_attn", attn.total());
+                b.add("pcie_prefetch", (prefetch - attn.total()).max(0.0));
+                (b.total(), b)
+            }
+        }
+    }
+
+    /// Extra CPU memory bytes per stored KV entry (InfiniGen rehearsal).
+    pub fn overhead_bytes_per_entry(&self, model: &ModelConfig) -> usize {
+        match self {
+            Policy::Infinigen { .. } => model.d_head() * 2,
+            _ => 0,
+        }
+    }
+
+    /// H2O discards unselected entries permanently.
+    pub fn discards_unselected(&self) -> bool {
+        matches!(self, Policy::H2o { .. } | Policy::Static { .. })
+    }
+}
+
+fn gather(k: &[f32], v: &[f32], sel: &[u32], dh: usize) -> (Vec<f32>, Vec<f32>, usize) {
+    let mut gk = Vec::with_capacity(sel.len() * dh);
+    let mut gv = Vec::with_capacity(sel.len() * dh);
+    for &i in sel {
+        let i = i as usize;
+        gk.extend_from_slice(&k[i * dh..(i + 1) * dh]);
+        gv.extend_from_slice(&v[i * dh..(i + 1) * dh]);
+    }
+    (gk, gv, sel.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::KvBlock;
+
+    fn store_with(maws: &[&[f32]]) -> CpuLayerStore {
+        let heads = maws.len();
+        let dh = 2;
+        let len = maws[0].len();
+        let mut blk = KvBlock::new(heads, dh, len);
+        for h in 0..heads {
+            for t in 0..len {
+                blk.maw[h * len + t] = maws[h][t];
+                blk.k[(h * len + t) * dh] = (h * 100 + t) as f32;
+                blk.v[(h * len + t) * dh] = -((h * 100 + t) as f32);
+            }
+        }
+        for (t, p) in blk.pos.iter_mut().enumerate() {
+            *p = t;
+        }
+        let mut s = CpuLayerStore::new(heads, dh);
+        s.add_evicted(&blk, 1.0, len * 2);
+        s
+    }
+
+    #[test]
+    fn hgca_uses_packed_ctx() {
+        let s = store_with(&[&[0.9, 0.01, 0.8, 0.01]]);
+        let jobs = Policy::Hgca { beta: 1.0 }.gather_jobs(&s, 10);
+        assert_eq!(jobs[0].2, 2); // threshold 1/8: 0.9 and 0.8
+        assert_eq!(jobs[0].0[0], 0.0); // entry 0's k
+        assert_eq!(jobs[0].0[2], 2.0); // entry 2's k
+    }
+
+    #[test]
+    fn full_offload_attends_everything() {
+        let s = store_with(&[&[0.0, 0.0, 0.0]]);
+        let jobs = Policy::FullOffload.gather_jobs(&s, 10);
+        assert_eq!(jobs[0].2, 3);
+    }
+
+    #[test]
+    fn h2o_gathers_fixed_fraction() {
+        let maw = [0.5, 0.1, 0.2, 0.05, 0.05, 0.04, 0.03, 0.02, 0.01, 0.0];
+        let s = store_with(&[&maw]);
+        let jobs = Policy::H2o { frac: 0.2 }.gather_jobs(&s, 10);
+        assert_eq!(jobs[0].2, 2);
+        assert_eq!(jobs[0].0[0], 0.0); // top entries 0 and 2, sorted
+        assert_eq!(jobs[0].0[2], 2.0);
+    }
+
+    #[test]
+    fn gpu_only_has_no_jobs() {
+        let s = store_with(&[&[0.5, 0.5]]);
+        let jobs = Policy::GpuOnly.gather_jobs(&s, 4);
+        assert_eq!(jobs[0].2, 0);
+        assert!(!Policy::GpuOnly.uses_cpu_side());
+    }
+
+    #[test]
+    fn sim_hybrid_faster_than_offload_at_scale() {
+        let tb = Testbed::paper();
+        let model = crate::config::model::simulated("opt-6.7b").unwrap();
+        let (h, _) = Policy::Hgca { beta: 1.0 }.sim_attention(&tb, &model, 4, 1, 1024, 16384, 3000);
+        let (f, _) = Policy::FullOffload.sim_attention(&tb, &model, 4, 1, 1024, 16384, 0);
+        assert!(f / h > 2.0, "hybrid {h} vs offload {f}");
+    }
+
+    #[test]
+    fn sim_h2o_cheap_but_discards() {
+        let tb = Testbed::paper();
+        let model = crate::config::model::simulated("opt-6.7b").unwrap();
+        let p = Policy::H2o { frac: 0.2 };
+        let (t, _) = p.sim_attention(&tb, &model, 1, 1, 1024, 8192, 1638);
+        assert!(t < 0.01);
+        assert!(p.discards_unselected());
+        assert!(!Policy::Hgca { beta: 1.0 }.discards_unselected());
+    }
+
+    #[test]
+    fn infinigen_overhead_positive() {
+        let model = crate::config::model::simulated("opt-6.7b").unwrap();
+        assert!(Policy::Infinigen { frac: 0.2 }.overhead_bytes_per_entry(&model) > 0);
+        assert_eq!(Policy::Hgca { beta: 1.0 }.overhead_bytes_per_entry(&model), 0);
+    }
+}

@@ -1,0 +1,70 @@
+//! KV block: the eviction granule (Algorithm 1 footnote: offloads are
+//! batched at block granularity to amortize PCIe cost).
+
+/// A block of `len` KV entries for all heads of one layer, head-major:
+/// `k[h * len * d_head + t * d_head + j]`. MAW travels with the block
+/// (Algorithm 1 line 13: eviction transfers KV + A_evict together).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvBlock {
+    pub heads: usize,
+    pub d_head: usize,
+    pub len: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// maw[h * len + t] — per-head moving-average attention weight.
+    pub maw: Vec<f32>,
+    /// Global token position of each entry (chronological).
+    pub pos: Vec<usize>,
+}
+
+impl KvBlock {
+    pub fn new(heads: usize, d_head: usize, len: usize) -> KvBlock {
+        KvBlock {
+            heads,
+            d_head,
+            len,
+            k: vec![0.0; heads * len * d_head],
+            v: vec![0.0; heads * len * d_head],
+            maw: vec![0.0; heads * len],
+            pos: vec![0; len],
+        }
+    }
+
+    pub fn k_at(&self, h: usize, t: usize) -> &[f32] {
+        let o = (h * self.len + t) * self.d_head;
+        &self.k[o..o + self.d_head]
+    }
+
+    pub fn v_at(&self, h: usize, t: usize) -> &[f32] {
+        let o = (h * self.len + t) * self.d_head;
+        &self.v[o..o + self.d_head]
+    }
+
+    pub fn maw_at(&self, h: usize, t: usize) -> f32 {
+        self.maw[h * self.len + t]
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        (self.k.len() + self.v.len() + self.maw.len()) * 4 + self.pos.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_head_major() {
+        let mut b = KvBlock::new(2, 3, 4);
+        b.k[(1 * 4 + 2) * 3] = 7.0; // head 1, entry 2, dim 0
+        assert_eq!(b.k_at(1, 2)[0], 7.0);
+        assert_eq!(b.k_at(0, 0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn size_accounting() {
+        let b = KvBlock::new(4, 32, 16);
+        // 2 * 4*16*32 f32 + 4*16 maw f32 + 16 pos u64
+        assert_eq!(b.size_bytes(), (2 * 4 * 16 * 32 + 4 * 16) * 4 + 16 * 8);
+    }
+}

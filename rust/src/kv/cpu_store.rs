@@ -1,0 +1,289 @@
+//! CPU-side per-layer KV store (Algorithm 1, CPU half; §3.2.2).
+//!
+//! Holds every evicted KV entry (nothing is ever dropped — entries below
+//! the threshold stay available for re-evaluation) plus the *contextual
+//! cache*: the per-head subset selected by the β-threshold rule
+//!
+//! ```text
+//! keep(h, i)  ⇔  maw[h][i] > β / denom
+//! ```
+//!
+//! where denom is the GPU window length at evict-time selection and the
+//! CPU cache length at append-time re-evaluation (Algorithm 1 lines 19–24).
+//! Selected entries are stored contiguously per head (§3.3: contiguous
+//! arrangement enables efficient parallel CPU attention), with MAW
+//! re-normalized to sum to 1 per head.
+
+use super::block::KvBlock;
+
+/// Per-head growable KV arrays.
+#[derive(Debug, Clone, Default)]
+pub struct HeadStore {
+    pub k: Vec<f32>,   // [n][dh] row-major
+    pub v: Vec<f32>,
+    pub maw: Vec<f32>, // [n]
+    pub pos: Vec<usize>,
+}
+
+impl HeadStore {
+    pub fn len(&self) -> usize {
+        self.maw.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.maw.is_empty()
+    }
+}
+
+/// Contiguous per-head contextual cache (the sparse-attention working set).
+#[derive(Debug, Clone, Default)]
+pub struct HeadCtx {
+    /// indices into the head's full store
+    pub idx: Vec<u32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// re-normalized MAW (sums to 1 per head when non-empty)
+    pub maw: Vec<f32>,
+}
+
+impl HeadCtx {
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CpuLayerStore {
+    pub heads: usize,
+    pub d_head: usize,
+    pub full: Vec<HeadStore>,
+    pub ctx: Vec<HeadCtx>,
+}
+
+impl CpuLayerStore {
+    pub fn new(heads: usize, d_head: usize) -> Self {
+        CpuLayerStore {
+            heads,
+            d_head,
+            full: (0..heads).map(|_| HeadStore::default()).collect(),
+            ctx: (0..heads).map(|_| HeadCtx::default()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.full[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total selected entries across heads (sparsity diagnostics).
+    pub fn ctx_len_total(&self) -> usize {
+        self.ctx.iter().map(|c| c.len()).sum()
+    }
+
+    /// Absorb an evicted block and immediately run evict-time selection on
+    /// the *incoming* entries (Algorithm 1 lines 23–25): salient newcomers
+    /// join the contextual cache; everything joins the full store.
+    /// `denom` is the GPU window length (A_gpu.size).
+    pub fn add_evicted(&mut self, blk: &KvBlock, beta: f32, denom: usize) {
+        assert_eq!(blk.heads, self.heads);
+        assert_eq!(blk.d_head, self.d_head);
+        let dh = self.d_head;
+        let threshold = beta / denom.max(1) as f32;
+        for h in 0..self.heads {
+            let start = self.full[h].len();
+            let hk = &blk.k[h * blk.len * dh..(h + 1) * blk.len * dh];
+            let hv = &blk.v[h * blk.len * dh..(h + 1) * blk.len * dh];
+            self.full[h].k.extend_from_slice(hk);
+            self.full[h].v.extend_from_slice(hv);
+            self.full[h]
+                .maw
+                .extend_from_slice(&blk.maw[h * blk.len..(h + 1) * blk.len]);
+            self.full[h].pos.extend_from_slice(&blk.pos);
+            // select salient newcomers into the contextual cache
+            for t in 0..blk.len {
+                if blk.maw_at(h, t) > threshold {
+                    let i = start + t;
+                    self.ctx[h].idx.push(i as u32);
+                    self.ctx[h].k.extend_from_slice(&hk[t * dh..(t + 1) * dh]);
+                    self.ctx[h].v.extend_from_slice(&hv[t * dh..(t + 1) * dh]);
+                    self.ctx[h].maw.push(blk.maw_at(h, t));
+                }
+            }
+            Self::renormalize(&mut self.ctx[h].maw);
+        }
+    }
+
+    /// Append-time re-evaluation (§3.2.2 "Re-evaluation"; Algorithm 1 lines
+    /// 19–22): given fresh attention weights over the *full* CPU store
+    /// (a_cpu[h * n + i]), rebuild each head's contextual cache. Previously
+    /// pruned entries can be reinstated; stale ones are dropped.
+    pub fn reevaluate(&mut self, a_cpu: &[f32], beta: f32) {
+        let n = self.len();
+        assert_eq!(a_cpu.len(), self.heads * n);
+        let dh = self.d_head;
+        let threshold = beta / n.max(1) as f32;
+        for h in 0..self.heads {
+            let store = &self.full[h];
+            let ctx = &mut self.ctx[h];
+            ctx.idx.clear();
+            ctx.k.clear();
+            ctx.v.clear();
+            ctx.maw.clear();
+            for i in 0..n {
+                let a = a_cpu[h * n + i];
+                if a > threshold {
+                    ctx.idx.push(i as u32);
+                    ctx.k.extend_from_slice(&store.k[i * dh..(i + 1) * dh]);
+                    ctx.v.extend_from_slice(&store.v[i * dh..(i + 1) * dh]);
+                    ctx.maw.push(a);
+                }
+            }
+            // also refresh the stored MAW so future re-evals see history
+            for i in 0..n {
+                self.full[h].maw[i] = a_cpu[h * n + i];
+            }
+            Self::renormalize(&mut self.ctx[h].maw);
+        }
+    }
+
+    fn renormalize(maw: &mut [f32]) {
+        let sum: f32 = maw.iter().sum();
+        if sum > 0.0 {
+            for m in maw.iter_mut() {
+                *m /= sum;
+            }
+        }
+    }
+
+    /// Per-head selected fraction (paper reports 30%…<1% at β = 1).
+    pub fn selectivity(&self) -> Vec<f32> {
+        let n = self.len().max(1) as f32;
+        self.ctx.iter().map(|c| c.len() as f32 / n).collect()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        let full: usize = self
+            .full
+            .iter()
+            .map(|h| (h.k.len() + h.v.len() + h.maw.len()) * 4 + h.pos.len() * 8)
+            .sum();
+        let ctx: usize = self
+            .ctx
+            .iter()
+            .map(|c| (c.k.len() + c.v.len() + c.maw.len()) * 4 + c.idx.len() * 4)
+            .sum();
+        full + ctx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk_with_maw(heads: usize, dh: usize, maws: &[&[f32]]) -> KvBlock {
+        let len = maws[0].len();
+        let mut b = KvBlock::new(heads, dh, len);
+        for h in 0..heads {
+            for t in 0..len {
+                b.maw[h * len + t] = maws[h][t];
+                for j in 0..dh {
+                    b.k[(h * len + t) * dh + j] = (h * 1000 + t * 10 + j) as f32;
+                    b.v[(h * len + t) * dh + j] = -((h * 1000 + t * 10 + j) as f32);
+                }
+            }
+        }
+        for (t, p) in b.pos.iter_mut().enumerate() {
+            *p = t + 100;
+        }
+        b
+    }
+
+    #[test]
+    fn add_evicted_selects_above_threshold() {
+        let mut s = CpuLayerStore::new(2, 2);
+        // window denom = 4 → threshold = 1/4 = 0.25 at beta=1
+        let blk = blk_with_maw(2, 2, &[&[0.3, 0.1, 0.5], &[0.01, 0.02, 0.03]]);
+        s.add_evicted(&blk, 1.0, 4);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.ctx[0].idx, vec![0, 2]); // 0.3 and 0.5 pass
+        assert!(s.ctx[1].is_empty()); // head 1 all below
+        // contiguous packed k for selected entries
+        assert_eq!(s.ctx[0].k.len(), 2 * 2);
+        assert_eq!(&s.ctx[0].k[2..4], s.full[0].k[4..6].to_vec().as_slice());
+    }
+
+    #[test]
+    fn ctx_maw_renormalized() {
+        let mut s = CpuLayerStore::new(1, 2);
+        let blk = blk_with_maw(1, 2, &[&[0.4, 0.4]]);
+        s.add_evicted(&blk, 1.0, 4);
+        let sum: f32 = s.ctx[0].maw.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!((s.ctx[0].maw[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_head_selectivity_varies() {
+        // paper: skewed heads keep few entries, flat heads keep many
+        let mut s = CpuLayerStore::new(2, 2);
+        let blk = blk_with_maw(2, 2, &[&[0.9, 0.001, 0.001, 0.001], &[0.3, 0.3, 0.3, 0.3]]);
+        s.add_evicted(&blk, 1.0, 8); // threshold 0.125
+        let sel = s.selectivity();
+        assert!(sel[0] < sel[1]);
+        assert_eq!(s.ctx[0].len(), 1);
+        assert_eq!(s.ctx[1].len(), 4);
+    }
+
+    #[test]
+    fn beta_controls_aggressiveness() {
+        let blk = blk_with_maw(1, 2, &[&[0.05, 0.1, 0.2, 0.4]]);
+        let mut strict = CpuLayerStore::new(1, 2);
+        strict.add_evicted(&blk, 2.0, 8); // threshold .25
+        let mut loose = CpuLayerStore::new(1, 2);
+        loose.add_evicted(&blk, 0.25, 8); // threshold .03125
+        assert!(strict.ctx[0].len() < loose.ctx[0].len());
+        assert_eq!(strict.ctx[0].len(), 1); // only 0.4 > 0.25
+        assert_eq!(loose.ctx[0].len(), 4); // all > 0.03125
+    }
+
+    #[test]
+    fn reevaluate_reinstates_and_drops() {
+        let mut s = CpuLayerStore::new(1, 2);
+        let blk = blk_with_maw(1, 2, &[&[0.5, 0.001, 0.5, 0.001]]);
+        s.add_evicted(&blk, 1.0, 4); // threshold .25: keeps {0, 2}
+        assert_eq!(s.ctx[0].idx, vec![0, 2]);
+        // new context flips importance: entries 1,3 now hot (threshold 1/4)
+        let a_cpu = vec![0.01, 0.6, 0.01, 0.38];
+        s.reevaluate(&a_cpu, 1.0);
+        assert_eq!(s.ctx[0].idx, vec![1, 3]);
+        // stored maw refreshed
+        assert!((s.full[0].maw[1] - 0.6).abs() < 1e-6);
+        // packed data matches reinstated entries
+        assert_eq!(&s.ctx[0].k[0..2], &s.full[0].k[2..4]);
+    }
+
+    #[test]
+    fn full_store_never_shrinks() {
+        let mut s = CpuLayerStore::new(1, 2);
+        s.add_evicted(&blk_with_maw(1, 2, &[&[0.001, 0.001]]), 1.0, 4);
+        assert_eq!(s.len(), 2);
+        assert!(s.ctx[0].is_empty());
+        s.reevaluate(&vec![0.0, 0.0], 1.0);
+        assert_eq!(s.len(), 2); // still retrievable later
+    }
+
+    #[test]
+    fn multiple_blocks_accumulate() {
+        let mut s = CpuLayerStore::new(1, 2);
+        s.add_evicted(&blk_with_maw(1, 2, &[&[0.5, 0.5]]), 1.0, 4);
+        s.add_evicted(&blk_with_maw(1, 2, &[&[0.5, 0.5]]), 1.0, 4);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.ctx[0].len(), 4);
+        assert_eq!(s.ctx[0].idx, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Locality-aware KV cache management (paper §3.2, Algorithm 1).
+
+pub mod block;
+pub mod cpu_store;
+pub mod gpu_pool;
+pub mod manager;
+
+pub use block::KvBlock;
+pub use cpu_store::CpuLayerStore;
+pub use gpu_pool::GpuLayerCache;
+pub use manager::KvManager;

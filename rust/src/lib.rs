@@ -1,0 +1,34 @@
+//! # HGCA — Hybrid GPU-CPU Attention for Long Context LLM Inference
+//!
+//! Production-shaped reproduction of Deng et al., 2025 (see DESIGN.md) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`runtime`] loads AOT-compiled XLA artifacts (the "GPU" device) via the
+//!   PJRT C API and executes the dense windowed attention + FFN graph.
+//! * [`kv`] implements the paper's locality-aware KV cache manager
+//!   (Algorithm 1): GPU circular-buffer pool with MAW tracking, CPU store
+//!   with per-head β-threshold sparsification and append-time re-evaluation.
+//! * [`attention`] is the CPU-side multithreaded per-head sparse attention
+//!   plus the log-sum-exp merge (Algorithm 2).
+//! * [`engine`] orchestrates hybrid attention per layer, generation,
+//!   continuous batching; [`server`] exposes an HTTP API.
+//! * [`baselines`] reimplements FlexGen / H2O / InfiniGen / HF-full as
+//!   pluggable policies for the paper's comparisons.
+//! * [`simulator`] provides the roofline/PCIe cost models standing in for
+//!   the paper's A6000/Xeon/PCIe testbed (DESIGN.md §1).
+
+pub mod analysis;
+pub mod attention;
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

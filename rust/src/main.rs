@@ -1,0 +1,218 @@
+//! `hgca` — leader binary: serve / generate / ppl / analyze / simulate.
+//!
+//! Python never runs here; the binary is self-contained once
+//! `make artifacts` has produced the compiled HLO + weights.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::{Engine, Policy};
+use hgca::runtime::PjrtRuntime;
+use hgca::util::argparse::Args;
+
+const USAGE: &str = "\
+hgca — Hybrid GPU-CPU Attention serving engine (paper reproduction)
+
+USAGE:
+  hgca serve    [--addr 127.0.0.1:8471] [--model tiny] [--policy hgca] [--beta 1.0]
+  hgca generate --prompt TEXT [--max-new 64] [--model tiny] [--policy hgca]
+  hgca ppl      [--len 512] [--model tiny] [--policy hgca] [--beta 1.0] [--window 256]
+  hgca analyze  [--model tiny] [--len 256]      # attention-pattern stats (Figs. 3-5)
+  hgca simulate [--system hgca|flexgen|h2o|infinigen|hf] [--model opt-6.7b] [--batch 4]
+  hgca info                                     # manifest + artifact inventory
+
+COMMON FLAGS:
+  --artifacts DIR   artifact directory (default: ./artifacts)
+  --window N        GPU KV window (must match a compiled artifact; default 256)
+  --threads N       CPU attention threads (default 4)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_policy(args: &Args) -> Result<Policy> {
+    let beta = args.f64("beta", 1.0)? as f32;
+    Ok(match args.get_or("policy", "hgca") {
+        "hgca" => Policy::Hgca { beta },
+        "gpu-only" | "hf" => Policy::GpuOnly,
+        "full-offload" | "flexgen" => Policy::FullOffload,
+        "h2o" => Policy::H2o { frac: args.f64("frac", 0.2)? as f32 },
+        "infinigen" => Policy::Infinigen { frac: args.f64("frac", 0.2)? as f32 },
+        "static" => Policy::Static {
+            sinks: args.usize("sinks", 4)?,
+            recent: args.usize("recent", 64)?,
+        },
+        other => anyhow::bail!("unknown policy '{other}'"),
+    })
+}
+
+fn engine_config(args: &Args) -> Result<HgcaConfig> {
+    let mut cfg = HgcaConfig {
+        beta: args.f64("beta", 1.0)? as f32,
+        cpu_threads: args.usize("threads", 4)?,
+        alpha: args.f64("alpha", 0.3)? as f32,
+        ..Default::default()
+    };
+    cfg = cfg.with_window(args.usize("window", 256)?);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..], &["full"])?;
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    match cmd.as_str() {
+        "info" => {
+            let rt = PjrtRuntime::new(&dir)?;
+            println!("platform: {}", rt.client.platform_name());
+            println!("models:");
+            for (name, cfg) in &rt.manifest.models {
+                println!(
+                    "  {name}: {} layers, d={}, {} heads, {} params",
+                    cfg.n_layers,
+                    cfg.d_model,
+                    cfg.n_heads,
+                    cfg.param_count()
+                );
+            }
+            println!("artifacts: {}", rt.manifest.artifacts.len());
+            for a in &rt.manifest.artifacts {
+                println!("  {} (b={}, w={}, n={})", a.name, a.batch, a.window,
+                         a.inputs.first().map(|i| *i.shape.get(1).unwrap_or(&1)).unwrap_or(1));
+            }
+        }
+        "generate" => {
+            let rt = Rc::new(PjrtRuntime::new(&dir)?);
+            let mr = rt.load_model(args.get_or("model", "tiny"))?;
+            let cfg = engine_config(&args)?;
+            let policy = parse_policy(&args)?;
+            let mut engine = Engine::new(&mr, cfg, policy);
+            let prompt = args
+                .get("prompt")
+                .ok_or_else(|| anyhow::anyhow!("--prompt required"))?
+                .as_bytes()
+                .to_vec();
+            let max_new = args.usize("max-new", 64)?;
+            let mut seq = engine.new_sequence(0, &prompt);
+            let out = engine.generate(&mut seq, max_new)?;
+            println!("{}", String::from_utf8_lossy(&out));
+            let m = &engine.metrics;
+            eprintln!(
+                "# {} tokens, wall {:.1} tok/s, sim {:.1} tok/s, gpu-kv {}, cpu-kv {}",
+                out.len(),
+                m.throughput(),
+                m.sim_throughput(),
+                hgca::util::fmt_bytes(m.peak_gpu_kv_bytes as u64),
+                hgca::util::fmt_bytes(m.peak_cpu_kv_bytes as u64),
+            );
+        }
+        "ppl" => {
+            let rt = Rc::new(PjrtRuntime::new(&dir)?);
+            let mr = rt.load_model(args.get_or("model", "tiny"))?;
+            let cfg = engine_config(&args)?;
+            let policy = parse_policy(&args)?;
+            let text = load_eval_text(&args)?;
+            let len = args.usize("len", 512)?.min(text.len());
+            let mut engine = Engine::new(&mr, cfg, policy);
+            let ppl = engine.perplexity(&text[..len], 32)?;
+            println!("policy={} len={len} ppl={ppl:.4}", engine.policy.name());
+        }
+        "analyze" => {
+            let rt = Rc::new(PjrtRuntime::new(&dir)?);
+            let mr = rt.load_model(args.get_or("model", "tiny"))?;
+            let model = hgca::model::RefModel::new(mr.cfg.clone(), mr.weights.clone())?;
+            let text = load_eval_text(&args)?;
+            let len = args.usize("len", 256)?.min(text.len());
+            let (_, probs) = model.forward(&text[..len], true);
+            println!("layer  top10%mass  min_cov99  max_cov99");
+            for (li, lp) in probs.iter().enumerate() {
+                let cov = hgca::analysis::coverage_per_head(lp, 0.99);
+                let mass = hgca::analysis::top_decile_mass(lp);
+                let (mn, mx) = (
+                    cov.iter().cloned().fold(f32::INFINITY, f32::min),
+                    cov.iter().cloned().fold(0.0f32, f32::max),
+                );
+                println!("{li:>5}  {mass:>10.3}  {mn:>9.3}  {mx:>9.3}");
+            }
+        }
+        "simulate" => {
+            use hgca::baselines::{simulate_generation, E2eConfig, SystemKind};
+            use hgca::simulator::Testbed;
+            let system = match args.get_or("system", "hgca") {
+                "hgca" => SystemKind::Hgca,
+                "flexgen" => SystemKind::FlexGen,
+                "h2o" => SystemKind::H2o,
+                "infinigen" => SystemKind::Infinigen,
+                "hf" => SystemKind::HfFull,
+                other => anyhow::bail!("unknown system '{other}'"),
+            };
+            let model = hgca::config::model::lookup(args.get_or("model", "opt-6.7b"))
+                .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+            let cfg = E2eConfig {
+                system,
+                batch: args.usize("batch", 4)?,
+                prefill: args.usize("prefill", 1920)?,
+                gen: args.usize("gen", 128)?,
+                gpu_weight_frac: args.f64("weight-frac", 1.0)?,
+                window: args.usize("window", 1024)?,
+                n_gpus: args.usize("gpus", 1)?,
+                ..Default::default()
+            };
+            let r = simulate_generation(&Testbed::paper(), &model, &cfg);
+            println!(
+                "system={} model={} batch={} → total {:.2}s (prefill {:.2}s, decode {:.2}s) \
+                 {:.1} tok/s | peak gpu {} host {}{}",
+                args.get_or("system", "hgca"),
+                model.name,
+                cfg.batch,
+                r.total_secs,
+                r.prefill_secs,
+                r.decode_secs,
+                r.tokens_per_sec,
+                hgca::util::fmt_bytes(r.peak_gpu_bytes as u64),
+                hgca::util::fmt_bytes(r.peak_host_bytes as u64),
+                if r.oom { " [OOM]" } else { "" },
+            );
+            for (l, s) in &r.breakdown.segments {
+                println!("  {l:<18} {}", hgca::util::fmt_secs(*s));
+            }
+        }
+        "serve" => {
+            let rt = Rc::new(PjrtRuntime::new(&dir)?);
+            let mr = rt.load_model(args.get_or("model", "tiny"))?;
+            mr.warmup()?;
+            let cfg = engine_config(&args)?;
+            let policy = parse_policy(&args)?;
+            let mut engine = Engine::new(&mr, cfg, policy);
+            let addr = args.get_or("addr", "127.0.0.1:8471").to_string();
+            let (tx, rx) = std::sync::mpsc::channel();
+            let (local, _handle) = hgca::server::serve(&addr, tx)?;
+            println!("hgca serving on http://{local} (policy={})", engine.policy.name());
+            hgca::server::api::engine_loop(&mut engine, rx, args.usize("batch", 4)?)?;
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn load_eval_text(args: &Args) -> Result<Vec<u8>> {
+    let path = args.get_or("text", "data/corpus.txt");
+    Ok(std::fs::read(path)?)
+}

@@ -1,0 +1,113 @@
+//! Serving metrics: latency recorder (TBT, per-request), throughput,
+//! memory accounting — the paper's §5 measurement set.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    /// wall seconds per decode step (time-between-tokens)
+    pub tbt: Vec<f64>,
+    /// simulated seconds per decode step
+    pub sim_tbt: Vec<f64>,
+    /// tokens generated
+    pub tokens: u64,
+    /// prefill tokens absorbed
+    pub prefill_tokens: u64,
+    /// bytes moved GPU→CPU by evictions (simulated PCIe)
+    pub evict_bytes: u64,
+    /// peak memory observations
+    pub peak_gpu_kv_bytes: usize,
+    pub peak_cpu_kv_bytes: usize,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_step(&mut self, wall: f64, sim: f64, new_tokens: u64) {
+        self.tbt.push(wall);
+        self.sim_tbt.push(sim);
+        self.tokens += new_tokens;
+    }
+
+    pub fn observe_memory(&mut self, gpu: usize, cpu: usize) {
+        self.peak_gpu_kv_bytes = self.peak_gpu_kv_bytes.max(gpu);
+        self.peak_cpu_kv_bytes = self.peak_cpu_kv_bytes.max(cpu);
+    }
+
+    pub fn tbt_summary(&self) -> Option<Summary> {
+        (!self.tbt.is_empty()).then(|| summarize(&self.tbt))
+    }
+
+    pub fn sim_tbt_summary(&self) -> Option<Summary> {
+        (!self.sim_tbt.is_empty()).then(|| summarize(&self.sim_tbt))
+    }
+
+    /// tokens per (wall) second across recorded steps
+    pub fn throughput(&self) -> f64 {
+        let total: f64 = self.tbt.iter().sum();
+        if total > 0.0 {
+            self.tokens as f64 / total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn sim_throughput(&self) -> f64 {
+        let total: f64 = self.sim_tbt.iter().sum();
+        if total > 0.0 {
+            self.tokens as f64 / total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// RAII wall-clock timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut m = Metrics::new();
+        m.record_step(0.5, 0.1, 2);
+        m.record_step(0.5, 0.1, 2);
+        assert!((m.throughput() - 4.0).abs() < 1e-9);
+        assert!((m.sim_throughput() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peaks_are_max() {
+        let mut m = Metrics::new();
+        m.observe_memory(10, 5);
+        m.observe_memory(3, 8);
+        assert_eq!(m.peak_gpu_kv_bytes, 10);
+        assert_eq!(m.peak_cpu_kv_bytes, 8);
+    }
+
+    #[test]
+    fn empty_summary_none() {
+        assert!(Metrics::new().tbt_summary().is_none());
+    }
+}

@@ -1,0 +1,7 @@
+//! Model substrate: the rust reference transformer (oracle), samplers.
+
+pub mod sampler;
+pub mod transformer;
+
+pub use sampler::Sampler;
+pub use transformer::{random_weights, RefModel};

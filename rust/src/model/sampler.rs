@@ -1,0 +1,67 @@
+//! Token sampling: greedy and temperature sampling over byte logits.
+
+use crate::tensor::ops::argmax;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Greedy,
+    Temperature { t: f32, seed: u64 },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u8 {
+        match self {
+            Sampler::Greedy => argmax(logits) as u8,
+            Sampler::Temperature { t, .. } => {
+                let mut p: Vec<f32> = logits.iter().map(|&l| l / t.max(1e-3)).collect();
+                crate::tensor::ops::softmax_lse(&mut p);
+                let r = rng.f32();
+                let mut acc = 0.0;
+                for (i, &w) in p.iter().enumerate() {
+                    acc += w;
+                    if r < acc {
+                        return i as u8;
+                    }
+                }
+                (p.len() - 1) as u8
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut l = vec![0.0f32; 256];
+        l[65] = 10.0;
+        let mut rng = Rng::new(0);
+        assert_eq!(Sampler::Greedy.sample(&l, &mut rng), 65);
+    }
+
+    #[test]
+    fn temperature_respects_strong_peak() {
+        let mut l = vec![-50.0f32; 256];
+        l[66] = 50.0;
+        let mut rng = Rng::new(0);
+        let s = Sampler::Temperature { t: 1.0, seed: 0 };
+        for _ in 0..10 {
+            assert_eq!(s.sample(&l, &mut rng), 66);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_is_diverse_on_flat() {
+        let l = vec![0.0f32; 256];
+        let mut rng = Rng::new(1);
+        let s = Sampler::Temperature { t: 1.0, seed: 0 };
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..64 {
+            seen.insert(s.sample(&l, &mut rng));
+        }
+        assert!(seen.len() > 16);
+    }
+}

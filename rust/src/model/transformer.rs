@@ -1,0 +1,300 @@
+//! Rust-native reference transformer (oracle).
+//!
+//! Mirrors python/compile/model.py::full_forward exactly: byte vocab,
+//! learned positions, pre-LN, GELU FFN, tied LM head. Used for
+//! (a) cross-checking the PJRT artifact path, (b) the full-attention
+//! reference in Table 1, and (c) the attention-pattern analysis
+//! (Figs. 3–5) which needs per-layer attention probabilities.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::ops::{affine, gelu_slice, layernorm, softmax_lse};
+use crate::tensor::{Tensor, Weights};
+
+pub struct LayerRefs<'a> {
+    pub ln1_g: &'a Tensor,
+    pub ln1_b: &'a Tensor,
+    pub wq: &'a Tensor,
+    pub bq: &'a Tensor,
+    pub wk: &'a Tensor,
+    pub bk: &'a Tensor,
+    pub wv: &'a Tensor,
+    pub bv: &'a Tensor,
+    pub wo: &'a Tensor,
+    pub bo: &'a Tensor,
+    pub ln2_g: &'a Tensor,
+    pub ln2_b: &'a Tensor,
+    pub w1: &'a Tensor,
+    pub b1: &'a Tensor,
+    pub w2: &'a Tensor,
+    pub b2: &'a Tensor,
+}
+
+pub struct RefModel {
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+}
+
+impl RefModel {
+    pub fn new(cfg: ModelConfig, weights: Weights) -> Result<RefModel> {
+        // validate presence of every tensor up front
+        for name in ["tok_emb", "pos_emb", "lnf_g", "lnf_b"] {
+            if !weights.contains_key(name) {
+                return Err(anyhow!("missing weight '{name}'"));
+            }
+        }
+        for li in 0..cfg.n_layers {
+            for f in [
+                "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo", "ln2_g",
+                "ln2_b", "w1", "b1", "w2", "b2",
+            ] {
+                let key = format!("layer{li}.{f}");
+                if !weights.contains_key(&key) {
+                    return Err(anyhow!("missing weight '{key}'"));
+                }
+            }
+        }
+        Ok(RefModel { cfg, weights })
+    }
+
+    pub fn layer(&self, li: usize) -> LayerRefs<'_> {
+        let g = |f: &str| &self.weights[&format!("layer{li}.{f}")];
+        LayerRefs {
+            ln1_g: g("ln1_g"),
+            ln1_b: g("ln1_b"),
+            wq: g("wq"),
+            bq: g("bq"),
+            wk: g("wk"),
+            bk: g("bk"),
+            wv: g("wv"),
+            bv: g("bv"),
+            wo: g("wo"),
+            bo: g("bo"),
+            ln2_g: g("ln2_g"),
+            ln2_b: g("ln2_b"),
+            w1: g("w1"),
+            b1: g("b1"),
+            w2: g("w2"),
+            b2: g("b2"),
+        }
+    }
+
+    /// Full causal forward over `tokens`; returns logits [T][vocab] and,
+    /// when `capture` is set, per-layer attention probabilities
+    /// probs[layer][h][t][0..=t].
+    pub fn forward(
+        &self,
+        tokens: &[u8],
+        capture: bool,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<Vec<Vec<f32>>>>) {
+        let cfg = &self.cfg;
+        let (t_len, d, h_n, dh) = (tokens.len(), cfg.d_model, cfg.n_heads, cfg.d_head());
+        let scale = 1.0 / (dh as f32).sqrt();
+        let tok_emb = &self.weights["tok_emb"];
+        let pos_emb = &self.weights["pos_emb"];
+
+        // hidden [T][D]
+        let mut hidden = vec![0.0f32; t_len * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let e = &tok_emb.data[tok as usize * d..(tok as usize + 1) * d];
+            let p = &pos_emb.data[t * d..(t + 1) * d];
+            for j in 0..d {
+                hidden[t * d + j] = e[j] + p[j];
+            }
+        }
+
+        let mut all_probs = Vec::new();
+        let mut x = vec![0.0f32; d];
+        for li in 0..cfg.n_layers {
+            let lw = self.layer(li);
+            // per-head caches for this layer
+            let mut q = vec![0.0f32; t_len * d];
+            let mut k = vec![0.0f32; t_len * d];
+            let mut v = vec![0.0f32; t_len * d];
+            for t in 0..t_len {
+                layernorm(&hidden[t * d..(t + 1) * d], &lw.ln1_g.data, &lw.ln1_b.data, &mut x);
+                affine(&x, lw.wq, &lw.bq.data, &mut q[t * d..(t + 1) * d]);
+                affine(&x, lw.wk, &lw.bk.data, &mut k[t * d..(t + 1) * d]);
+                affine(&x, lw.wv, &lw.bv.data, &mut v[t * d..(t + 1) * d]);
+            }
+            for qv in q.iter_mut() {
+                *qv *= scale;
+            }
+            let mut layer_probs: Vec<Vec<Vec<f32>>> = if capture {
+                vec![Vec::with_capacity(t_len); h_n]
+            } else {
+                Vec::new()
+            };
+            // attention per (t, head): causal over 0..=t
+            let mut o = vec![0.0f32; t_len * d];
+            let mut scores: Vec<f32> = Vec::with_capacity(t_len);
+            for t in 0..t_len {
+                for h in 0..h_n {
+                    let qh = &q[t * d + h * dh..t * d + (h + 1) * dh];
+                    scores.clear();
+                    for s in 0..=t {
+                        let kh = &k[s * d + h * dh..s * d + (h + 1) * dh];
+                        scores.push(crate::tensor::ops::dot(qh, kh));
+                    }
+                    softmax_lse(&mut scores);
+                    let oh = &mut o[t * d + h * dh..t * d + (h + 1) * dh];
+                    for (s, &w) in scores.iter().enumerate() {
+                        let vh = &v[s * d + h * dh..s * d + (h + 1) * dh];
+                        for j in 0..dh {
+                            oh[j] += w * vh[j];
+                        }
+                    }
+                    if capture {
+                        layer_probs[h].push(scores.clone());
+                    }
+                }
+            }
+            if capture {
+                all_probs.push(layer_probs);
+            }
+            // post-attention: projection + residual + FFN
+            let mut y = vec![0.0f32; d];
+            let mut f1 = vec![0.0f32; cfg.d_ffn];
+            let mut f2 = vec![0.0f32; d];
+            for t in 0..t_len {
+                affine(&o[t * d..(t + 1) * d], lw.wo, &lw.bo.data, &mut y);
+                let hrow = &mut hidden[t * d..(t + 1) * d];
+                for j in 0..d {
+                    hrow[j] += y[j];
+                }
+                layernorm(hrow, &lw.ln2_g.data, &lw.ln2_b.data, &mut x);
+                affine(&x, lw.w1, &lw.b1.data, &mut f1);
+                gelu_slice(&mut f1);
+                affine(&f1, lw.w2, &lw.b2.data, &mut f2);
+                for j in 0..d {
+                    hrow[j] += f2[j];
+                }
+            }
+        }
+
+        // LM head (tied): logits[t][v] = ln_f(h) @ tok_emb^T
+        let lnf_g = &self.weights["lnf_g"];
+        let lnf_b = &self.weights["lnf_b"];
+        let vcb = cfg.vocab;
+        let mut logits = vec![vec![0.0f32; vcb]; t_len];
+        for t in 0..t_len {
+            layernorm(&hidden[t * d..(t + 1) * d], &lnf_g.data, &lnf_b.data, &mut x);
+            for tok in 0..vcb {
+                logits[t][tok] =
+                    crate::tensor::ops::dot(&x, &tok_emb.data[tok * d..(tok + 1) * d]);
+            }
+        }
+        (logits, all_probs)
+    }
+
+    /// Teacher-forced perplexity over a byte string (full attention).
+    pub fn perplexity(&self, text: &[u8]) -> f64 {
+        let (logits, _) = self.forward(text, false);
+        let mut nll = 0.0f64;
+        let n = text.len() - 1;
+        for t in 0..n {
+            nll -= crate::tensor::ops::log_softmax_at(&logits[t], text[t + 1] as usize) as f64;
+        }
+        (nll / n as f64).exp()
+    }
+}
+
+/// Synthetic random weights for tests that don't need trained artifacts.
+pub fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+    use crate::util::rng::Rng;
+    fn add(w: &mut Weights, name: String, shape: &[usize], rng: &mut Rng, std: f32) {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        w.insert(name, t);
+    }
+    let mut rng = Rng::new(seed);
+    let mut w = Weights::new();
+    let d = cfg.d_model;
+    add(&mut w, "tok_emb".into(), &[cfg.vocab, d], &mut rng, 0.02);
+    add(&mut w, "pos_emb".into(), &[cfg.max_pos, d], &mut rng, 0.02);
+    for li in 0..cfg.n_layers {
+        for f in ["wq", "wk", "wv", "wo"] {
+            add(&mut w, format!("layer{li}.{f}"), &[d, d], &mut rng, 0.02);
+        }
+        for f in ["bq", "bk", "bv", "bo", "ln1_b", "ln2_b"] {
+            add(&mut w, format!("layer{li}.{f}"), &[d], &mut rng, 0.0);
+        }
+        add(&mut w, format!("layer{li}.w1"), &[d, cfg.d_ffn], &mut rng, 0.02);
+        add(&mut w, format!("layer{li}.b1"), &[cfg.d_ffn], &mut rng, 0.0);
+        add(&mut w, format!("layer{li}.w2"), &[cfg.d_ffn, d], &mut rng, 0.02);
+        add(&mut w, format!("layer{li}.b2"), &[d], &mut rng, 0.0);
+        for f in ["ln1_g", "ln2_g"] {
+            let t = Tensor::full(&[d], 1.0);
+            w.insert(format!("layer{li}.{f}"), t);
+        }
+    }
+    w.insert("lnf_g".into(), Tensor::full(&[d], 1.0));
+    w.insert("lnf_b".into(), Tensor::zeros(&[d]));
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::trained;
+
+    fn small_model() -> RefModel {
+        let mut cfg = trained("tiny-small").unwrap();
+        cfg.max_pos = 64; // keep the random pos_emb small for tests
+        let w = random_weights(&cfg, 42);
+        RefModel::new(cfg, w).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = small_model();
+        let (logits, probs) = m.forward(b"hello", true);
+        assert_eq!(logits.len(), 5);
+        assert_eq!(logits[0].len(), 256);
+        assert_eq!(probs.len(), m.cfg.n_layers);
+        assert_eq!(probs[0].len(), m.cfg.n_heads);
+        assert_eq!(probs[0][0][3].len(), 4); // causal: t=3 sees 4 entries
+    }
+
+    #[test]
+    fn probs_rows_sum_to_one() {
+        let m = small_model();
+        let (_, probs) = m.forward(b"abcdef", true);
+        for lp in &probs {
+            for hp in lp {
+                for row in hp {
+                    let s: f32 = row.iter().sum();
+                    assert!((s - 1.0).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn causality_prefix_invariance() {
+        // logits at position t must not depend on later tokens
+        let m = small_model();
+        let (a, _) = m.forward(b"abcXYZ", false);
+        let (b, _) = m.forward(b"abcQQQ", false);
+        for j in 0..256 {
+            assert!((a[2][j] - b[2][j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn missing_weight_rejected() {
+        let mut cfg = trained("tiny-small").unwrap();
+        cfg.max_pos = 16;
+        let mut w = random_weights(&cfg, 0);
+        w.remove("layer1.wq");
+        assert!(RefModel::new(cfg, w).is_err());
+    }
+
+    #[test]
+    fn perplexity_finite_positive() {
+        let m = small_model();
+        let p = m.perplexity(b"the quick brown fox");
+        assert!(p.is_finite() && p > 1.0);
+    }
+}

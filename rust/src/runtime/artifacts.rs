@@ -1,0 +1,204 @@
+//! Artifact manifest — the contract between python/compile/aot.py and the
+//! rust runtime. Parses artifacts/manifest.json and answers "which compiled
+//! executable serves (model, kind, batch, window)?".
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub model: String,
+    pub kind: String,
+    pub name: String,
+    pub file: PathBuf,
+    pub batch: usize,
+    pub window: usize,
+    pub chunk: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelConfig>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.req_str("name")?.to_string(),
+        shape: j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+            .collect::<Result<_>>()?,
+        dtype: j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("float32")
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.req("models")?.as_obj() {
+            for (name, mj) in obj {
+                models.insert(name.clone(), ModelConfig::from_json(mj)?);
+            }
+        }
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            artifacts.push(ArtifactMeta {
+                model: a.req_str("model")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                name: a.req_str("name")?.to_string(),
+                file: dir.join(a.req_str("file")?),
+                batch: a.req_usize("batch")?,
+                window: a.req_usize("window")?,
+                chunk: a.req_usize("chunk")?,
+                inputs: a
+                    .req_arr("inputs")?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            artifacts,
+        })
+    }
+
+    /// Find the artifact for (model, kind) with exact batch and, for
+    /// attention kinds, exact window.
+    pub fn find(
+        &self,
+        model: &str,
+        kind: &str,
+        batch: usize,
+        window: Option<usize>,
+    ) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.model == model
+                    && a.kind == kind
+                    && a.batch == batch
+                    && window.is_none_or(|w| a.window == w)
+            })
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for model={model} kind={kind} batch={batch} window={window:?}; \
+                     available: {:?}",
+                    self.artifacts
+                        .iter()
+                        .filter(|a| a.model == model)
+                        .map(|a| (&a.kind, a.batch, a.window))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Window sizes compiled for a model (ascending).
+    pub fn windows_for(&self, model: &str) -> Vec<usize> {
+        let mut w: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kind == "attn_step")
+            .map(|a| a.window)
+            .collect();
+        w.sort_unstable();
+        w.dedup();
+        w
+    }
+
+    pub fn batches_for(&self, model: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.kind == "attn_step")
+            .map(|a| a.batch)
+            .collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {"tiny": {"name":"tiny","vocab":256,"n_layers":4,"d_model":128,
+                 "n_heads":4,"d_ffn":512,"max_pos":20480,"d_head":32}},
+      "artifacts": [
+        {"model":"tiny","kind":"attn_step","name":"tiny__attn_d_b1_w256",
+         "file":"tiny__attn_d_b1_w256.hlo.txt","batch":1,"window":256,"chunk":64,
+         "inputs":[{"name":"hidden","shape":[1,1,128],"dtype":"float32"}],
+         "outputs":[{"name":"q","shape":[1,4,1,32]}]},
+        {"model":"tiny","kind":"attn_step","name":"tiny__attn_d_b4_w1024",
+         "file":"f2.hlo.txt","batch":4,"window":1024,"chunk":64,
+         "inputs":[],"outputs":[]}
+      ]
+    }"#;
+
+    fn manifest() -> Manifest {
+        let dir = std::env::temp_dir().join("hgca_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_models_and_artifacts() {
+        let m = manifest();
+        assert_eq!(m.models["tiny"].n_layers, 4);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].inputs[0].shape, vec![1, 1, 128]);
+    }
+
+    #[test]
+    fn find_exact_match() {
+        let m = manifest();
+        let a = m.find("tiny", "attn_step", 1, Some(256)).unwrap();
+        assert_eq!(a.name, "tiny__attn_d_b1_w256");
+        assert!(m.find("tiny", "attn_step", 2, Some(256)).is_err());
+        assert!(m.find("tiny", "attn_step", 1, Some(512)).is_err());
+    }
+
+    #[test]
+    fn windows_and_batches() {
+        let m = manifest();
+        assert_eq!(m.windows_for("tiny"), vec![256, 1024]);
+        assert_eq!(m.batches_for("tiny"), vec![1, 4]);
+        assert!(m.windows_for("nope").is_empty());
+    }
+}

@@ -1,0 +1,136 @@
+//! Typed entry points over the compiled artifacts — the exact call
+//! sequence of Algorithm 2's GPU half, one call per (layer, step).
+
+use anyhow::Result;
+
+use super::pjrt::{Arg, ModelRuntime};
+
+/// Outputs of one attn_step call (shapes: B=batch, H=heads, N=queries,
+/// dh=d_head, S=window+N).
+#[derive(Debug, Clone)]
+pub struct AttnOut {
+    pub q: Vec<f32>,     // [B,H,N,dh] (pre-scaled)
+    pub k_new: Vec<f32>, // [B,H,N,dh]
+    pub v_new: Vec<f32>,
+    pub o_gpu: Vec<f32>, // [B,H,N,dh]
+    pub lse: Vec<f32>,   // [B,H,N]
+    pub a_sum: Vec<f32>, // [B,H,S]
+}
+
+pub struct Executor<'m> {
+    pub mr: &'m ModelRuntime,
+}
+
+impl<'m> Executor<'m> {
+    pub fn new(mr: &'m ModelRuntime) -> Self {
+        Executor { mr }
+    }
+
+    /// tokens/positions: [B,N] i32 → hidden [B,N,D].
+    pub fn embed(&self, batch: usize, n: usize, tokens: &[i32], positions: &[i32]) -> Result<Vec<f32>> {
+        let meta = self.mr.find_artifact("embed", batch, None, n)?.clone();
+        let out = self.mr.call(
+            &meta,
+            &[
+                Arg::I32(tokens, vec![batch, n]),
+                Arg::I32(positions, vec![batch, n]),
+                Arg::Weight("tok_emb"),
+                Arg::Weight("pos_emb"),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// GPU half of one hybrid attention layer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attn_step(
+        &self,
+        layer: usize,
+        batch: usize,
+        window: usize,
+        n: usize,
+        hidden: &[f32],
+        k_win: &[f32],
+        v_win: &[f32],
+        win_len: &[i32],
+        n_valid: &[i32],
+    ) -> Result<AttnOut> {
+        let cfg = &self.mr.cfg;
+        let (h, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
+        let meta = self.mr.find_artifact("attn_step", batch, Some(window), n)?.clone();
+        let l = |f: &str| format!("layer{layer}.{f}");
+        let out = self.mr.call(
+            &meta,
+            &[
+                Arg::F32(hidden, vec![batch, n, d]),
+                Arg::Weight(&l("ln1_g")),
+                Arg::Weight(&l("ln1_b")),
+                Arg::Weight(&l("wq")),
+                Arg::Weight(&l("bq")),
+                Arg::Weight(&l("wk")),
+                Arg::Weight(&l("bk")),
+                Arg::Weight(&l("wv")),
+                Arg::Weight(&l("bv")),
+                Arg::F32(k_win, vec![batch, h, window, dh]),
+                Arg::F32(v_win, vec![batch, h, window, dh]),
+                Arg::I32(win_len, vec![batch]),
+                Arg::I32(n_valid, vec![batch]),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        Ok(AttnOut {
+            q: it.next().unwrap(),
+            k_new: it.next().unwrap(),
+            v_new: it.next().unwrap(),
+            o_gpu: it.next().unwrap(),
+            lse: it.next().unwrap(),
+            a_sum: it.next().unwrap(),
+        })
+    }
+
+    /// Output projection + residual + FFN after the merge.
+    pub fn post_attn(
+        &self,
+        layer: usize,
+        batch: usize,
+        n: usize,
+        hidden: &[f32],
+        o_merged: &[f32],
+    ) -> Result<Vec<f32>> {
+        let d = self.mr.cfg.d_model;
+        let meta = self.mr.find_artifact("post_attn", batch, None, n)?.clone();
+        let l = |f: &str| format!("layer{layer}.{f}");
+        let out = self.mr.call(
+            &meta,
+            &[
+                Arg::F32(hidden, vec![batch, n, d]),
+                Arg::F32(o_merged, vec![batch, n, d]),
+                Arg::Weight(&l("wo")),
+                Arg::Weight(&l("bo")),
+                Arg::Weight(&l("ln2_g")),
+                Arg::Weight(&l("ln2_b")),
+                Arg::Weight(&l("w1")),
+                Arg::Weight(&l("b1")),
+                Arg::Weight(&l("w2")),
+                Arg::Weight(&l("b2")),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// hidden [B,1,D] → logits [B,1,V].
+    pub fn lm_head(&self, batch: usize, hidden: &[f32]) -> Result<Vec<f32>> {
+        let d = self.mr.cfg.d_model;
+        let meta = self.mr.find_artifact("lm_head", batch, None, 1)?.clone();
+        let out = self.mr.call(
+            &meta,
+            &[
+                Arg::F32(hidden, vec![batch, 1, d]),
+                Arg::Weight("lnf_g"),
+                Arg::Weight("lnf_b"),
+                Arg::Weight("tok_emb"),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}

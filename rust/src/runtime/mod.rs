@@ -1,0 +1,11 @@
+//! PJRT runtime: manifest-driven artifact loading + typed execution.
+//! The compiled XLA executables are the system's "GPU device"
+//! (DESIGN.md §1 hardware substitution).
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use executor::{AttnOut, Executor};
+pub use pjrt::{Arg, ModelRuntime, PjrtRuntime};

@@ -1,0 +1,252 @@
+//! PJRT execution: load HLO-text artifacts, compile once on the CPU PJRT
+//! client (our stand-in "GPU" device, DESIGN.md §1), keep model weights
+//! resident as device buffers, and execute typed entry points.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::Weights;
+
+use super::artifacts::{ArtifactMeta, Manifest};
+
+/// Shared PJRT client + manifest.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifact_dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
+        Ok(PjrtRuntime { client, manifest })
+    }
+
+    /// Load a trained model: host weights (for the CPU attention path and
+    /// the oracle) + device-resident weight buffers + compiled executables
+    /// for every artifact of this model.
+    pub fn load_model(self: &Rc<Self>, name: &str) -> Result<ModelRuntime> {
+        let cfg = self
+            .manifest
+            .models
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))?;
+        let weights = crate::tensor::weights::load(&self.manifest.dir.join(format!("{name}.hgw")))?;
+        ModelRuntime::new(Rc::clone(self), cfg, weights)
+    }
+}
+
+/// Cumulative PJRT-path timing (perf diagnostics, EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub calls: u64,
+    pub exec_secs: f64,
+    pub upload_secs: f64,
+    pub download_secs: f64,
+    pub compile_secs: f64,
+}
+
+pub struct ModelRuntime {
+    pub rt: Rc<PjrtRuntime>,
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+    /// device-resident weight buffers, uploaded once (execute_b path)
+    wbufs: BTreeMap<String, xla::PjRtBuffer>,
+    /// compiled executables keyed by artifact name
+    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RefCell<RuntimeStats>,
+}
+
+/// An argument to an artifact call.
+pub enum Arg<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+    /// named model weight (device-resident)
+    Weight(&'a str),
+}
+
+impl ModelRuntime {
+    fn new(rt: Rc<PjrtRuntime>, cfg: ModelConfig, weights: Weights) -> Result<ModelRuntime> {
+        let mut wbufs = BTreeMap::new();
+        for (name, t) in &weights {
+            let buf = rt
+                .client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                .map_err(|e| anyhow!("uploading weight {name}: {e:?}"))?;
+            wbufs.insert(name.clone(), buf);
+        }
+        Ok(ModelRuntime {
+            rt,
+            cfg,
+            weights,
+            wbufs,
+            exes: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Construct from in-memory weights (tests with random weights).
+    pub fn from_weights(rt: Rc<PjrtRuntime>, cfg: ModelConfig, weights: Weights) -> Result<ModelRuntime> {
+        Self::new(rt, cfg, weights)
+    }
+
+    pub fn find_artifact(
+        &self,
+        kind: &str,
+        batch: usize,
+        window: Option<usize>,
+        n: usize,
+    ) -> Result<&ArtifactMeta> {
+        self.rt
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| {
+                a.model == self.cfg.name
+                    && a.kind == kind
+                    && a.batch == batch
+                    && window.is_none_or(|w| a.window == w)
+                    && a.inputs
+                        .first()
+                        .map(|i| i.shape.get(1).copied().unwrap_or(1) == n)
+                        .unwrap_or(false)
+            })
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact: model={} kind={kind} batch={batch} window={window:?} n={n}",
+                    self.cfg.name
+                )
+            })
+    }
+
+    fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&meta.name) {
+            return Ok(Rc::clone(e));
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .rt
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+        self.stats.borrow_mut().compile_secs += t0.elapsed().as_secs_f64();
+        let exe = Rc::new(exe);
+        self.exes
+            .borrow_mut()
+            .insert(meta.name.clone(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact of this model (avoids first-call
+    /// latency spikes on the serving path).
+    pub fn warmup(&self) -> Result<usize> {
+        let metas: Vec<ArtifactMeta> = self
+            .rt
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == self.cfg.name)
+            .cloned()
+            .collect();
+        for m in &metas {
+            self.executable(m)?;
+        }
+        Ok(metas.len())
+    }
+
+    /// Execute an artifact. Inputs must match the manifest order; weights
+    /// come from the resident buffers, dynamic tensors are uploaded here.
+    /// Returns the tuple elements as f32 vectors.
+    pub fn call(&self, meta: &ArtifactMeta, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            args.len() == meta.inputs.len(),
+            "{}: {} args for {} declared inputs",
+            meta.name,
+            args.len(),
+            meta.inputs.len()
+        );
+        let exe = self.executable(meta)?;
+        let client = &self.rt.client;
+
+        let t_up = Instant::now();
+        // uploaded dynamic buffers live here; arg_refs borrows both these
+        // and the resident weight buffers
+        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut arg_refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        // two passes: upload first (so the vec doesn't reallocate while borrowed)
+        for a in args {
+            match a {
+                Arg::F32(data, dims) => {
+                    let b = client
+                        .buffer_from_host_buffer::<f32>(data, dims, None)
+                        .map_err(|e| anyhow!("upload f32: {e:?}"))?;
+                    uploaded.push(b);
+                }
+                Arg::I32(data, dims) => {
+                    let b = client
+                        .buffer_from_host_buffer::<i32>(data, dims, None)
+                        .map_err(|e| anyhow!("upload i32: {e:?}"))?;
+                    uploaded.push(b);
+                }
+                Arg::Weight(_) => {}
+            }
+        }
+        let mut up_iter = uploaded.iter();
+        for a in args {
+            match a {
+                Arg::F32(..) | Arg::I32(..) => arg_refs.push(up_iter.next().unwrap()),
+                Arg::Weight(name) => arg_refs.push(
+                    self.wbufs
+                        .get(*name)
+                        .ok_or_else(|| anyhow!("no weight buffer '{name}'"))?,
+                ),
+            }
+        }
+        let upload = t_up.elapsed().as_secs_f64();
+
+        let t_ex = Instant::now();
+        let out = exe
+            .execute_b(&arg_refs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?;
+        let exec = t_ex.elapsed().as_secs_f64();
+
+        let t_dl = Instant::now();
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        let mut res = Vec::with_capacity(parts.len());
+        for p in parts {
+            res.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        let download = t_dl.elapsed().as_secs_f64();
+
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.exec_secs += exec;
+        st.upload_secs += upload;
+        st.download_secs += download;
+
+        anyhow::ensure!(
+            res.len() == meta.outputs.len(),
+            "{}: got {} outputs, manifest declares {}",
+            meta.name,
+            res.len(),
+            meta.outputs.len()
+        );
+        Ok(res)
+    }
+}

@@ -1,0 +1,157 @@
+//! JSON API: request routing + the engine service loop.
+//!
+//! Endpoints:
+//!   POST /v1/generate  {"prompt": "...", "max_new_tokens": 32}
+//!   GET  /v1/metrics   → serving metrics snapshot
+//!   GET  /health
+
+use std::sync::mpsc::Receiver;
+
+use anyhow::Result;
+
+use crate::engine::batcher::{Batcher, Request};
+use crate::engine::Engine;
+use crate::util::json::Json;
+
+use super::http::{HttpResponse, Incoming};
+
+pub fn handle_generate(engine: &mut Engine<'_>, body: &str, next_id: u64) -> HttpResponse {
+    let parsed = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return HttpResponse::json(400, format!(r#"{{"error":"bad json: {e}"}}"#)),
+    };
+    let prompt = parsed
+        .get("prompt")
+        .and_then(|p| p.as_str())
+        .unwrap_or("")
+        .as_bytes()
+        .to_vec();
+    if prompt.is_empty() {
+        return HttpResponse::json(400, r#"{"error":"empty prompt"}"#.into());
+    }
+    let max_new = parsed
+        .get("max_new_tokens")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(32);
+
+    let mut seq = engine.new_sequence(next_id, &prompt);
+    match engine.generate(&mut seq, max_new) {
+        Ok(tokens) => {
+            let text = String::from_utf8_lossy(&tokens).to_string();
+            let out = Json::obj(vec![
+                ("id", Json::num(next_id as f64)),
+                ("text", Json::str(text)),
+                ("prompt_tokens", Json::num(prompt.len() as f64)),
+                ("completion_tokens", Json::num(tokens.len() as f64)),
+            ]);
+            HttpResponse::json(200, out.to_string())
+        }
+        Err(e) => HttpResponse::json(500, format!(r#"{{"error":"{e}"}}"#)),
+    }
+}
+
+pub fn handle_metrics(engine: &Engine<'_>) -> HttpResponse {
+    let m = &engine.metrics;
+    let tbt = m.tbt_summary();
+    let out = Json::obj(vec![
+        ("tokens", Json::num(m.tokens as f64)),
+        ("prefill_tokens", Json::num(m.prefill_tokens as f64)),
+        ("throughput_tok_s", Json::num(m.throughput())),
+        ("sim_throughput_tok_s", Json::num(m.sim_throughput())),
+        (
+            "tbt_p50_ms",
+            Json::num(tbt.as_ref().map(|s| s.p50 * 1e3).unwrap_or(0.0)),
+        ),
+        (
+            "tbt_p99_ms",
+            Json::num(tbt.as_ref().map(|s| s.p99 * 1e3).unwrap_or(0.0)),
+        ),
+        ("peak_gpu_kv_bytes", Json::num(m.peak_gpu_kv_bytes as f64)),
+        ("peak_cpu_kv_bytes", Json::num(m.peak_cpu_kv_bytes as f64)),
+        ("policy", Json::str(engine.policy.name())),
+    ]);
+    HttpResponse::json(200, out.to_string())
+}
+
+/// The engine service loop: single thread owns the PJRT runtime and serves
+/// requests from the HTTP acceptor. Uses the continuous batcher when
+/// multiple requests are queued.
+pub fn engine_loop(engine: &mut Engine<'_>, rx: Receiver<Incoming>, batch: usize) -> Result<()> {
+    let mut next_id = 0u64;
+    let mut batcher = Batcher::new(batch);
+    for inc in rx {
+        match (inc.req.method.as_str(), inc.req.path.as_str()) {
+            ("GET", "/health") => {
+                let _ = inc.reply.send(HttpResponse::json(200, r#"{"ok":true}"#.into()));
+            }
+            ("GET", "/v1/metrics") => {
+                let _ = inc.reply.send(handle_metrics(engine));
+            }
+            ("POST", "/v1/generate") => {
+                next_id += 1;
+                // fast path: serve immediately (single in-flight request);
+                // the batcher path is exercised by serve_bench which floods
+                // requests through submit() directly.
+                let resp = handle_generate(engine, &inc.req.body, next_id);
+                let _ = inc.reply.send(resp);
+            }
+            ("POST", "/v1/batch") => {
+                // batch probe: {"prompts": [...], "max_new_tokens": n}
+                next_id += 1;
+                let resp = handle_batch(engine, &mut batcher, &inc.req.body, &mut next_id);
+                let _ = inc.reply.send(resp);
+            }
+            _ => {
+                let _ = inc
+                    .reply
+                    .send(HttpResponse::json(404, r#"{"error":"not found"}"#.into()));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_batch(
+    engine: &mut Engine<'_>,
+    batcher: &mut Batcher,
+    body: &str,
+    next_id: &mut u64,
+) -> HttpResponse {
+    let parsed = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return HttpResponse::json(400, format!(r#"{{"error":"bad json: {e}"}}"#)),
+    };
+    let Some(prompts) = parsed.get("prompts").and_then(|p| p.as_arr()) else {
+        return HttpResponse::json(400, r#"{"error":"missing prompts"}"#.into());
+    };
+    let max_new = parsed
+        .get("max_new_tokens")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(16);
+    for p in prompts {
+        let Some(text) = p.as_str() else {
+            return HttpResponse::json(400, r#"{"error":"prompt not a string"}"#.into());
+        };
+        *next_id += 1;
+        batcher.submit(Request {
+            id: *next_id,
+            prompt: text.as_bytes().to_vec(),
+            max_new_tokens: max_new,
+        });
+    }
+    match batcher.run_to_completion(engine) {
+        Ok(done) => {
+            let items: Vec<Json> = done
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("id", Json::num(c.id as f64)),
+                        ("text", Json::str(String::from_utf8_lossy(&c.text).to_string())),
+                    ])
+                })
+                .collect();
+            HttpResponse::json(200, Json::obj(vec![("completions", Json::arr(items))]).to_string())
+        }
+        Err(e) => HttpResponse::json(500, format!(r#"{{"error":"{e}"}}"#)),
+    }
+}

@@ -1,0 +1,163 @@
+//! Minimal HTTP/1.1 server over std::net (tokio/hyper are not in the
+//! vendored registry). One acceptor thread + a worker pool feeding the
+//! single-threaded engine loop through channels — Python never appears on
+//! this path; the engine thread owns the PJRT runtime.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: String) -> HttpResponse {
+        HttpResponse { status, body }
+    }
+}
+
+pub fn parse_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("bad request line"))?.to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    if content_len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).to_string(),
+    })
+}
+
+pub fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> Result<()> {
+    let reason = match resp.status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        resp.status,
+        reason,
+        resp.body.len(),
+        resp.body
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// A parsed request paired with a one-shot reply channel.
+pub struct Incoming {
+    pub req: HttpRequest,
+    pub reply: Sender<HttpResponse>,
+}
+
+/// Accept loop: parses each connection and forwards it to the engine
+/// thread; replies synchronously when the engine answers. Returns the
+/// bound local address (port 0 supported for tests).
+pub fn serve(addr: &str, tx: Sender<Incoming>) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let handle = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let resp = match parse_request(&mut stream) {
+                    Ok(req) => {
+                        let (rtx, rrx): (Sender<HttpResponse>, Receiver<HttpResponse>) =
+                            std::sync::mpsc::channel();
+                        if tx.send(Incoming { req, reply: rtx }).is_ok() {
+                            rrx.recv().unwrap_or(HttpResponse::json(
+                                500,
+                                r#"{"error":"engine gone"}"#.into(),
+                            ))
+                        } else {
+                            HttpResponse::json(500, r#"{"error":"server shutting down"}"#.into())
+                        }
+                    }
+                    Err(e) => HttpResponse::json(400, format!(r#"{{"error":"{e}"}}"#)),
+                };
+                let _ = write_response(&mut stream, &resp);
+            });
+        }
+    });
+    Ok((local, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_over_loopback() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (addr, _h) = serve("127.0.0.1:0", tx).unwrap();
+        // echo engine
+        std::thread::spawn(move || {
+            for inc in rx {
+                let body = format!(
+                    r#"{{"path":"{}","echo":{}}}"#,
+                    inc.req.path,
+                    if inc.req.body.is_empty() { "null".into() } else { inc.req.body.clone() }
+                );
+                let _ = inc.reply.send(HttpResponse::json(200, body));
+            }
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "POST /gen HTTP/1.1\r\nContent-Length: 8\r\n\r\n{{\"a\": 1}}"
+        )
+        .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200"));
+        assert!(out.contains(r#""path":"/gen""#));
+        assert!(out.contains(r#""a": 1"#));
+    }
+
+    #[test]
+    fn bad_request_line_is_400() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let (addr, _h) = serve("127.0.0.1:0", tx).unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400"));
+    }
+}

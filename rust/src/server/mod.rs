@@ -1,0 +1,6 @@
+//! Serving front-end: std-net HTTP server + JSON API + engine service loop.
+
+pub mod api;
+pub mod http;
+
+pub use http::{serve, HttpRequest, HttpResponse, Incoming};

@@ -1,0 +1,147 @@
+//! Labeled time breakdowns + a simulated clock.
+//!
+//! Benches report *where* simulated time goes (GPU compute, PCIe, CPU
+//! compute, merge) exactly like the paper's Fig. 6/11 stacked bars.
+
+use std::collections::BTreeMap;
+
+/// An ordered list of (label, seconds) segments.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Breakdown {
+    pub segments: Vec<(String, f64)>,
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, label: &str, secs: f64) -> &mut Self {
+        self.segments.push((label.to_string(), secs));
+        self
+    }
+
+    pub fn total(&self) -> f64 {
+        self.segments.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn get(&self, label: &str) -> f64 {
+        self.segments
+            .iter()
+            .filter(|(l, _)| l == label)
+            .map(|(_, s)| s)
+            .sum()
+    }
+
+    /// Merge another breakdown's segments into this one (summing by label,
+    /// preserving first-seen order).
+    pub fn absorb(&mut self, other: &Breakdown) {
+        for (l, s) in &other.segments {
+            if let Some(seg) = self.segments.iter_mut().find(|(sl, _)| sl == l) {
+                seg.1 += s;
+            } else {
+                self.segments.push((l.clone(), *s));
+            }
+        }
+    }
+
+    /// Collapse duplicate labels.
+    pub fn collapsed(&self) -> Breakdown {
+        let mut order = Vec::new();
+        let mut sums: BTreeMap<String, f64> = BTreeMap::new();
+        for (l, s) in &self.segments {
+            if !sums.contains_key(l) {
+                order.push(l.clone());
+            }
+            *sums.entry(l.clone()).or_insert(0.0) += s;
+        }
+        Breakdown {
+            segments: order.into_iter().map(|l| (l.clone(), sums[&l])).collect(),
+        }
+    }
+}
+
+/// Simulated wall clock for end-to-end runs: serial sections accumulate;
+/// `parallel` takes the max of two concurrent sections (the paper's
+/// CPU∥GPU overlap in Algorithm 2).
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    pub now: f64,
+    pub breakdown: Breakdown,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&mut self, label: &str, secs: f64) {
+        self.now += secs;
+        self.breakdown.add(label, secs);
+    }
+
+    /// Two sections run concurrently; wall time advances by the max. The
+    /// breakdown records both (so stacked bars still show each device's
+    /// busy time) plus an `overlap_saved` credit segment.
+    pub fn parallel(&mut self, a: (&str, f64), b: (&str, f64)) {
+        let wall = a.1.max(b.1);
+        self.now += wall;
+        self.breakdown.add(a.0, a.1);
+        self.breakdown.add(b.0, b.1);
+        self.breakdown.add("overlap_saved", wall - a.1 - b.1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_and_get() {
+        let mut b = Breakdown::new();
+        b.add("x", 1.0).add("y", 2.0).add("x", 0.5);
+        assert!((b.total() - 3.5).abs() < 1e-12);
+        assert!((b.get("x") - 1.5).abs() < 1e-12);
+        assert_eq!(b.get("zzz"), 0.0);
+    }
+
+    #[test]
+    fn collapse_sums_duplicates_in_order() {
+        let mut b = Breakdown::new();
+        b.add("x", 1.0).add("y", 2.0).add("x", 3.0);
+        let c = b.collapsed();
+        assert_eq!(c.segments.len(), 2);
+        assert_eq!(c.segments[0], ("x".to_string(), 4.0));
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = Breakdown::new();
+        a.add("x", 1.0);
+        let mut b = Breakdown::new();
+        b.add("x", 2.0).add("y", 3.0);
+        a.absorb(&b);
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+
+    #[test]
+    fn parallel_advances_by_max() {
+        let mut c = SimClock::new();
+        c.parallel(("gpu", 2.0), ("cpu", 5.0));
+        assert_eq!(c.now, 5.0);
+        // busy time recorded per device
+        assert_eq!(c.breakdown.get("gpu"), 2.0);
+        assert_eq!(c.breakdown.get("cpu"), 5.0);
+        // wall = busy_total + overlap_saved
+        assert!((c.breakdown.total() - c.now).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_advance() {
+        let mut c = SimClock::new();
+        c.advance("a", 1.5);
+        c.advance("b", 0.5);
+        assert_eq!(c.now, 2.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Device cost model: roofline execution-time estimates for compute devices.
+//!
+//! The paper's performance results depend on A6000 / Xeon-6430 / PCIe-4.0
+//! hardware we do not have (repro band 0); per DESIGN.md §1 we replace the
+//! hardware with an analytic roofline model — the exact model the paper's own
+//! Figure 1 reasons with — parameterized by published peak FLOPS and memory
+//! bandwidth. All simulated results are labeled `sim` in bench output.
+
+/// A compute device with a two-ceiling roofline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Peak dense FLOP/s at the serving precision (fp16 for GPU presets).
+    pub peak_flops: f64,
+    /// Peak memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Fixed per-kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA RTX A6000 (paper §1: 38.7 TFLOPS fp16, 768 GB/s GDDR6).
+    pub fn a6000() -> DeviceSpec {
+        DeviceSpec {
+            name: "a6000".into(),
+            peak_flops: 38.7e12,
+            mem_bw: 768e9,
+            launch_overhead: 8e-6,
+        }
+    }
+
+    /// Intel Xeon Gold 6430 socket (paper §1: 1.229 TFLOPS fp16 AMX;
+    /// 8×DDR5-4400 ≈ 280 GB/s per socket as configured in the paper's
+    /// testbed — the 500 GB/s figure in §1 assumes 32 fully-populated slots).
+    pub fn xeon6430() -> DeviceSpec {
+        DeviceSpec {
+            name: "xeon6430".into(),
+            peak_flops: 1.229e12,
+            mem_bw: 280e9,
+            launch_overhead: 2e-6,
+        }
+    }
+
+    /// Roofline time for an op with the given work. The `efficiency`
+    /// de-rates peak (attention kernels don't hit peak; 0 < e <= 1).
+    pub fn op_time(&self, flops: f64, bytes: f64, efficiency: f64) -> f64 {
+        assert!(efficiency > 0.0 && efficiency <= 1.0);
+        let compute = flops / (self.peak_flops * efficiency);
+        let memory = bytes / self.mem_bw;
+        self.launch_overhead + compute.max(memory)
+    }
+
+    /// Operational intensity (FLOP/byte) at which this device transitions
+    /// from memory-bound to compute-bound (the roofline knee).
+    pub fn ridge_intensity(&self) -> f64 {
+        self.peak_flops / self.mem_bw
+    }
+
+    /// Attainable FLOP/s at a given operational intensity (Fig. 1's roof).
+    pub fn attainable_flops(&self, intensity: f64) -> f64 {
+        (intensity * self.mem_bw).min(self.peak_flops)
+    }
+}
+
+/// Work characterization of one attention call (the paper's decode/append
+/// taxonomy, §2). All sizes in elements; bytes_per_el is the KV precision.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnWork {
+    pub batch: usize,
+    pub heads: usize,
+    pub d_head: usize,
+    /// queries per sequence (1 = decode, >1 = append/prefill)
+    pub n_query: usize,
+    /// KV entries attended per sequence
+    pub n_kv: usize,
+    pub bytes_per_el: usize,
+}
+
+impl AttnWork {
+    /// 2·B·H·N·N'·dh for QKᵀ plus the same for P·V.
+    pub fn flops(&self) -> f64 {
+        4.0 * self.batch as f64
+            * self.heads as f64
+            * self.n_query as f64
+            * self.n_kv as f64
+            * self.d_head as f64
+    }
+
+    /// Dominant traffic: K and V streamed once; Q/O are N·dh (small).
+    pub fn bytes(&self) -> f64 {
+        let kv = 2.0 * self.batch as f64 * self.heads as f64 * self.n_kv as f64 * self.d_head as f64;
+        let qo = 2.0 * self.batch as f64 * self.heads as f64 * self.n_query as f64 * self.d_head as f64;
+        (kv + qo) * self.bytes_per_el as f64
+    }
+
+    pub fn kv_bytes(&self) -> f64 {
+        2.0 * self.batch as f64
+            * self.heads as f64
+            * self.n_kv as f64
+            * self.d_head as f64
+            * self.bytes_per_el as f64
+    }
+
+    pub fn intensity(&self) -> f64 {
+        self.flops() / self.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode_work(n_kv: usize) -> AttnWork {
+        AttnWork {
+            batch: 1,
+            heads: 32,
+            d_head: 128,
+            n_query: 1,
+            n_kv,
+            bytes_per_el: 2,
+        }
+    }
+
+    #[test]
+    fn decode_is_memory_bound_on_gpu() {
+        // paper Fig. 1: decode sits far left of the GPU ridge
+        let w = decode_work(4096);
+        let gpu = DeviceSpec::a6000();
+        assert!(w.intensity() < gpu.ridge_intensity());
+        // memory term must dominate
+        let t = gpu.op_time(w.flops(), w.bytes(), 1.0) - gpu.launch_overhead;
+        let mem_t = w.bytes() / gpu.mem_bw;
+        assert!((t - mem_t).abs() / mem_t < 1e-9);
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_on_gpu() {
+        // 1:1 query:kv ratio with long sequences → right of the ridge
+        let w = AttnWork {
+            batch: 8,
+            heads: 32,
+            d_head: 128,
+            n_query: 2048,
+            n_kv: 2048,
+            bytes_per_el: 2,
+        };
+        assert!(w.intensity() > DeviceSpec::a6000().ridge_intensity());
+    }
+
+    #[test]
+    fn cpu_gpu_bandwidth_gap_is_narrow() {
+        // paper's core motivation: TFLOPS gap ≥ 10×, bandwidth gap < 3×
+        let gpu = DeviceSpec::a6000();
+        let cpu = DeviceSpec::xeon6430();
+        assert!(gpu.peak_flops / cpu.peak_flops > 10.0);
+        assert!(gpu.mem_bw / cpu.mem_bw < 3.0);
+    }
+
+    #[test]
+    fn attainable_flops_clips_at_peak() {
+        let gpu = DeviceSpec::a6000();
+        let knee = gpu.ridge_intensity();
+        assert!(gpu.attainable_flops(knee * 10.0) == gpu.peak_flops);
+        assert!(gpu.attainable_flops(knee / 10.0) < gpu.peak_flops);
+    }
+
+    #[test]
+    fn op_time_monotonic_in_work() {
+        let gpu = DeviceSpec::a6000();
+        let t1 = gpu.op_time(1e9, 1e6, 1.0);
+        let t2 = gpu.op_time(2e9, 1e6, 1.0);
+        assert!(t2 >= t1);
+    }
+
+    #[test]
+    fn flops_bytes_formulas() {
+        let w = decode_work(1000);
+        // flops = 4 * 1 * 32 * 1 * 1000 * 128
+        assert_eq!(w.flops(), 4.0 * 32.0 * 1000.0 * 128.0);
+        // kv bytes = 2 * 32 * 1000 * 128 * 2
+        assert_eq!(w.kv_bytes(), 2.0 * 32.0 * 1000.0 * 128.0 * 2.0);
+    }
+}

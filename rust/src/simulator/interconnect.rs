@@ -1,0 +1,98 @@
+//! Host↔device interconnect model (PCIe 4.0 by default).
+//!
+//! The paper's Fig. 6/10/11 show KV-cache transfers over PCIe dominating
+//! GPU-attention latency; this module provides the transfer-time arithmetic
+//! those benches use, including the tiny zero-copy merge transfer HGCA
+//! performs instead of moving raw KV tensors.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Interconnect {
+    pub name: String,
+    /// Unidirectional bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Per-transfer latency (DMA setup + driver), seconds.
+    pub latency: f64,
+    /// Achievable fraction of nameplate bandwidth for large DMA (0–1).
+    pub efficiency: f64,
+}
+
+impl Interconnect {
+    /// PCIe 4.0 x16: 32 GB/s nameplate (paper §1), ~85% achievable,
+    /// ~10 µs per transfer setup.
+    pub fn pcie4x16() -> Interconnect {
+        Interconnect {
+            name: "pcie4x16".into(),
+            bandwidth: 32e9,
+            latency: 10e-6,
+            efficiency: 0.85,
+        }
+    }
+
+    /// Time to move `bytes` in one DMA.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.latency + bytes / (self.bandwidth * self.efficiency)
+    }
+
+    /// Time for `n` separate transfers of `bytes` each (un-batched
+    /// per-token offload — what HGCA's block-granular eviction avoids).
+    pub fn transfer_time_n(&self, n: usize, bytes: f64) -> f64 {
+        self.latency * n as f64 + (n as f64 * bytes) / (self.bandwidth * self.efficiency)
+    }
+
+    /// Effective bytes/s for a given transfer size (latency amortization).
+    pub fn effective_bandwidth(&self, bytes: f64) -> f64 {
+        bytes / self.transfer_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_is_free() {
+        assert_eq!(Interconnect::pcie4x16().transfer_time(0.0), 0.0);
+    }
+
+    #[test]
+    fn large_transfer_approaches_nameplate() {
+        let link = Interconnect::pcie4x16();
+        let eff = link.effective_bandwidth(1e9);
+        assert!(eff > 0.95 * link.bandwidth * link.efficiency);
+    }
+
+    #[test]
+    fn small_transfers_are_latency_bound() {
+        let link = Interconnect::pcie4x16();
+        // a 4 KiB merge payload is ~latency-only
+        let t = link.transfer_time(4096.0);
+        assert!(t < 2.0 * link.latency);
+        // effective bandwidth collapses
+        assert!(link.effective_bandwidth(4096.0) < 0.02 * link.bandwidth);
+    }
+
+    #[test]
+    fn batched_beats_per_token_offload() {
+        // HGCA's block-granular eviction (Algorithm 1 footnote): one block
+        // of 32 tokens beats 32 per-token DMAs
+        let link = Interconnect::pcie4x16();
+        let tok_bytes = 16384.0; // opt-6.7b per-layer per-token KV
+        let batched = link.transfer_time(32.0 * tok_bytes);
+        let unbatched = link.transfer_time_n(32, tok_bytes);
+        assert!(unbatched > batched * 1.5);
+    }
+
+    #[test]
+    fn merge_payload_orders_of_magnitude_smaller_than_kv() {
+        // paper §3.3: O_cpu + lse is orders of magnitude smaller than raw KV.
+        // opt-6.7b, batch 1: per-layer merge payload = H*dh + H floats fp32
+        let merge_bytes = (32 * 128 + 32) as f64 * 4.0;
+        let kv_bytes_16k = 2.0 * 32.0 * 128.0 * 16384.0 * 2.0;
+        assert!(kv_bytes_16k / merge_bytes > 1000.0);
+        let link = Interconnect::pcie4x16();
+        assert!(link.transfer_time(merge_bytes) < link.transfer_time(kv_bytes_16k) / 100.0);
+    }
+}

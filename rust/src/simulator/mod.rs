@@ -1,0 +1,13 @@
+//! Hardware simulation substrate (DESIGN.md §1): roofline device cost
+//! models, interconnect transfer models, labeled time breakdowns, and the
+//! attention-placement scenarios used by every performance bench.
+
+pub mod clock;
+pub mod device;
+pub mod interconnect;
+pub mod scenarios;
+
+pub use clock::{Breakdown, SimClock};
+pub use device::{AttnWork, DeviceSpec};
+pub use interconnect::Interconnect;
+pub use scenarios::Testbed;

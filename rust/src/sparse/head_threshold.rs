@@ -1,0 +1,116 @@
+//! HGCA's per-head adaptive threshold (§3.2.2): keep entry i iff
+//! maw[i] > β / n. Heads with peaked attention keep few entries; flat
+//! heads keep many — the adaptivity the paper's Fig. 4 motivates.
+
+use super::{SelectInput, SparsePolicy};
+
+#[derive(Debug, Clone)]
+pub struct HeadThreshold {
+    pub beta: f32,
+}
+
+impl HeadThreshold {
+    pub fn new(beta: f32) -> Self {
+        HeadThreshold { beta }
+    }
+}
+
+impl SparsePolicy for HeadThreshold {
+    fn select(&self, input: &SelectInput<'_>) -> Vec<u32> {
+        let n = input.maw.len();
+        let threshold = self.beta / n.max(1) as f32;
+        input
+            .maw
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m > threshold)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "hgca-head-threshold"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::demo_input;
+    use crate::util::proptest::{check, ensure};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selects_spikes_at_beta_one() {
+        let (maw, pos) = demo_input();
+        let sel = HeadThreshold::new(1.0).select(&SelectInput { maw: &maw, pos: &pos, seq_len: 10 });
+        // threshold = 0.1: keeps 0.60 and 0.25 only
+        assert_eq!(sel, vec![3, 7]);
+    }
+
+    #[test]
+    fn smaller_beta_keeps_more() {
+        let (maw, pos) = demo_input();
+        let strict = HeadThreshold::new(1.0)
+            .select(&SelectInput { maw: &maw, pos: &pos, seq_len: 10 })
+            .len();
+        let loose = HeadThreshold::new(0.1)
+            .select(&SelectInput { maw: &maw, pos: &pos, seq_len: 10 })
+            .len();
+        assert!(loose > strict);
+    }
+
+    #[test]
+    fn uniform_distribution_keeps_nothing_at_beta_one() {
+        // exactly uniform weights equal the threshold → strict inequality drops all
+        let maw = vec![0.1; 10];
+        let pos: Vec<usize> = (0..10).collect();
+        let sel = HeadThreshold::new(1.0).select(&SelectInput { maw: &maw, pos: &pos, seq_len: 10 });
+        assert!(sel.is_empty());
+    }
+
+    #[test]
+    fn beta_zero_keeps_everything_positive() {
+        let (maw, pos) = demo_input();
+        let sel = HeadThreshold::new(0.0).select(&SelectInput { maw: &maw, pos: &pos, seq_len: 10 });
+        assert_eq!(sel.len(), 10);
+    }
+
+    #[test]
+    fn prop_selected_mass_dominates() {
+        // entries kept under β=1 must carry at least their proportional mass
+        check("threshold_mass", 30, |rng: &mut Rng| {
+            let n = rng.range(4, 100);
+            let mut maw: Vec<f32> = (0..n).map(|_| rng.f32().powi(4)).collect();
+            let sum: f32 = maw.iter().sum::<f32>().max(1e-9);
+            for m in maw.iter_mut() {
+                *m /= sum;
+            }
+            let pos: Vec<usize> = (0..n).collect();
+            let sel = HeadThreshold::new(1.0).select(&SelectInput { maw: &maw, pos: &pos, seq_len: n });
+            let kept: f32 = sel.iter().map(|&i| maw[i as usize]).sum();
+            let frac = sel.len() as f32 / n as f32;
+            ensure(
+                kept >= frac - 1e-5,
+                format!("kept mass {kept} < kept fraction {frac}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_monotone_in_beta() {
+        check("threshold_monotone", 30, |rng: &mut Rng| {
+            let n = rng.range(1, 60);
+            let maw: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let pos: Vec<usize> = (0..n).collect();
+            let b1 = rng.f32() * 2.0;
+            let b2 = b1 + rng.f32();
+            let s1 = HeadThreshold::new(b1).select(&SelectInput { maw: &maw, pos: &pos, seq_len: n });
+            let s2 = HeadThreshold::new(b2).select(&SelectInput { maw: &maw, pos: &pos, seq_len: n });
+            ensure(
+                s2.len() <= s1.len() && s2.iter().all(|i| s1.contains(i)),
+                "higher beta must select a subset",
+            )
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! KV-selection policies: HGCA's per-head adaptive threshold plus the
+//! baselines the paper compares against (§2.2, §5). All policies answer
+//! the same question — *which CPU-resident KV entries should sparse
+//! attention visit for a given head?* — so baseline engines differ only in
+//! the policy they plug in.
+
+pub mod head_threshold;
+pub mod infinigen;
+pub mod static_window;
+pub mod topk;
+
+pub use head_threshold::HeadThreshold;
+pub use infinigen::InfinigenPredict;
+pub use static_window::StaticWindow;
+pub use topk::TopK;
+
+/// Selection context for one attention head of one layer.
+pub struct SelectInput<'a> {
+    /// historical attention weight per entry (MAW or cumulative score)
+    pub maw: &'a [f32],
+    /// global token position per entry
+    pub pos: &'a [usize],
+    /// current sequence length (decoding frontline)
+    pub seq_len: usize,
+}
+
+pub trait SparsePolicy: Send + Sync {
+    /// Indices of entries this head should attend.
+    fn select(&self, input: &SelectInput<'_>) -> Vec<u32>;
+
+    /// Extra working memory the policy needs per KV entry, in bytes
+    /// (InfiniGen's rehearsal buffers; 0 for the others). Feeds the
+    /// memory accounting in Fig. 12.
+    fn overhead_bytes_per_entry(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) fn demo_input() -> (Vec<f32>, Vec<usize>) {
+    // 10 entries: one strong spike at 3, mild at 7, noise elsewhere
+    let maw = vec![0.01, 0.02, 0.01, 0.60, 0.02, 0.01, 0.02, 0.25, 0.03, 0.03];
+    let pos = (0..10).collect();
+    (maw, pos)
+}

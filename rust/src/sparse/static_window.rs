@@ -1,0 +1,95 @@
+//! StreamingLLM/Longformer-style static selection (§2.2, Fig. 2a): a fixed
+//! global window of early "attention sink" tokens plus a recency window.
+//! No runtime adaptation — the baseline that misses contextually-important
+//! middle tokens (paper Fig. 5's dotted box).
+
+use super::{SelectInput, SparsePolicy};
+
+#[derive(Debug, Clone)]
+pub struct StaticWindow {
+    /// first `sinks` tokens of the sequence are always kept
+    pub sinks: usize,
+    /// most recent `recent` tokens are kept
+    pub recent: usize,
+}
+
+impl StaticWindow {
+    pub fn new(sinks: usize, recent: usize) -> Self {
+        StaticWindow { sinks, recent }
+    }
+}
+
+impl SparsePolicy for StaticWindow {
+    fn select(&self, input: &SelectInput<'_>) -> Vec<u32> {
+        let cutoff = input.seq_len.saturating_sub(self.recent);
+        input
+            .pos
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p < self.sinks || p >= cutoff)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "static-sink-window"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_sinks_and_recent() {
+        let pos: Vec<usize> = (0..20).collect();
+        let maw = vec![0.05; 20];
+        let sel = StaticWindow::new(2, 4).select(&SelectInput {
+            maw: &maw,
+            pos: &pos,
+            seq_len: 20,
+        });
+        assert_eq!(sel, vec![0, 1, 16, 17, 18, 19]);
+    }
+
+    #[test]
+    fn ignores_maw_entirely() {
+        let pos: Vec<usize> = (0..10).collect();
+        let hot = {
+            let mut m = vec![0.0; 10];
+            m[5] = 1.0; // contextually crucial token in the middle
+            m
+        };
+        let sel = StaticWindow::new(1, 2).select(&SelectInput {
+            maw: &hot,
+            pos: &pos,
+            seq_len: 10,
+        });
+        assert!(!sel.contains(&5), "static policy is blind to importance");
+    }
+
+    #[test]
+    fn non_contiguous_positions() {
+        // CPU store holds evicted entries; positions may be sparse
+        let pos = vec![0, 3, 7, 90, 95];
+        let maw = vec![0.1; 5];
+        let sel = StaticWindow::new(4, 10).select(&SelectInput {
+            maw: &maw,
+            pos: &pos,
+            seq_len: 100,
+        });
+        assert_eq!(sel, vec![0, 1, 3, 4]); // pos 0,3 are sinks; 90,95 recent
+    }
+
+    #[test]
+    fn short_sequence_keeps_all() {
+        let pos: Vec<usize> = (0..5).collect();
+        let maw = vec![0.2; 5];
+        let sel = StaticWindow::new(4, 8).select(&SelectInput {
+            maw: &maw,
+            pos: &pos,
+            seq_len: 5,
+        });
+        assert_eq!(sel.len(), 5);
+    }
+}

@@ -1,0 +1,94 @@
+//! H2O-style top-k selection (§2.2): keep the fixed fraction of entries
+//! with the highest cumulative attention scores, regardless of how the
+//! per-head distribution actually looks — the rigidity HGCA's adaptive
+//! threshold removes.
+
+use super::{SelectInput, SparsePolicy};
+
+#[derive(Debug, Clone)]
+pub struct TopK {
+    /// fraction of entries to keep (the paper configures H2O at 0.2)
+    pub fraction: f32,
+    /// keep at least this many when any exist
+    pub min_keep: usize,
+}
+
+impl TopK {
+    pub fn new(fraction: f32) -> Self {
+        assert!((0.0..=1.0).contains(&fraction));
+        TopK {
+            fraction,
+            min_keep: 1,
+        }
+    }
+}
+
+impl SparsePolicy for TopK {
+    fn select(&self, input: &SelectInput<'_>) -> Vec<u32> {
+        let n = input.maw.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let k = ((n as f32 * self.fraction).round() as usize)
+            .max(self.min_keep)
+            .min(n);
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        // partial selection by score, descending
+        idx.sort_by(|&a, &b| {
+            input.maw[b as usize]
+                .partial_cmp(&input.maw[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut out: Vec<u32> = idx[..k].to_vec();
+        out.sort_unstable(); // chronological order for contiguous gathers
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "h2o-topk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::demo_input;
+
+    #[test]
+    fn keeps_exact_fraction() {
+        let (maw, pos) = demo_input();
+        let sel = TopK::new(0.2).select(&SelectInput { maw: &maw, pos: &pos, seq_len: 10 });
+        assert_eq!(sel.len(), 2);
+        assert_eq!(sel, vec![3, 7]); // top-2 scores, sorted by index
+    }
+
+    #[test]
+    fn fixed_budget_ignores_distribution_shape() {
+        // the failure mode HGCA fixes: flat distribution still keeps 20%
+        let maw = vec![0.1; 10];
+        let pos: Vec<usize> = (0..10).collect();
+        let sel = TopK::new(0.2).select(&SelectInput { maw: &maw, pos: &pos, seq_len: 10 });
+        assert_eq!(sel.len(), 2); // arbitrary 2 of 10 equal entries
+    }
+
+    #[test]
+    fn min_keep_applies() {
+        let maw = vec![0.5, 0.5];
+        let pos = vec![0, 1];
+        let sel = TopK::new(0.01).select(&SelectInput { maw: &maw, pos: &pos, seq_len: 2 });
+        assert_eq!(sel.len(), 1);
+    }
+
+    #[test]
+    fn empty_input_empty_output() {
+        let sel = TopK::new(0.2).select(&SelectInput { maw: &[], pos: &[], seq_len: 0 });
+        assert!(sel.is_empty());
+    }
+
+    #[test]
+    fn full_fraction_keeps_all() {
+        let (maw, pos) = demo_input();
+        let sel = TopK::new(1.0).select(&SelectInput { maw: &maw, pos: &pos, seq_len: 10 });
+        assert_eq!(sel.len(), 10);
+    }
+}

@@ -1,0 +1,8 @@
+//! f32 tensor substrate: storage, dense kernels, `.hgw` weight I/O.
+
+pub mod ops;
+pub mod tensor;
+pub mod weights;
+
+pub use tensor::Tensor;
+pub use weights::Weights;

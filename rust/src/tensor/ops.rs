@@ -1,0 +1,232 @@
+//! Dense kernels for the CPU attention path and the rust reference model.
+//! Numerics mirror python/compile/model.py exactly (same gelu constants,
+//! same layernorm epsilon) so the PJRT path and the rust oracle agree to
+//! f32 tolerance.
+
+use super::tensor::Tensor;
+
+/// C[m,n] = A[m,k] @ B[k,n]. ikj loop order for cache-friendly access.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// y[n] = x[k] @ W[k,n] + b[n]; the hot projection primitive.
+pub fn affine(x: &[f32], w: &Tensor, b: &[f32], out: &mut [f32]) {
+    let (k, n) = (w.shape[0], w.shape[1]);
+    assert_eq!(x.len(), k);
+    assert_eq!(out.len(), n);
+    assert_eq!(b.len(), n);
+    out.copy_from_slice(b);
+    for (p, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w.data[p * n..(p + 1) * n];
+        for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
+            *o += xv * wv;
+        }
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled: the single hottest loop in CPU sparse attention
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// out += scale * v
+pub fn axpy(scale: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(v.iter()) {
+        *o += scale * x;
+    }
+}
+
+/// In-place softmax over a slice; returns the log-sum-exp.
+pub fn softmax_lse(x: &mut [f32]) -> f32 {
+    let m = x.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(-1e30);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let sum = sum.max(1e-30);
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+    m + sum.ln()
+}
+
+/// LayerNorm matching jax: (x - mean) / sqrt(var + 1e-5) * g + b.
+pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mean) * inv * g[i] + b[i];
+    }
+}
+
+/// GELU (tanh approximation) — constants pinned to python/compile/model.py.
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.7978845608028654 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-softmax value of index `target` (for perplexity evaluation).
+pub fn log_softmax_at(x: &[f32], target: usize) -> f32 {
+    let m = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let lse = m + x.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+    x[target] - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let i = Tensor::from_vec(&[2, 2], vec![1., 0., 0., 1.]);
+        assert_eq!(matmul(&a, &i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn affine_matches_matmul() {
+        let w = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let x = [1.0f32, 0.5, -1.0];
+        let b = [0.1f32, -0.2];
+        let mut out = [0.0f32; 2];
+        affine(&x, &w, &b, &mut out);
+        let expect = [
+            1.0 * 1. + 0.5 * 3. + -1.0 * 5. + 0.1,
+            1.0 * 2. + 0.5 * 4. + -1.0 * 6. - 0.2,
+        ];
+        assert!((out[0] - expect[0]).abs() < 1e-6);
+        assert!((out[1] - expect[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        for n in [0, 1, 3, 4, 7, 16, 33] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.3 - 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_lse_correct() {
+        let mut x = vec![1.0f32, 2.0, 3.0];
+        let lse = softmax_lse(&mut x);
+        let sum: f32 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        let expect_lse = (1f64.exp() + 2f64.exp() + 3f64.exp()).ln() as f32;
+        assert!((lse - expect_lse).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_stable_at_large_scores() {
+        let mut x = vec![1000.0f32, 999.0];
+        let lse = softmax_lse(&mut x);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(lse.is_finite());
+        assert!((x[0] + x[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let g = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        layernorm(&x, &g, &b, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-5);
+        assert!(gelu(10.0) > 9.99);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn log_softmax_at_matches_softmax() {
+        let x = [0.5f32, -1.0, 2.0];
+        let mut sm = x.to_vec();
+        softmax_lse(&mut sm);
+        assert!((log_softmax_at(&x, 2) - sm[2].ln()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,158 @@
+//! `.hgw` weight loader — the rust half of python/compile/hgw.py.
+//!
+//! Layout (little-endian): magic "HGW1", u32 n_tensors, then per tensor
+//! u16 name_len + name, u8 ndim, u32 dims…, f32 row-major data.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+pub const MAGIC: &[u8; 4] = b"HGW1";
+
+pub type Weights = BTreeMap<String, Tensor>;
+
+pub fn load(path: &Path) -> Result<Weights> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse(bytes: &[u8]) -> Result<Weights> {
+    let mut r = Cursor { b: bytes, pos: 0 };
+    let magic = r.take(4)?;
+    if magic != MAGIC {
+        bail!("bad magic {:?} (want HGW1)", &magic[..4.min(magic.len())]);
+    }
+    let n = r.u32()? as usize;
+    let mut out = Weights::new();
+    for _ in 0..n {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec()).context("tensor name utf8")?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let raw = r.take(count * 4)?;
+        let mut data = vec![0f32; count];
+        for (i, chunk) in raw.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        out.insert(name, Tensor::from_vec(&shape, data));
+    }
+    if r.pos != bytes.len() {
+        bail!("{} trailing bytes after last tensor", bytes.len() - r.pos);
+    }
+    Ok(out)
+}
+
+/// Serialize (used by tests for round-trips and by tools that snapshot
+/// synthetic weights).
+pub fn save(weights: &Weights) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(weights.len() as u32).to_le_bytes());
+    for (name, t) in weights {
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(t.ndim() as u8);
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in &t.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+pub fn write(path: &Path, weights: &Weights) -> Result<()> {
+    std::fs::write(path, save(weights)).with_context(|| format!("writing {}", path.display()))
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated file at byte {} (want {n} more)", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+#[allow(unused)]
+fn read_all(mut r: impl Read) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Weights {
+        let mut w = Weights::new();
+        w.insert("a".into(), Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]));
+        w.insert(
+            "layer0.wq".into(),
+            Tensor::from_vec(&[3], vec![-1.5, 0.0, 2.25]),
+        );
+        w
+    }
+
+    #[test]
+    fn roundtrip() {
+        let w = sample();
+        let bytes = save(&w);
+        let w2 = parse(&bytes).unwrap();
+        assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = save(&sample());
+        bytes[0] = b'X';
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = save(&sample());
+        assert!(parse(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = save(&sample());
+        bytes.push(0);
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn empty_weights_ok() {
+        let w = Weights::new();
+        assert_eq!(parse(&save(&w)).unwrap().len(), 0);
+    }
+}

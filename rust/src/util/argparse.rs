@@ -1,0 +1,135 @@
+//! Tiny CLI flag parser (clap is not in the vendored registry).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments; unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    out.bools.push(rest.to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{rest} needs a value"))?;
+                    out.flags.insert(rest.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, bool_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    /// Comma-separated list helper: `--betas 0.25,0.5`.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad number '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_bools() {
+        let a = Args::parse(&sv(&["--n", "3", "--fast", "--x=7", "pos"]), &["fast"]).unwrap();
+        assert_eq!(a.usize("n", 0).unwrap(), 3);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("x"), Some("7"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.usize("n", 9).unwrap(), 9);
+        assert_eq!(a.f64("b", 1.5).unwrap(), 1.5);
+        assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&sv(&["--n", "xyz"]), &[]).unwrap();
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--betas", "0.25, 0.5,1.0"]), &[]).unwrap();
+        assert_eq!(a.f64_list("betas", &[]).unwrap(), vec![0.25, 0.5, 1.0]);
+        assert_eq!(a.f64_list("other", &[2.0]).unwrap(), vec![2.0]);
+    }
+}

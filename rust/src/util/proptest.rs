@@ -1,0 +1,85 @@
+//! Mini property-testing harness (`proptest` is not in the vendored
+//! registry). Seeded generators + bounded iteration + first-failure
+//! reporting with the reproducing seed. Used across kv/sparse/attention
+//! invariant tests.
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `prop`, which receives a fresh seeded Rng.
+/// On failure, panics with the failing case's seed so it can be replayed.
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, prop: F) {
+    let base = std::env::var("HGCA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with HGCA_PROP_SEED={base}, \
+                 case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result — composable inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f32, b: f32, tol: f32, ctx: &str) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let denom = a.abs().max(b.abs()).max(1.0);
+    if diff / denom <= tol || diff <= tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} != {b} (diff {diff}, tol {tol})"))
+    }
+}
+
+pub fn ensure_all_close(a: &[f32], b: &[f32], tol: f32, ctx: &str) -> Result<(), String> {
+    ensure(a.len() == b.len(), format!("{ctx}: length {} != {}", a.len(), b.len()))?;
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        ensure_close(*x, *y, tol, &format!("{ctx}[{i}]"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("trivial", 10, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 5, |rng| {
+            ensure(rng.f32() < 0.0, "always false")
+        });
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert!(ensure_close(1.0, 1.0 + 1e-7, 1e-5, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-5, "x").is_err());
+        assert!(ensure_all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6, "v").is_ok());
+        assert!(ensure_all_close(&[1.0], &[1.0, 2.0], 1e-6, "v").is_err());
+    }
+}

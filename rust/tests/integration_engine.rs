@@ -1,0 +1,183 @@
+//! Integration: policy accuracy ordering, re-evaluation, batching,
+//! multi-turn append — over the real trained model + PJRT path.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::batcher::{Batcher, Request};
+use hgca::engine::{Engine, Policy};
+use hgca::model::RefModel;
+use hgca::runtime::PjrtRuntime;
+
+fn runtime() -> Rc<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(PjrtRuntime::new(&dir).expect("run `make artifacts` first"))
+}
+
+fn corpus(n: usize) -> Vec<u8> {
+    let text = std::fs::read(Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt"))
+        .expect("corpus");
+    text[4096..4096 + n].to_vec()
+}
+
+fn small_cfg() -> HgcaConfig {
+    HgcaConfig {
+        blk_size: 8,
+        blk_num: 4, // logical window 32 — forces heavy CPU-side traffic
+        ..Default::default()
+    }
+}
+
+fn ppl(policy: Policy, text: &[u8]) -> f64 {
+    let rt = runtime();
+    let mr = rt.load_model("tiny-small").unwrap();
+    let mut engine = Engine::new(&mr, small_cfg(), policy);
+    engine.perplexity(text, 32).unwrap()
+}
+
+#[test]
+fn policy_accuracy_ordering() {
+    // The paper's central accuracy claim (Table 1): HGCA ≈ full attention,
+    // while aggressive fixed-budget sparsity (H2O at 20%) and static
+    // windows degrade. Tolerances are loose — the point is the ordering.
+    // Table 1's finding is "HGCA ≈ full attention" (sometimes better,
+    // sometimes a hair worse); the sweep bench does the full grid. Here we
+    // pin the bound that matters: hybrid attention stays within a few
+    // percent of exact full attention while attending a fraction of the KV.
+    let text = corpus(192);
+    let full = ppl(Policy::FullOffload, &text);
+    let hgca = ppl(Policy::Hgca { beta: 1.0 }, &text);
+    let h2o = ppl(Policy::H2o { frac: 0.2 }, &text);
+    let stat = ppl(Policy::Static { sinks: 4, recent: 8 }, &text);
+    println!("full={full:.3} hgca={hgca:.3} h2o={h2o:.3} static={stat:.3}");
+    assert!(
+        (hgca / full - 1.0).abs() < 0.10,
+        "hgca {hgca} should track full attention {full}"
+    );
+    // baselines must at least be in a sane range (they discard context)
+    assert!(h2o < full * 1.5 && stat < full * 1.5);
+}
+
+#[test]
+fn beta_sweep_monotone_retention() {
+    // larger β → stricter filtering → smaller contextual cache
+    let rt = runtime();
+    let mr = rt.load_model("tiny-small").unwrap();
+    let text = corpus(128);
+    let mut sizes = Vec::new();
+    for beta in [0.25f32, 1.0, 4.0] {
+        let mut cfg = small_cfg();
+        cfg.beta = beta;
+        let mut engine = Engine::new(&mr, cfg, Policy::Hgca { beta });
+        let mut seq = engine.new_sequence(0, &text);
+        engine.prefill(&mut seq).unwrap();
+        let total: usize = seq.kv.layers.iter().map(|l| l.cpu.ctx_len_total()).sum();
+        sizes.push(total);
+    }
+    println!("ctx sizes by beta: {sizes:?}");
+    assert!(sizes[0] >= sizes[1] && sizes[1] >= sizes[2], "{sizes:?}");
+}
+
+#[test]
+fn append_reevaluation_changes_ctx() {
+    // multi-turn: a second prompt re-evaluates the contextual cache
+    let rt = runtime();
+    let mr = rt.load_model("tiny-small").unwrap();
+    let mut engine = Engine::new(&mr, small_cfg(), Policy::Hgca { beta: 1.0 });
+    let text = corpus(256);
+    let mut seq = engine.new_sequence(0, &text[..128]);
+    engine.prefill(&mut seq).unwrap();
+    let before: Vec<Vec<u32>> = seq.kv.layers[0]
+        .cpu
+        .ctx
+        .iter()
+        .map(|c| c.idx.clone())
+        .collect();
+    // append a second turn (64 = one chunk → real append path)
+    seq.tokens.extend_from_slice(&text[128..192]);
+    engine.prefill(&mut seq).unwrap();
+    let after: Vec<Vec<u32>> = seq.kv.layers[0]
+        .cpu
+        .ctx
+        .iter()
+        .map(|c| c.idx.clone())
+        .collect();
+    assert_ne!(before, after, "re-evaluation should adapt the ctx cache");
+}
+
+#[test]
+fn continuous_batcher_completes_all() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut batcher = Batcher::new(4);
+    for i in 0..6 {
+        batcher.submit(Request {
+            id: i,
+            prompt: format!("request number {i} about the railway").into_bytes(),
+            max_new_tokens: 4 + (i as usize % 3),
+        });
+    }
+    let done = batcher.run_to_completion(&mut engine).unwrap();
+    assert_eq!(done.len(), 6);
+    for c in &done {
+        let want = 4 + (c.id as usize % 3);
+        assert_eq!(c.text.len(), want, "req {} text len", c.id);
+    }
+    assert!(engine.metrics.tokens > 0);
+}
+
+#[test]
+fn deterministic_generation_with_greedy() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny-small").unwrap();
+    let gen = || {
+        let mut engine = Engine::new(&mr, small_cfg(), Policy::Hgca { beta: 1.0 });
+        let mut seq = engine.new_sequence(0, b"The expedition mapped the region around ");
+        engine.generate(&mut seq, 24).unwrap()
+    };
+    assert_eq!(gen(), gen());
+}
+
+#[test]
+fn hgca_tracks_transfer_bytes_and_memory() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny-small").unwrap();
+    let mut engine = Engine::new(&mr, small_cfg(), Policy::Hgca { beta: 1.0 });
+    let text = corpus(200);
+    let mut seq = engine.new_sequence(0, &text);
+    engine.prefill(&mut seq).unwrap();
+    assert!(seq.kv.evict_bytes > 0, "evictions must be accounted");
+    assert!(engine.metrics.peak_cpu_kv_bytes > 0);
+    assert!(engine.metrics.peak_gpu_kv_bytes > 0);
+    // GPU pool is bounded by the window regardless of sequence length
+    let bound = mr.cfg.n_layers * seq.kv.layers[0].gpu.size_bytes();
+    assert!(engine.metrics.peak_gpu_kv_bytes <= bound);
+}
+
+#[test]
+fn trained_model_beats_uniform_ppl() {
+    // sanity: the trained tiny model actually learned the corpus
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let oracle = RefModel::new(mr.cfg.clone(), mr.weights.clone()).unwrap();
+    let text = corpus(256);
+    let p = oracle.perplexity(&text);
+    println!("tiny oracle ppl over corpus slice: {p:.2}");
+    assert!(p < 24.0, "ppl {p} vs uniform 256");
+}
+
+#[test]
+fn sim_time_scales_with_context() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny-small").unwrap();
+    let mut engine = Engine::new(&mr, small_cfg(), Policy::FullOffload);
+    let text = corpus(256);
+    let mut seq = engine.new_sequence(0, &text);
+    engine.prefill(&mut seq).unwrap();
+    let sims = &engine.metrics.sim_tbt;
+    assert!(sims.len() > 2);
+    // later steps attend more KV → simulated time must grow
+    assert!(sims.last().unwrap() >= sims.first().unwrap());
+}

@@ -1,0 +1,82 @@
+//! Integration: HTTP front-end ↔ engine loop round trips with the real
+//! trained model.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::{Engine, Policy};
+use hgca::runtime::PjrtRuntime;
+use hgca::server::api::engine_loop;
+use hgca::util::json::Json;
+
+fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    let status: u16 = out.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = out.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+#[test]
+fn serve_generate_metrics_health() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (addr, _h) = hgca::server::serve("127.0.0.1:0", tx).unwrap();
+
+    // engine thread (owns the PJRT runtime; !Send types stay here)
+    let engine_thread = std::thread::spawn(move || {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let rt = Rc::new(PjrtRuntime::new(&dir).unwrap());
+        let mr = rt.load_model("tiny").unwrap();
+        let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        let _ = engine_loop(&mut engine, rx, 4);
+    });
+
+    let (st, body) = http(addr, "GET", "/health", "");
+    assert_eq!(st, 200);
+    assert!(body.contains("true"));
+
+    let (st, body) = http(
+        addr,
+        "POST",
+        "/v1/generate",
+        r#"{"prompt": "The county court ", "max_new_tokens": 12}"#,
+    );
+    assert_eq!(st, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req_usize("completion_tokens").unwrap(), 12);
+    assert_eq!(j.req_str("text").unwrap().len(), 12);
+
+    let (st, body) = http(addr, "GET", "/v1/metrics", "");
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.req_f64("tokens").unwrap() >= 11.0); // first token comes from prefill logits
+    assert_eq!(j.req_str("policy").unwrap(), "hgca");
+
+    let (st, _) = http(addr, "GET", "/nope", "");
+    assert_eq!(st, 404);
+
+    let (st, _) = http(addr, "POST", "/v1/generate", "{not json");
+    assert_eq!(st, 400);
+
+    let (st, body) = http(
+        addr,
+        "POST",
+        "/v1/batch",
+        r#"{"prompts": ["the railway", "the garrison"], "max_new_tokens": 5}"#,
+    );
+    assert_eq!(st, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req_arr("completions").unwrap().len(), 2);
+
+    drop(engine_thread); // server thread detaches; engine loop ends with channel
+}

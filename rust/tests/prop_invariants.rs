@@ -1,0 +1,213 @@
+//! Property tests over the coordinator's core invariants (mini-proptest
+//! harness — see rust/src/util/proptest.rs): KV routing, batching-style
+//! state transitions, sparsification algebra. These run without artifacts.
+
+use hgca::config::{HgcaConfig, ModelConfig};
+use hgca::kv::{KvBlock, KvManager};
+use hgca::util::proptest::{check, ensure};
+use hgca::util::rng::Rng;
+
+fn model(heads: usize, dh: usize) -> ModelConfig {
+    ModelConfig {
+        name: "prop".into(),
+        vocab: 256,
+        n_layers: 2,
+        d_model: heads * dh,
+        n_heads: heads,
+        d_ffn: 4 * heads * dh,
+        max_pos: 4096,
+        bytes_per_param: 4,
+    }
+}
+
+fn random_kv(rng: &mut Rng, heads: usize, n: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut k = vec![0.0; heads * n * dh];
+    let mut v = vec![0.0; heads * n * dh];
+    rng.fill_normal(&mut k, 1.0);
+    rng.fill_normal(&mut v, 1.0);
+    (k, v)
+}
+
+#[test]
+fn prop_no_entry_is_lost_or_duplicated() {
+    // every inserted position ends up exactly once in window ∪ cpu store
+    check("kv_conservation", 40, |rng| {
+        let heads = 1 + rng.range(0, 4);
+        let dh = 4;
+        let m = model(heads, dh);
+        let cfg = HgcaConfig {
+            blk_size: 1 + rng.range(0, 4),
+            blk_num: 1 + rng.range(0, 4),
+            ..Default::default()
+        };
+        let mut kv = KvManager::new(&m, &cfg);
+        let steps = rng.range(1, 60);
+        for t in 0..steps {
+            kv.make_room(0, 1);
+            let (k, v) = random_kv(rng, heads, 1, dh);
+            kv.append(0, &k, &v, &[t]);
+            kv.advance(1);
+        }
+        let win: Vec<usize> = kv.layers[0].gpu.pos[..kv.layers[0].gpu.len].to_vec();
+        let cpu: Vec<usize> = kv.layers[0].cpu.full[0].pos.clone();
+        let mut all: Vec<usize> = win.iter().chain(cpu.iter()).copied().collect();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..steps).collect();
+        ensure(all == expect, format!("win {win:?} cpu {cpu:?} vs 0..{steps}"))
+    });
+}
+
+#[test]
+fn prop_window_is_chronological_suffix() {
+    check("window_suffix", 30, |rng| {
+        let m = model(2, 4);
+        let cfg = HgcaConfig {
+            blk_size: 2,
+            blk_num: 1 + rng.range(0, 3),
+            ..Default::default()
+        };
+        let mut kv = KvManager::new(&m, &cfg);
+        let steps = rng.range(1, 40);
+        for t in 0..steps {
+            kv.make_room(0, 1);
+            let (k, v) = random_kv(rng, 2, 1, 4);
+            kv.append(0, &k, &v, &[t]);
+        }
+        let gpu = &kv.layers[0].gpu;
+        let pos = &gpu.pos[..gpu.len];
+        // window holds the most recent entries, in order
+        for (i, w) in pos.windows(2).enumerate() {
+            ensure(w[0] + 1 == w[1], format!("gap at {i}: {pos:?}"))?;
+        }
+        ensure(
+            *pos.last().unwrap() == steps - 1,
+            format!("window must end at the frontline: {pos:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_ctx_is_subset_of_full_store() {
+    check("ctx_subset", 30, |rng| {
+        let heads = 1 + rng.range(0, 3);
+        let dh = 4;
+        let mut store = hgca::kv::CpuLayerStore::new(heads, dh);
+        let beta = rng.f32() * 2.0;
+        for _ in 0..rng.range(1, 6) {
+            let len = 1 + rng.range(0, 8);
+            let mut blk = KvBlock::new(heads, dh, len);
+            rng.fill_normal(&mut blk.k, 1.0);
+            rng.fill_normal(&mut blk.v, 1.0);
+            for m in blk.maw.iter_mut() {
+                *m = rng.f32() * 0.5;
+            }
+            store.add_evicted(&blk, beta, 16);
+        }
+        for h in 0..heads {
+            let ctx = &store.ctx[h];
+            ensure(
+                ctx.idx.iter().all(|&i| (i as usize) < store.full[h].len()),
+                "ctx indices in range",
+            )?;
+            // packed k matches the indexed entries
+            for (j, &i) in ctx.idx.iter().enumerate() {
+                let a = &ctx.k[j * dh..(j + 1) * dh];
+                let b = &store.full[h].k[i as usize * dh..(i as usize + 1) * dh];
+                ensure(a == b, "packed ctx k mismatch")?;
+            }
+            // renormalized maw sums to ~1 when non-empty
+            if !ctx.maw.is_empty() {
+                let s: f32 = ctx.maw.iter().sum();
+                ensure((s - 1.0).abs() < 1e-4, format!("maw sum {s}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reevaluation_is_idempotent() {
+    check("reeval_idempotent", 25, |rng| {
+        let mut store = hgca::kv::CpuLayerStore::new(2, 4);
+        let len = 4 + rng.range(0, 12);
+        let mut blk = KvBlock::new(2, 4, len);
+        rng.fill_normal(&mut blk.k, 1.0);
+        for m in blk.maw.iter_mut() {
+            *m = rng.f32();
+        }
+        store.add_evicted(&blk, 1.0, 8);
+        let a_cpu: Vec<f32> = (0..2 * len).map(|_| rng.f32()).collect();
+        store.reevaluate(&a_cpu, 1.0);
+        let once: Vec<Vec<u32>> = store.ctx.iter().map(|c| c.idx.clone()).collect();
+        store.reevaluate(&a_cpu, 1.0);
+        let twice: Vec<Vec<u32>> = store.ctx.iter().map(|c| c.idx.clone()).collect();
+        ensure(once == twice, "same scores → same selection")
+    });
+}
+
+#[test]
+fn prop_eviction_bytes_monotone() {
+    check("evict_bytes_monotone", 20, |rng| {
+        let m = model(2, 8);
+        let cfg = HgcaConfig {
+            blk_size: 2,
+            blk_num: 2,
+            ..Default::default()
+        };
+        let mut kv = KvManager::new(&m, &cfg);
+        let mut last = 0u64;
+        for t in 0..rng.range(5, 30) {
+            kv.make_room(0, 1);
+            let (k, v) = random_kv(rng, 2, 1, 8);
+            kv.append(0, &k, &v, &[t]);
+            ensure(kv.evict_bytes >= last, "evict bytes must not decrease")?;
+            last = kv.evict_bytes;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_then_split_roundtrip_random_layouts() {
+    use hgca::attention::{merge_head, EMPTY_LSE};
+    use hgca::tensor::ops::softmax_lse;
+    check("merge_random_layouts", 40, |rng| {
+        let dh = 1 + rng.range(0, 32);
+        let n = rng.range(1, 50);
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal() * 3.0).collect();
+        let values: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dh).map(|_| rng.normal()).collect())
+            .collect();
+        let attend = |idx: &[usize]| -> (Vec<f32>, f32) {
+            if idx.is_empty() {
+                return (vec![0.0; dh], EMPTY_LSE);
+            }
+            let mut s: Vec<f32> = idx.iter().map(|&i| scores[i]).collect();
+            let lse = softmax_lse(&mut s);
+            let mut o = vec![0.0; dh];
+            for (w, &i) in s.iter().zip(idx.iter()) {
+                for j in 0..dh {
+                    o[j] += w * values[i][j];
+                }
+            }
+            (o, lse)
+        };
+        // random disjoint split (either side may be empty)
+        let mut a_idx = Vec::new();
+        let mut b_idx = Vec::new();
+        for i in 0..n {
+            if rng.f32() < 0.5 {
+                a_idx.push(i);
+            } else {
+                b_idx.push(i);
+            }
+        }
+        let all: Vec<usize> = (0..n).collect();
+        let (of, lf) = attend(&all);
+        let (mut oa, la) = attend(&a_idx);
+        let (ob, lb) = attend(&b_idx);
+        let lm = merge_head(&mut oa, la, &ob, lb);
+        hgca::util::proptest::ensure_all_close(&oa, &of, 2e-4, "o")?;
+        hgca::util::proptest::ensure_close(lm, lf, 2e-4, "lse")
+    });
+}
