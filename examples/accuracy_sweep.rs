@@ -21,7 +21,10 @@ fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = Rc::new(PjrtRuntime::new(&dir)?);
     let mr = rt.load_model(&model)?;
-    let text = std::fs::read(args.get_or("text", "data/corpus.txt"))?;
+    mr.warn_if_synthetic();
+    let text = hgca::util::corpus::ensure_corpus(std::path::Path::new(
+        args.get_or("text", "data/corpus.txt"),
+    ))?;
     let text = &text[1000..1000 + len];
 
     // reference: full attention (exact) through the same engine

@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = Rc::new(PjrtRuntime::new(&dir)?);
     let mr = rt.load_model(args.get_or("model", "tiny"))?;
+    mr.warn_if_synthetic();
     let cfg = HgcaConfig::default().with_window(window);
     let mut engine = Engine::new(&mr, cfg, Policy::Hgca { beta: 1.0 });
     engine.sampler = hgca::model::Sampler::Temperature { t: 0.9, seed: 7 };

@@ -15,6 +15,7 @@ fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from(std::env::var("HGCA_ARTIFACTS").unwrap_or("artifacts".into()));
     let rt = Rc::new(PjrtRuntime::new(&dir)?);
     let mr = rt.load_model("tiny")?;
+    mr.warn_if_synthetic();
     let cfg = HgcaConfig {
         blk_size: 16,
         blk_num: 4, // small 64-entry window so turns spill to the CPU store

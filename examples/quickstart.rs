@@ -14,6 +14,7 @@ fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from(std::env::var("HGCA_ARTIFACTS").unwrap_or("artifacts".into()));
     let rt = Rc::new(PjrtRuntime::new(&dir)?);
     let mr = rt.load_model("tiny")?;
+    mr.warn_if_synthetic();
     println!(
         "loaded {} ({} params) on {}",
         mr.cfg.name,

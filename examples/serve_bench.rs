@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = Rc::new(PjrtRuntime::new(&dir)?);
     let mr = rt.load_model(args.get_or("model", "tiny"))?;
+    mr.warn_if_synthetic();
     let n_arts = mr.warmup()?;
     println!("model {} warmed ({n_arts} artifacts compiled)", mr.cfg.name);
 

@@ -66,7 +66,8 @@ fn main() {
     if let Ok(rt) = PjrtRuntime::new(&dir) {
         let rt = Rc::new(rt);
         let mr = rt.load_model("tiny-small").unwrap();
-        let text = std::fs::read(Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
+        mr.warn_if_synthetic();
+        let text = hgca::util::corpus::ensure_corpus(&Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
         let text = &text[1000..1000 + 192];
         println!("\n=== A2: MAW α sensitivity (ppl, window 32, beta 1.0) ===");
         println!("{:>8} {:>10}", "alpha", "ppl");

@@ -16,6 +16,7 @@ fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = Rc::new(PjrtRuntime::new(&dir).expect("make artifacts first"));
     let mr = rt.load_model("tiny").unwrap();
+    mr.warn_if_synthetic();
     let total = if hgca::bench::full_mode() { 8192 } else { 1024 };
     // paper config: GPU window 4096 of 16384 (ratio 1/4); scaled: 256 of 1024
     let window = (total / 4).min(1024);

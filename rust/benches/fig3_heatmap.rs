@@ -14,8 +14,9 @@ fn main() {
     let rt = Rc::new(PjrtRuntime::new(&dir).expect("make artifacts first"));
     let model = std::env::var("HGCA_MODEL").unwrap_or("tiny".into());
     let mr = rt.load_model(&model).unwrap();
+    mr.warn_if_synthetic();
     let oracle = RefModel::new(mr.cfg.clone(), mr.weights.clone()).unwrap();
-    let text = std::fs::read(Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
+    let text = hgca::util::corpus::ensure_corpus(&Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
     let t_len = if hgca::bench::full_mode() { 512 } else { 192 };
     let (_, probs) = oracle.forward(&text[2000..2000 + t_len], true);
 

@@ -13,8 +13,9 @@ fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = Rc::new(PjrtRuntime::new(&dir).expect("make artifacts first"));
     let mr = rt.load_model(&std::env::var("HGCA_MODEL").unwrap_or("tiny".into())).unwrap();
+    mr.warn_if_synthetic();
     let oracle = RefModel::new(mr.cfg.clone(), mr.weights.clone()).unwrap();
-    let text = std::fs::read(Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
+    let text = hgca::util::corpus::ensure_corpus(&Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
     let (t1, t2) = if hgca::bench::full_mode() { (256usize, 512usize) } else { (128, 255) };
     let (_, probs) = oracle.forward(&text[3000..3000 + t2 + 1], true);
     let mid = mr.cfg.n_layers / 2;

@@ -6,13 +6,55 @@
 use std::path::Path;
 use std::rc::Rc;
 
-use hgca::attention::{merge_states, sparse_attention, HeadJob};
+use hgca::attention::{merge_states, sparse_attention, sparse_attention_spawn, HeadJob};
 use hgca::bench::bench;
 use hgca::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(0);
     let dh = 32;
+
+    // ---- persistent pool vs per-call thread spawn ----
+    // the decode hot path: small job counts (batch×heads ≤ 64), every step
+    // one submission. The pool must win here — per-call spawn/join overhead
+    // is the cost the tentpole removes.
+    println!("== pool vs spawn (decode shapes) ==");
+    for (jobs_n, n) in [(4usize, 256usize), (8, 512), (16, 512), (64, 1024)] {
+        let kvs: Vec<(Vec<f32>, Vec<f32>)> = (0..jobs_n)
+            .map(|_| {
+                let mut k = vec![0.0f32; n * dh];
+                let mut v = vec![0.0f32; n * dh];
+                rng.fill_normal(&mut k, 1.0);
+                rng.fill_normal(&mut v, 1.0);
+                (k, v)
+            })
+            .collect();
+        let jobs: Vec<HeadJob> = kvs.iter().map(|(k, v)| HeadJob { k, v, n }).collect();
+        let mut q = vec![0.0f32; jobs_n * dh];
+        rng.fill_normal(&mut q, 0.2);
+        let threads = 4;
+        let s_pool = bench(5, 60, || {
+            let _ = sparse_attention(&jobs, &q, 1, dh, threads, false);
+        });
+        let s_spawn = bench(5, 60, || {
+            let _ = sparse_attention_spawn(&jobs, &q, 1, dh, threads, false);
+        });
+        println!(
+            "jobs={jobs_n:>3} n={n:>5} t={threads}: pool p50 {:>9.1} µs | spawn p50 {:>9.1} µs | speedup {:>5.2}x",
+            s_pool.p50 * 1e6,
+            s_spawn.p50 * 1e6,
+            s_spawn.p50 / s_pool.p50
+        );
+        // bitwise stability: repeated pool runs at different parallelism
+        // caps must reproduce the spawn path exactly
+        let reference = sparse_attention_spawn(&jobs, &q, 1, dh, 1, false);
+        for cap in [1usize, 2, 7, 64] {
+            let out = sparse_attention(&jobs, &q, 1, dh, cap, false);
+            assert_eq!(out.o, reference.o, "pool output drifted at cap {cap}");
+            assert_eq!(out.lse, reference.lse, "pool lse drifted at cap {cap}");
+        }
+    }
+    println!();
 
     // ---- CPU sparse attention across job counts/sizes ----
     for (jobs_n, n) in [(4usize, 512usize), (16, 512), (16, 4096), (64, 1024)] {

@@ -14,7 +14,7 @@ use hgca::runtime::PjrtRuntime;
 fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = Rc::new(PjrtRuntime::new(&dir).expect("make artifacts first"));
-    let text = std::fs::read(Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
+    let text = hgca::util::corpus::ensure_corpus(&Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt")).unwrap();
     let full_mode = hgca::bench::full_mode();
     let models: &[&str] = if full_mode {
         &["tiny-small", "tiny", "tiny-large"]
@@ -29,6 +29,7 @@ fn main() {
     println!("=== Table 1: perplexity, full attention vs HGCA (len {len}) ===");
     for model in models {
         let mr = rt.load_model(model).unwrap();
+        mr.warn_if_synthetic();
         let mk_cfg = |window: usize| HgcaConfig {
             blk_size: 8,
             blk_num: (window / 8).max(1),

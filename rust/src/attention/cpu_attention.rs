@@ -4,15 +4,24 @@
 //! contextual cache during decode, the full CPU store during append
 //! re-evaluation. Jobs are packed into ≈`threads` contiguous tasks
 //! (the paper's adjacent-head merging, §3.3: thread count stays near
-//! batch×heads / cores instead of one thread per head), each task runs on
-//! its own std thread, and every job writes to a disjoint slice of a
-//! pre-allocated output buffer (the paper's pinned-buffer offsets).
+//! batch×heads / cores instead of one thread per head) and every job writes
+//! to a disjoint slice of a pre-allocated output buffer (the paper's
+//! pinned-buffer offsets).
+//!
+//! Execution goes through the persistent worker pool
+//! ([`super::pool::AttnPool`]) — long-lived workers, no per-call thread
+//! spawn. The original scoped-spawn implementation survives as
+//! [`sparse_attention_spawn_masked`] for the pool-vs-spawn microbenchmarks
+//! and as an independent conformance reference; both paths share
+//! [`run_job_range`] so their numerics are identical by construction.
 //!
 //! Returns partial outputs + log-sum-exp per (row, head, query) for the
 //! LSE merge, and optionally the per-slot attention mass (A_cpu) used by
 //! MAW re-evaluation (Algorithm 1 line 19).
 
 use crate::tensor::ops::{axpy, dot, softmax_lse};
+
+use super::pool::AttnPool;
 
 /// One (row, head) unit of work: attention over `n` KV entries stored
 /// contiguously ([n][d_head] row-major).
@@ -53,8 +62,41 @@ pub fn sparse_attention(
 /// Like [`sparse_attention`] but with an optional per-job count of *valid*
 /// query rows (chunk padding support): rows >= q_valid[job] are skipped --
 /// zero output, EMPTY lse, and no contribution to `probs`.
+///
+/// Runs on the process-wide persistent pool ([`AttnPool::global`]);
+/// `threads` caps how many packed tasks the call splits into. Results are
+/// bitwise independent of both the cap and the pool size.
 #[allow(clippy::too_many_arguments)]
 pub fn sparse_attention_masked(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    threads: usize,
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+) -> CpuAttnOutput {
+    AttnPool::global().run_masked(jobs, q, n_query, d_head, threads, want_probs, q_valid)
+}
+
+/// The original per-call scoped-spawn implementation. Kept as (a) the
+/// baseline for the pool-vs-spawn microbenchmarks (benches/hotpath_micro)
+/// and (b) an execution-independent reference the conformance tests compare
+/// the pool against.
+pub fn sparse_attention_spawn(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    threads: usize,
+    want_probs: bool,
+) -> CpuAttnOutput {
+    sparse_attention_spawn_masked(jobs, q, n_query, d_head, threads, want_probs, None)
+}
+
+/// See [`sparse_attention_spawn`].
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attention_spawn_masked(
     jobs: &[HeadJob<'_>],
     q: &[f32],
     n_query: usize,
@@ -104,7 +146,7 @@ pub fn sparse_attention_masked(
             let task_valid = q_valid.map(|v| &v[start..start + count]);
             tasks += 1;
             s.spawn(move || {
-                run_task(
+                run_job_range(
                     task_jobs, task_q, n_query, d_head, o_task, lse_task, p_task, want_probs,
                     task_valid,
                 )
@@ -121,8 +163,12 @@ pub fn sparse_attention_masked(
     }
 }
 
+/// Shared per-range kernel: attention for a contiguous job range, writing a
+/// disjoint output slice. Both the pool tasks and the spawn path call this,
+/// so the two execution strategies are numerically identical by
+/// construction.
 #[allow(clippy::too_many_arguments)]
-fn run_task(
+pub(crate) fn run_job_range(
     jobs: &[HeadJob<'_>],
     q: &[f32],
     n_query: usize,
@@ -271,6 +317,105 @@ mod tests {
                 assert!((out.o[i * dh + j] - oe[j]).abs() < 1e-5);
             }
             assert!((out.lse[i] - le).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn all_empty_jobs_return_empty_lse_without_panicking() {
+        // every job has n == 0 — nothing to attend anywhere
+        let dh = 8;
+        let nj = 5;
+        let jobs: Vec<HeadJob> = (0..nj).map(|_| HeadJob { k: &[], v: &[], n: 0 }).collect();
+        let q = vec![1.0; nj * dh];
+        for threads in [1usize, 3, 64] {
+            let out = sparse_attention(&jobs, &q, 1, dh, threads, true);
+            assert!(out.lse.iter().all(|&l| l == EMPTY_LSE));
+            assert!(out.o.iter().all(|&x| x == 0.0));
+            assert!(out.probs.as_ref().unwrap().iter().all(|p| p.is_empty()));
+        }
+    }
+
+    #[test]
+    fn zero_valid_query_rows_yield_empty_outputs() {
+        // q_valid = 0: the job has KV entries but no live queries
+        let mut rng = Rng::new(9);
+        let (dh, n, nq) = (8, 12, 3);
+        let (k, v) = rand_kv(&mut rng, n, dh);
+        let jobs = [HeadJob { k: &k, v: &v, n }];
+        let mut q = vec![0.0; nq * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let out = sparse_attention_masked(&jobs, &q, nq, dh, 4, true, Some(&[0]));
+        assert!(out.lse.iter().all(|&l| l == EMPTY_LSE));
+        assert!(out.o.iter().all(|&x| x == 0.0));
+        let total: f32 = out.probs.as_ref().unwrap()[0].iter().sum();
+        assert_eq!(total, 0.0, "masked rows contribute no attention mass");
+    }
+
+    #[test]
+    fn partial_q_valid_matches_unmasked_prefix() {
+        // rows below q_valid must equal the unmasked computation; rows at or
+        // above it must be inert
+        let mut rng = Rng::new(10);
+        let (dh, n, nq) = (8, 9, 4);
+        let (k, v) = rand_kv(&mut rng, n, dh);
+        let jobs = [HeadJob { k: &k, v: &v, n }];
+        let mut q = vec![0.0; nq * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let full = sparse_attention(&jobs, &q, nq, dh, 2, false);
+        let masked = sparse_attention_masked(&jobs, &q, nq, dh, 2, false, Some(&[2]));
+        assert_eq!(&masked.o[..2 * dh], &full.o[..2 * dh]);
+        assert_eq!(&masked.lse[..2], &full.lse[..2]);
+        assert!(masked.o[2 * dh..].iter().all(|&x| x == 0.0));
+        assert!(masked.lse[2..].iter().all(|&l| l == EMPTY_LSE));
+    }
+
+    #[test]
+    fn single_job_many_threads_does_not_overdecompose() {
+        // one job, absurd thread cap: exactly one task, correct output
+        let mut rng = Rng::new(11);
+        let (dh, n) = (16, 21);
+        let (k, v) = rand_kv(&mut rng, n, dh);
+        let jobs = [HeadJob { k: &k, v: &v, n }];
+        let mut q = vec![0.0; dh];
+        rng.fill_normal(&mut q, 1.0);
+        let out = sparse_attention(&jobs, &q, 1, dh, 4096, false);
+        assert_eq!(out.tasks, 1);
+        let (oe, le) = naive_one(&q, &k, &v, n, dh);
+        for j in 0..dh {
+            assert!((out.o[j] - oe[j]).abs() < 1e-5);
+        }
+        assert!((out.lse[0] - le).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mixed_empty_and_nonempty_jobs_across_thread_counts() {
+        let mut rng = Rng::new(12);
+        let dh = 8;
+        let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..11)
+            .map(|i| {
+                let n = if i % 3 == 0 { 0 } else { 1 + i };
+                let (k, v) = rand_kv(&mut rng, n, dh);
+                (k, v, n)
+            })
+            .collect();
+        let jobs: Vec<HeadJob> = kvs
+            .iter()
+            .map(|(k, v, n)| HeadJob { k, v, n: *n })
+            .collect();
+        let mut q = vec![0.0; jobs.len() * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let base = sparse_attention(&jobs, &q, 1, dh, 1, false);
+        for threads in [2usize, 7, 64] {
+            let out = sparse_attention(&jobs, &q, 1, dh, threads, false);
+            assert_eq!(out.o, base.o, "threads={threads}");
+            assert_eq!(out.lse, base.lse, "threads={threads}");
+        }
+        for (ji, (_, _, n)) in kvs.iter().enumerate() {
+            if *n == 0 {
+                assert_eq!(base.lse[ji], EMPTY_LSE);
+            } else {
+                assert!(base.lse[ji].is_finite());
+            }
         }
     }
 

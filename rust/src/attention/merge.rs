@@ -153,6 +153,63 @@ mod tests {
     }
 
     #[test]
+    fn prop_merge_associative_multiway() {
+        // k ≥ 3 disjoint partitions: left fold, right fold, and the direct
+        // union must agree — the property that lets the engine merge GPU,
+        // contextual-cache, and append partials in any order
+        check("merge_associative", 40, |rng: &mut Rng| {
+            let dh = 1 + rng.range(1, 12);
+            let k_parts = rng.range(3, 7);
+            let n = k_parts + rng.range(0, 30);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal() * 4.0).collect();
+            let values: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dh).map(|_| rng.normal()).collect())
+                .collect();
+            // assign every entry to a partition; keep each non-degenerate by
+            // seeding one entry per partition first
+            let mut part = vec![0usize; n];
+            for (i, p) in part.iter_mut().enumerate().take(k_parts) {
+                *p = i;
+            }
+            for p in part.iter_mut().skip(k_parts) {
+                *p = rng.range(0, k_parts);
+            }
+            let partials: Vec<(Vec<f32>, f32)> = (0..k_parts)
+                .map(|pi| {
+                    let idx: Vec<usize> =
+                        (0..n).filter(|&i| part[i] == pi).collect();
+                    let mut s: Vec<f32> = idx.iter().map(|&i| scores[i]).collect();
+                    let lse = softmax_lse(&mut s);
+                    let mut o = vec![0.0; dh];
+                    for (w, &i) in s.iter().zip(idx.iter()) {
+                        for j in 0..dh {
+                            o[j] += w * values[i][j];
+                        }
+                    }
+                    (o, lse)
+                })
+                .collect();
+            let (of, lf) = naive(&scores, &values, dh);
+
+            // left fold: ((p0 ⊕ p1) ⊕ p2) ⊕ …
+            let (mut o_l, mut l_l) = partials[0].clone();
+            for (o, l) in &partials[1..] {
+                l_l = merge_head(&mut o_l, l_l, o, *l);
+            }
+            // right fold: p0 ⊕ (p1 ⊕ (p2 ⊕ …))
+            let (mut o_r, mut l_r) = partials[k_parts - 1].clone();
+            for (o, l) in partials[..k_parts - 1].iter().rev() {
+                // merge_head accumulates into its first arg; swap via commutativity
+                l_r = merge_head(&mut o_r, l_r, o, *l);
+            }
+            ensure_all_close(&o_l, &of, 2e-4, "left fold vs union")?;
+            ensure_close(l_l, lf, 2e-4, "left lse")?;
+            ensure_all_close(&o_r, &o_l, 2e-4, "right fold vs left fold")?;
+            ensure_close(l_r, l_l, 2e-4, "right lse vs left lse")
+        });
+    }
+
+    #[test]
     fn prop_merge_commutative() {
         check("merge_commutative", 30, |rng: &mut Rng| {
             let dh = 4;

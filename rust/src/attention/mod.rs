@@ -1,9 +1,14 @@
-//! Hybrid attention primitives (paper §3.3): CPU-side multithreaded sparse
-//! attention, the log-sum-exp merge, and a dense reference oracle.
+//! Hybrid attention primitives (paper §3.3): CPU-side sparse attention on a
+//! persistent worker pool, the log-sum-exp merge, and a dense reference
+//! oracle.
 
 pub mod cpu_attention;
 pub mod dense_ref;
 pub mod merge;
+pub mod pool;
 
-pub use cpu_attention::{sparse_attention, CpuAttnOutput, HeadJob};
+pub use cpu_attention::{
+    sparse_attention, sparse_attention_masked, sparse_attention_spawn, CpuAttnOutput, HeadJob,
+};
 pub use merge::{merge_head, merge_states, EMPTY_LSE};
+pub use pool::{AttnPool, PoolStats};

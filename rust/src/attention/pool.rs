@@ -1,0 +1,564 @@
+//! Persistent CPU attention worker pool (paper §3.3, production form).
+//!
+//! The seed implementation spawned fresh `std::thread`s on every
+//! `sparse_attention` call — fine for one long prefill, ruinous for decode
+//! serving where each step submits batch×heads tiny jobs and the per-call
+//! spawn/join cost dominates. This pool keeps a fixed set of long-lived
+//! workers behind a shared FIFO injector queue:
+//!
+//! * **submit/wait** — [`AttnPool::run_masked`] packs the (row, head) jobs
+//!   into contiguous ranges ("adjacent head merging"), enqueues one task per
+//!   range, and blocks until the batch completes. Each task writes a
+//!   disjoint slice of the caller's pre-allocated output buffers, exactly as
+//!   the spawn path did.
+//! * **work stealing** — the submitting thread doesn't idle: it pops tasks
+//!   from the same queue until its batch drains (caller-assist), so progress
+//!   is guaranteed even with zero workers and small batches finish at
+//!   near-inline latency.
+//! * **determinism** — task packing depends only on `(jobs.len(),
+//!   max_parallel)`, never on worker count or scheduling, and every job's
+//!   arithmetic touches only its own inputs/outputs. Results are therefore
+//!   **bitwise identical** across pool sizes, parallelism caps, and repeated
+//!   runs. The conformance suite pins this.
+//!
+//! Multiple engines (threads) may share one pool; tasks from concurrent
+//! submissions interleave in FIFO order. [`AttnPool::global`] is the
+//! process-wide instance used by `sparse_attention*`; its size comes from
+//! `HGCA_POOL_THREADS` or `available_parallelism`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::cpu_attention::{run_job_range, CpuAttnOutput, HeadJob, EMPTY_LSE};
+
+/// One queued unit of work: a type-erased closure over a contiguous job
+/// range, plus the batch it belongs to.
+struct Task {
+    run: Box<dyn FnOnce() + Send + 'static>,
+    batch: Arc<BatchState>,
+}
+
+/// Completion tracking for one submission.
+struct BatchState {
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    /// set when any task of this batch panicked — the submitter must not
+    /// treat the (partially written) outputs as valid
+    poisoned: AtomicBool,
+}
+
+impl BatchState {
+    fn new(n: usize) -> Arc<BatchState> {
+        Arc::new(BatchState {
+            remaining: Mutex::new(n),
+            done_cv: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    fn finish_one(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.done_cv.wait(rem).unwrap();
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    submissions: AtomicU64,
+    tasks: AtomicU64,
+    jobs: AtomicU64,
+    busy_ns: AtomicU64,
+    queue_peak: AtomicUsize,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    counters: Counters,
+}
+
+impl Shared {
+    fn pop_task(&self) -> Option<Task> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
+    /// Run one task, catching panics so the batch completion count is
+    /// decremented no matter what (a waiter must never hang, and queued
+    /// sibling tasks must never outlive their borrowed buffers — see the
+    /// SAFETY notes in `run_masked`). Returns the panic payload, if any.
+    fn run_task(&self, task: Task) -> Option<Box<dyn std::any::Any + Send>> {
+        let Task { run, batch } = task;
+        let t0 = Instant::now();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run));
+        self.counters
+            .busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if result.is_err() {
+            batch.poisoned.store(true, Ordering::SeqCst);
+        }
+        batch.finish_one();
+        result.err()
+    }
+}
+
+/// Unwind guard for a submission: if `run_masked` unwinds (a caller-assist
+/// task re-raised a panic), this drains and waits out the whole batch
+/// before the caller's stack frame — which the queued tasks borrow — is
+/// torn down. On the normal path the batch is already done and this is a
+/// no-op.
+struct BatchGuard<'p> {
+    shared: &'p Shared,
+    batch: &'p Arc<BatchState>,
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        while !self.batch.is_done() {
+            match self.shared.pop_task() {
+                // panics here are already being reported by the unwind in
+                // flight; swallow them to avoid a double-panic abort
+                Some(t) => {
+                    let _ = self.shared.run_task(t);
+                }
+                None => break,
+            }
+        }
+        self.batch.wait();
+    }
+}
+
+/// Read-only snapshot of pool activity (serving metrics endpoint).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PoolStats {
+    pub workers: usize,
+    /// run_masked calls
+    pub submissions: u64,
+    /// packed tasks executed (≈ submissions × min(parallelism, jobs))
+    pub tasks: u64,
+    /// (row, head) jobs processed
+    pub jobs: u64,
+    /// summed task execution time across workers + caller-assist
+    pub busy_secs: f64,
+    /// tasks currently queued
+    pub queue_depth: usize,
+    /// high-water mark of the queue depth at enqueue time
+    pub queue_peak: usize,
+}
+
+/// Persistent worker pool for CPU sparse attention.
+pub struct AttnPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl AttnPool {
+    /// Spawn a pool with `workers` long-lived threads. Zero workers is
+    /// valid: every submission then runs entirely on the calling thread
+    /// (the caller-assist path), which is the deterministic-latency
+    /// configuration some tests use.
+    pub fn new(workers: usize) -> AttnPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            counters: Counters::default(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hgca-attn-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        AttnPool {
+            shared,
+            workers: handles,
+        }
+    }
+
+    /// The process-wide pool used by `sparse_attention*`. Sized by
+    /// `HGCA_POOL_THREADS` when set, else `available_parallelism`.
+    pub fn global() -> &'static AttnPool {
+        static GLOBAL: OnceLock<AttnPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let n = std::env::var("HGCA_POOL_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(4)
+                });
+            AttnPool::new(n)
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let c = &self.shared.counters;
+        PoolStats {
+            workers: self.workers.len(),
+            submissions: c.submissions.load(Ordering::Relaxed),
+            tasks: c.tasks.load(Ordering::Relaxed),
+            jobs: c.jobs.load(Ordering::Relaxed),
+            busy_secs: c.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            queue_depth: self.shared.queue.lock().unwrap().len(),
+            queue_peak: c.queue_peak.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pool-backed sparse attention: identical contract and numerics to the
+    /// per-call-spawn path (`sparse_attention_spawn_masked`), minus the
+    /// thread spawn/join per call. `max_parallel` caps how many packed
+    /// tasks the submission splits into (the engine passes
+    /// `cfg.cpu_threads`); output is bitwise independent of both this cap
+    /// and the pool's worker count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_masked(
+        &self,
+        jobs: &[HeadJob<'_>],
+        q: &[f32],
+        n_query: usize,
+        d_head: usize,
+        max_parallel: usize,
+        want_probs: bool,
+        q_valid: Option<&[usize]>,
+    ) -> CpuAttnOutput {
+        let nj = jobs.len();
+        assert_eq!(q.len(), nj * n_query * d_head, "q layout mismatch");
+        let mut o = vec![0.0f32; nj * n_query * d_head];
+        let mut lse = vec![EMPTY_LSE; nj * n_query];
+        let mut probs: Vec<Vec<f32>> = if want_probs {
+            jobs.iter().map(|j| vec![0.0; j.n]).collect()
+        } else {
+            Vec::new()
+        };
+        if nj == 0 {
+            return CpuAttnOutput {
+                o,
+                lse,
+                probs: want_probs.then_some(probs),
+                tasks: 0,
+            };
+        }
+
+        let threads = max_parallel.max(1).min(nj);
+        // contiguous job ranges per task — the "adjacent head packing";
+        // depends only on (nj, threads), never on worker availability
+        let per_task = nj.div_ceil(threads).max(1);
+        let n_tasks = nj.div_ceil(per_task);
+        let batch = BatchState::new(n_tasks);
+
+        let c = &self.shared.counters;
+        c.submissions.fetch_add(1, Ordering::Relaxed);
+        c.tasks.fetch_add(n_tasks as u64, Ordering::Relaxed);
+        c.jobs.fetch_add(nj as u64, Ordering::Relaxed);
+
+        {
+            let mut o_rest: &mut [f32] = &mut o;
+            let mut lse_rest: &mut [f32] = &mut lse;
+            let mut probs_rest: &mut [Vec<f32>] = &mut probs;
+            let mut queue = self.shared.queue.lock().unwrap();
+            let mut start = 0;
+            while start < nj {
+                let count = per_task.min(nj - start);
+                let (o_task, o_next) = o_rest.split_at_mut(count * n_query * d_head);
+                let (lse_task, lse_next) = lse_rest.split_at_mut(count * n_query);
+                let (p_task, p_next) = if want_probs {
+                    probs_rest.split_at_mut(count)
+                } else {
+                    (&mut [][..], &mut [][..])
+                };
+                o_rest = o_next;
+                lse_rest = lse_next;
+                probs_rest = p_next;
+                let task_jobs = &jobs[start..start + count];
+                let task_q = &q[start * n_query * d_head..(start + count) * n_query * d_head];
+                let task_valid = q_valid.map(|v| &v[start..start + count]);
+                let run: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    run_job_range(
+                        task_jobs, task_q, n_query, d_head, o_task, lse_task, p_task, want_probs,
+                        task_valid,
+                    )
+                });
+                // SAFETY: every borrow captured by `run` outlives this call —
+                // run_masked blocks on batch completion before returning, so
+                // the 'static promotion never outlives the borrowed data.
+                // Output slices are pairwise disjoint by construction
+                // (split_at_mut), so concurrent tasks never alias.
+                let run: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(run) };
+                queue.push_back(Task {
+                    run,
+                    batch: Arc::clone(&batch),
+                });
+                start += count;
+            }
+            let depth = queue.len();
+            c.queue_peak.fetch_max(depth, Ordering::Relaxed);
+            drop(queue);
+            self.shared.work_cv.notify_all();
+        }
+
+        // caller-assist: steal tasks (FIFO, possibly from other concurrent
+        // submissions) until this batch completes, then wait out stragglers.
+        // The guard keeps the unwind path sound: should a re-raised task
+        // panic unwind this frame, it drains + waits the batch before the
+        // borrowed buffers drop.
+        let guard = BatchGuard {
+            shared: &self.shared,
+            batch: &batch,
+        };
+        while !batch.is_done() {
+            let Some(task) = self.shared.pop_task() else {
+                break;
+            };
+            if let Some(payload) = self.shared.run_task(task) {
+                // a task the *caller* ran panicked: propagate to the caller
+                // (the guard settles the rest of the batch first)
+                std::panic::resume_unwind(payload);
+            }
+        }
+        batch.wait();
+        drop(guard);
+        // a task that panicked on a worker completed its batch slot (so we
+        // never hang) but its output range is garbage — surface the failure
+        // on the submitting thread instead of returning partial results
+        assert!(
+            !batch.poisoned.load(Ordering::SeqCst),
+            "attention pool: a task of this submission panicked"
+        );
+
+        CpuAttnOutput {
+            o,
+            lse,
+            probs: want_probs.then_some(probs),
+            tasks: n_tasks,
+        }
+    }
+}
+
+impl Drop for AttnPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let task = {
+            let mut queue = sh.queue.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(t) = queue.pop_front() {
+                    break t;
+                }
+                queue = sh.work_cv.wait(queue).unwrap();
+            }
+        };
+        // a panicking task must not kill the worker or strand its batch;
+        // run_task catches, completes the batch slot, and hands back the
+        // payload — report it and keep serving
+        if sh.run_task(task).is_some() {
+            eprintln!("hgca attention pool: task panicked (batch slot completed, worker continues)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::cpu_attention::sparse_attention_spawn_masked;
+    use crate::util::proptest::{check, ensure, ensure_all_close};
+    use crate::util::rng::Rng;
+
+    fn rand_jobs(
+        rng: &mut Rng,
+        nj: usize,
+        dh: usize,
+        max_n: usize,
+    ) -> Vec<(Vec<f32>, Vec<f32>, usize)> {
+        (0..nj)
+            .map(|_| {
+                let n = rng.range(0, max_n + 1);
+                let mut k = vec![0.0; n * dh];
+                let mut v = vec![0.0; n * dh];
+                rng.fill_normal(&mut k, 1.0);
+                rng.fill_normal(&mut v, 1.0);
+                (k, v, n)
+            })
+            .collect()
+    }
+
+    fn as_jobs(kvs: &[(Vec<f32>, Vec<f32>, usize)]) -> Vec<HeadJob<'_>> {
+        kvs.iter()
+            .map(|(k, v, n)| HeadJob { k, v, n: *n })
+            .collect()
+    }
+
+    #[test]
+    fn pool_output_bitwise_stable_across_pool_sizes_and_caps() {
+        let mut rng = Rng::new(0xA11);
+        let dh = 16;
+        let kvs = rand_jobs(&mut rng, 13, dh, 40);
+        let jobs = as_jobs(&kvs);
+        let nq = 2;
+        let mut q = vec![0.0; jobs.len() * nq * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let q_valid: Vec<usize> = (0..jobs.len()).map(|i| i % (nq + 1)).collect();
+
+        let reference = AttnPool::new(0).run_masked(&jobs, &q, nq, dh, 1, true, Some(&q_valid));
+        for workers in [0usize, 1, 2, 7] {
+            let pool = AttnPool::new(workers);
+            for cap in [1usize, 2, 7, 64] {
+                let out = pool.run_masked(&jobs, &q, nq, dh, cap, true, Some(&q_valid));
+                assert_eq!(out.o, reference.o, "workers={workers} cap={cap}");
+                assert_eq!(out.lse, reference.lse, "workers={workers} cap={cap}");
+                assert_eq!(out.probs, reference.probs, "workers={workers} cap={cap}");
+                assert_eq!(out.tasks, 13.min(cap));
+            }
+        }
+    }
+
+    #[test]
+    fn pool_matches_spawn_path_bitwise() {
+        let mut rng = Rng::new(0xB22);
+        let dh = 8;
+        let kvs = rand_jobs(&mut rng, 9, dh, 30);
+        let jobs = as_jobs(&kvs);
+        let mut q = vec![0.0; jobs.len() * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let pool = AttnPool::new(3);
+        let a = pool.run_masked(&jobs, &q, 1, dh, 4, true, None);
+        let b = sparse_attention_spawn_masked(&jobs, &q, 1, dh, 4, true, None);
+        assert_eq!(a.o, b.o);
+        assert_eq!(a.lse, b.lse);
+        assert_eq!(a.probs, b.probs);
+        assert_eq!(a.tasks, b.tasks);
+    }
+
+    #[test]
+    fn empty_submission_returns_immediately() {
+        let pool = AttnPool::new(2);
+        let out = pool.run_masked(&[], &[], 1, 8, 4, true, None);
+        assert!(out.o.is_empty());
+        assert!(out.lse.is_empty());
+        assert_eq!(out.tasks, 0);
+        assert_eq!(pool.stats().submissions, 0); // early-out before counting
+    }
+
+    #[test]
+    fn stats_count_submissions_tasks_jobs() {
+        let mut rng = Rng::new(3);
+        let dh = 4;
+        let kvs = rand_jobs(&mut rng, 6, dh, 10);
+        let jobs = as_jobs(&kvs);
+        let mut q = vec![0.0; jobs.len() * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let pool = AttnPool::new(2);
+        pool.run_masked(&jobs, &q, 1, dh, 3, false, None);
+        pool.run_masked(&jobs, &q, 1, dh, 6, false, None);
+        let s = pool.stats();
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.submissions, 2);
+        assert_eq!(s.jobs, 12);
+        assert_eq!(s.tasks, 3 + 6);
+        assert_eq!(s.queue_depth, 0, "queue drains after completion");
+        assert!(s.queue_peak >= 1);
+    }
+
+    #[test]
+    fn shared_pool_across_threads() {
+        // concurrent submissions from several engine threads interleave
+        // safely and each caller gets its own correct outputs
+        let pool = std::sync::Arc::new(AttnPool::new(3));
+        let mut handles = Vec::new();
+        for seed in 0..4u64 {
+            let pool = std::sync::Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(seed);
+                let dh = 8;
+                let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..7)
+                    .map(|_| {
+                        let n = 1 + rng.range(0, 20);
+                        let mut k = vec![0.0; n * dh];
+                        let mut v = vec![0.0; n * dh];
+                        rng.fill_normal(&mut k, 1.0);
+                        rng.fill_normal(&mut v, 1.0);
+                        (k, v, n)
+                    })
+                    .collect();
+                let jobs: Vec<HeadJob> = kvs
+                    .iter()
+                    .map(|(k, v, n)| HeadJob { k, v, n: *n })
+                    .collect();
+                let mut q = vec![0.0; jobs.len() * dh];
+                rng.fill_normal(&mut q, 1.0);
+                let single = sparse_attention_spawn_masked(&jobs, &q, 1, dh, 1, false, None);
+                for _ in 0..16 {
+                    let out = pool.run_masked(&jobs, &q, 1, dh, 4, false, None);
+                    assert_eq!(out.o, single.o);
+                    assert_eq!(out.lse, single.lse);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_pool_matches_single_thread_reference() {
+        // satellite: pool output ≡ single-threaded reference for random job
+        // shapes at every parallelism cap in {1, 2, 7, 64}
+        let pool = AttnPool::new(4);
+        check("pool_vs_reference", 20, |rng: &mut Rng| {
+            let dh = *rng.choice(&[4usize, 8, 32]);
+            let nj = rng.range(1, 20);
+            let nq = rng.range(1, 4);
+            let kvs = rand_jobs(rng, nj, dh, 24);
+            let jobs = as_jobs(&kvs);
+            let mut q = vec![0.0; nj * nq * dh];
+            rng.fill_normal(&mut q, 1.0);
+            let reference = sparse_attention_spawn_masked(&jobs, &q, nq, dh, 1, false, None);
+            for cap in [1usize, 2, 7, 64] {
+                let out = pool.run_masked(&jobs, &q, nq, dh, cap, false, None);
+                ensure_all_close(&out.o, &reference.o, 1e-5, "o")?;
+                ensure_all_close(&out.lse, &reference.lse, 1e-5, "lse")?;
+                ensure(
+                    out.o == reference.o && out.lse == reference.lse,
+                    "pool output must be bitwise identical to the reference",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

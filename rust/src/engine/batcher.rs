@@ -1,6 +1,17 @@
 //! Continuous batcher: admits queued requests into free batch rows each
 //! step, retires finished sequences (vLLM-style iteration-level
 //! scheduling, shaped to the fixed-batch artifacts).
+//!
+//! Scheduling is strict FIFO admission: whenever a batch row frees up, the
+//! oldest queued request takes it. With bounded `max_new_tokens` this gives
+//! a hard no-starvation bound — a request queued behind `Q` others waits at
+//! most `ceil(Q / batch) × max_target` ticks before admission — which the
+//! conformance suite (tests/integration_pool.rs) checks via the per-request
+//! `admit_tick` / `queue_ticks` accounting recorded on every [`Completion`].
+//!
+//! One `tick` = one fused decode step: every active sequence contributes its
+//! (row, head) jobs to a single CPU-pool submission inside
+//! `Engine::decode_step`, merged per-sequence via the LSE merge.
 
 use std::collections::VecDeque;
 
@@ -21,49 +32,113 @@ pub struct Completion {
     pub text: Vec<u8>,
     pub prompt_len: usize,
     pub decode_steps: usize,
+    /// ticks spent waiting in the queue before admission
+    pub queue_ticks: u64,
+    /// tick at which the request entered the batch
+    pub admit_tick: u64,
+    /// tick at which the request completed
+    pub finish_tick: u64,
+}
+
+struct Queued {
+    req: Request,
+    submit_tick: u64,
 }
 
 struct Active {
     seq: Sequence,
     target: usize,
     generated: usize,
+    admit_tick: u64,
+    queue_ticks: u64,
+}
+
+/// Aggregate scheduling statistics (serving metrics endpoint).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatcherStats {
+    pub ticks: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    /// requests currently queued (not yet admitted)
+    pub queued: usize,
+    /// requests currently decoding
+    pub active: usize,
+    /// mean fraction of batch rows occupied per tick (0..=1)
+    pub mean_occupancy: f64,
+    /// worst queue wait observed across completed requests, in ticks
+    pub max_queue_ticks: u64,
 }
 
 /// Iteration-level scheduler over a fixed-batch engine.
 pub struct Batcher {
     pub batch: usize,
-    queue: VecDeque<Request>,
+    queue: VecDeque<Queued>,
     active: Vec<Active>,
-    done: Vec<Completion>,
-    next_admit: usize,
+    tick_count: u64,
+    submitted: u64,
+    completed: u64,
+    occupancy_rows: u64,
+    max_queue_ticks: u64,
 }
 
 impl Batcher {
     pub fn new(batch: usize) -> Batcher {
+        assert!(batch > 0, "batch must be positive");
         Batcher {
             batch,
             queue: VecDeque::new(),
             active: Vec::new(),
-            done: Vec::new(),
-            next_admit: 0,
+            tick_count: 0,
+            submitted: 0,
+            completed: 0,
+            occupancy_rows: 0,
+            max_queue_ticks: 0,
         }
     }
 
+    /// Enqueue a request; it joins the running batch at the next tick with a
+    /// free row (continuous admission — no drain barrier).
     pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+        self.submitted += 1;
+        self.queue.push_back(Queued {
+            req,
+            submit_tick: self.tick_count,
+        });
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.active.len()
     }
 
-    /// Run one scheduling iteration: admit + prefill newcomers (prefill is
-    /// per-sequence, batch=1 artifacts), then one batched decode step over
-    /// all active rows. Returns newly finished completions.
+    pub fn stats(&self) -> BatcherStats {
+        BatcherStats {
+            ticks: self.tick_count,
+            submitted: self.submitted,
+            completed: self.completed,
+            queued: self.queue.len(),
+            active: self.active.len(),
+            mean_occupancy: if self.tick_count == 0 {
+                0.0
+            } else {
+                self.occupancy_rows as f64 / (self.tick_count * self.batch as u64) as f64
+            },
+            max_queue_ticks: self.max_queue_ticks,
+        }
+    }
+
+    /// Run one scheduling iteration: admit + prefill newcomers FIFO into
+    /// free rows (prefill is per-sequence, batch=1 artifacts), then one
+    /// fused decode step over all active rows. Returns newly finished
+    /// completions.
     pub fn tick(&mut self, engine: &mut Engine<'_>) -> Result<Vec<Completion>> {
-        // admit
+        let mut finished = Vec::new();
+        // ---- admit (FIFO — the no-starvation invariant) ----
         while self.active.len() < self.batch {
-            let Some(req) = self.queue.pop_front() else { break };
+            let Some(Queued { req, submit_tick }) = self.queue.pop_front() else {
+                break;
+            };
+            let queue_ticks = self.tick_count - submit_tick;
+            self.max_queue_ticks = self.max_queue_ticks.max(queue_ticks);
             let mut seq = engine.new_sequence(req.id, &req.prompt);
             let logits = engine.prefill(&mut seq)?;
             // first sampled token comes from the prefill logits
@@ -73,50 +148,77 @@ impl Batcher {
                 seq.tokens.push(t);
                 generated = 1;
             }
+            if generated >= req.max_new_tokens {
+                // zero-token request (or degenerate prompt): retire without
+                // ever occupying a decode row
+                let prompt_len = seq.tokens.len() - generated;
+                self.completed += 1;
+                finished.push(Completion {
+                    id: seq.id,
+                    text: seq.tokens[prompt_len..].to_vec(),
+                    prompt_len,
+                    decode_steps: generated,
+                    queue_ticks,
+                    admit_tick: self.tick_count,
+                    finish_tick: self.tick_count,
+                });
+                continue;
+            }
             self.active.push(Active {
                 seq,
                 target: req.max_new_tokens,
                 generated,
+                admit_tick: self.tick_count,
+                queue_ticks,
             });
-            self.next_admit += 1;
         }
         if self.active.is_empty() {
-            return Ok(Vec::new());
+            return Ok(finished);
         }
-        // batched decode over the active rows
+        // ---- one fused decode step over the active rows ----
+        // (all sequences' (row, head) jobs land in a single worker-pool
+        // submission inside the engine; outputs merge per-sequence)
         {
             let mut refs: Vec<&mut Sequence> = self.active.iter_mut().map(|a| &mut a.seq).collect();
             engine.decode_step(&mut refs, self.batch, None)?;
         }
+        self.occupancy_rows += self.active.len() as u64;
+        self.tick_count += 1;
         for a in self.active.iter_mut() {
             a.generated += 1;
         }
-        // retire finished
-        let mut finished = Vec::new();
+        // ---- retire finished ----
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].generated >= self.active[i].target {
                 let a = self.active.swap_remove(i);
                 let prompt_len = a.seq.tokens.len() - a.generated;
+                self.completed += 1;
                 finished.push(Completion {
                     id: a.seq.id,
                     text: a.seq.tokens[prompt_len..].to_vec(),
                     prompt_len,
                     decode_steps: a.generated,
+                    queue_ticks: a.queue_ticks,
+                    admit_tick: a.admit_tick,
+                    finish_tick: self.tick_count,
                 });
             } else {
                 i += 1;
             }
         }
-        self.done.extend(finished.clone());
         Ok(finished)
     }
 
-    /// Drive ticks until every submitted request completes.
+    /// Drive ticks until every submitted request completes. Returns the
+    /// completions produced *by these ticks* — completions already handed
+    /// out by earlier manual `tick` calls are the caller's to keep (the
+    /// batcher retains nothing, so long-running servers don't accumulate).
     pub fn run_to_completion(&mut self, engine: &mut Engine<'_>) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
         while self.pending() > 0 {
-            self.tick(engine)?;
+            done.extend(self.tick(engine)?);
         }
-        Ok(std::mem::take(&mut self.done))
+        Ok(done)
     }
 }

@@ -315,9 +315,15 @@ impl<'m> Engine<'m> {
                         q_valid.push(v);
                     }
                 }
+                // one pool submission carries every active sequence's jobs
+                // for this layer (continuous batching: cross-request work is
+                // fused, then split back per sequence by the LSE merge)
+                let cpu_t = Timer::start();
                 let cpu_out = crate::attention::cpu_attention::sparse_attention_masked(
                     &jobs, &out.q, n, dh, self.cfg.cpu_threads, is_append, Some(&q_valid),
                 );
+                self.metrics
+                    .observe_cpu_attn(cpu_t.secs(), jobs.len() as u64, cpu_out.tasks as u64);
 
                 merge_states(&mut o_gpu, &mut lse_gpu, &cpu_out.o, &cpu_out.lse, dh);
 

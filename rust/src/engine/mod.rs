@@ -5,6 +5,6 @@ pub mod batcher;
 pub mod engine;
 pub mod strategy;
 
-pub use batcher::Batcher;
+pub use batcher::{Batcher, BatcherStats, Completion, Request};
 pub use engine::{Engine, Sequence};
 pub use strategy::Policy;

@@ -214,5 +214,7 @@ fn run() -> Result<()> {
 
 fn load_eval_text(args: &Args) -> Result<Vec<u8>> {
     let path = args.get_or("text", "data/corpus.txt");
-    Ok(std::fs::read(path)?)
+    // generated deterministically when the file is missing (same bytes as
+    // the python exporter — see util::corpus)
+    hgca::util::corpus::ensure_corpus(std::path::Path::new(path))
 }

@@ -20,6 +20,12 @@ pub struct Metrics {
     /// peak memory observations
     pub peak_gpu_kv_bytes: usize,
     pub peak_cpu_kv_bytes: usize,
+    /// wall seconds inside CPU sparse attention (pool submissions)
+    pub cpu_attn_secs: f64,
+    /// (row, head) jobs submitted to the CPU attention pool
+    pub cpu_attn_jobs: u64,
+    /// packed tasks those jobs became (≈ jobs / adjacent-head merge factor)
+    pub cpu_attn_tasks: u64,
 }
 
 impl Metrics {
@@ -36,6 +42,13 @@ impl Metrics {
     pub fn observe_memory(&mut self, gpu: usize, cpu: usize) {
         self.peak_gpu_kv_bytes = self.peak_gpu_kv_bytes.max(gpu);
         self.peak_cpu_kv_bytes = self.peak_cpu_kv_bytes.max(cpu);
+    }
+
+    /// Account one CPU sparse-attention submission.
+    pub fn observe_cpu_attn(&mut self, secs: f64, jobs: u64, tasks: u64) {
+        self.cpu_attn_secs += secs;
+        self.cpu_attn_jobs += jobs;
+        self.cpu_attn_tasks += tasks;
     }
 
     pub fn tbt_summary(&self) -> Option<Summary> {

@@ -35,6 +35,10 @@ pub struct Manifest {
     pub dir: PathBuf,
     pub models: BTreeMap<String, ModelConfig>,
     pub artifacts: Vec<ArtifactMeta>,
+    /// true when this manifest was generated in-process (no `make artifacts`
+    /// export on disk) — weights are then synthetic and tests must not
+    /// assert trained-model quality.
+    pub synthetic: bool,
 }
 
 fn parse_io(j: &Json) -> Result<IoSpec> {
@@ -92,7 +96,42 @@ impl Manifest {
             dir: dir.to_path_buf(),
             models,
             artifacts,
+            synthetic: false,
         })
+    }
+
+    /// Build the manifest in-process, mirroring the shape grid of
+    /// python/compile/aot.py (`DEFAULT_SHAPES`): the `tiny` model gets the
+    /// full (batch, window) ∈ {1,4} × {256,1024} set, the other trained
+    /// models the (1, 256) smoke subset. Used when `make artifacts` has not
+    /// run — the native executor (runtime/native.rs) serves these entries
+    /// without any compiled HLO on disk.
+    pub fn synthetic(dir: &Path) -> Manifest {
+        let mut models = BTreeMap::new();
+        for name in ["tiny", "tiny-small", "tiny-large"] {
+            models.insert(
+                name.to_string(),
+                crate::config::model::trained(name).expect("builtin trained config"),
+            );
+        }
+        let mut artifacts = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, cfg) in &models {
+            let shapes: &[(usize, usize)] = if name == "tiny" {
+                &[(1, 256), (4, 256), (1, 1024), (4, 1024)]
+            } else {
+                &[(1, 256)]
+            };
+            for &(batch, window) in shapes {
+                synth_entries(cfg, batch, window, 64, dir, &mut artifacts, &mut seen);
+            }
+        }
+        Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            artifacts,
+            synthetic: true,
+        }
     }
 
     /// Find the artifact for (model, kind) with exact batch and, for
@@ -151,6 +190,119 @@ impl Manifest {
     }
 }
 
+/// Emit the artifact metas of one (model, batch, window) shape — the exact
+/// IO contract python/compile/aot.py::build_entries lowers, kept in lockstep
+/// so a real exported manifest and the synthetic one are interchangeable.
+fn synth_entries(
+    cfg: &ModelConfig,
+    batch: usize,
+    window: usize,
+    chunk: usize,
+    dir: &Path,
+    out: &mut Vec<ArtifactMeta>,
+    seen: &mut std::collections::BTreeSet<String>,
+) {
+    let (d, h, dh, f, v) = (
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.d_head(),
+        cfg.d_ffn,
+        cfg.vocab,
+    );
+    let io = |name: &str, shape: Vec<usize>, dtype: &str| IoSpec {
+        name: name.to_string(),
+        shape,
+        dtype: dtype.to_string(),
+    };
+    let f32s = |name: &str, shape: Vec<usize>| io(name, shape, "float32");
+    let i32s = |name: &str, shape: Vec<usize>| io(name, shape, "int32");
+    let mut push = |kind: &str, name: String, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>| {
+        let full = format!("{}__{}", cfg.name, name);
+        if !seen.insert(full.clone()) {
+            return;
+        }
+        out.push(ArtifactMeta {
+            model: cfg.name.clone(),
+            kind: kind.to_string(),
+            file: dir.join(format!("{full}.hlo.txt")),
+            name: full,
+            batch,
+            window,
+            chunk,
+            inputs,
+            outputs,
+        });
+    };
+    for (n, tag) in [(1usize, "d"), (chunk, "p")] {
+        push(
+            "embed",
+            format!("embed_{tag}_b{batch}"),
+            vec![
+                i32s("tokens", vec![batch, n]),
+                i32s("positions", vec![batch, n]),
+                f32s("tok_emb", vec![v, d]),
+                f32s("pos_emb", vec![cfg.max_pos, d]),
+            ],
+            vec![f32s("hidden", vec![batch, n, d])],
+        );
+        push(
+            "attn_step",
+            format!("attn_{tag}_b{batch}_w{window}"),
+            vec![
+                f32s("hidden", vec![batch, n, d]),
+                f32s("ln1_g", vec![d]),
+                f32s("ln1_b", vec![d]),
+                f32s("wq", vec![d, d]),
+                f32s("bq", vec![d]),
+                f32s("wk", vec![d, d]),
+                f32s("bk", vec![d]),
+                f32s("wv", vec![d, d]),
+                f32s("bv", vec![d]),
+                f32s("k_win", vec![batch, h, window, dh]),
+                f32s("v_win", vec![batch, h, window, dh]),
+                i32s("win_len", vec![batch]),
+                i32s("n_valid", vec![batch]),
+            ],
+            vec![
+                f32s("q", vec![batch, h, n, dh]),
+                f32s("k_new", vec![batch, h, n, dh]),
+                f32s("v_new", vec![batch, h, n, dh]),
+                f32s("o_gpu", vec![batch, h, n, dh]),
+                f32s("lse", vec![batch, h, n]),
+                f32s("a_sum", vec![batch, h, window + n]),
+            ],
+        );
+        push(
+            "post_attn",
+            format!("post_{tag}_b{batch}"),
+            vec![
+                f32s("hidden", vec![batch, n, d]),
+                f32s("o_merged", vec![batch, n, d]),
+                f32s("wo", vec![d, d]),
+                f32s("bo", vec![d]),
+                f32s("ln2_g", vec![d]),
+                f32s("ln2_b", vec![d]),
+                f32s("w1", vec![d, f]),
+                f32s("b1", vec![f]),
+                f32s("w2", vec![f, d]),
+                f32s("b2", vec![d]),
+            ],
+            vec![f32s("hidden_out", vec![batch, n, d])],
+        );
+    }
+    push(
+        "lm_head",
+        format!("lm_head_b{batch}"),
+        vec![
+            f32s("hidden", vec![batch, 1, d]),
+            f32s("lnf_g", vec![d]),
+            f32s("lnf_b", vec![d]),
+            f32s("tok_emb", vec![v, d]),
+        ],
+        vec![f32s("logits", vec![batch, 1, v])],
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,5 +352,36 @@ mod tests {
         assert_eq!(m.windows_for("tiny"), vec![256, 1024]);
         assert_eq!(m.batches_for("tiny"), vec![1, 4]);
         assert!(m.windows_for("nope").is_empty());
+    }
+
+    #[test]
+    fn synthetic_manifest_matches_python_shape_grid() {
+        let m = Manifest::synthetic(Path::new("nowhere"));
+        assert!(m.synthetic);
+        assert_eq!(m.windows_for("tiny"), vec![256, 1024]);
+        assert_eq!(m.batches_for("tiny"), vec![1, 4]);
+        assert_eq!(m.windows_for("tiny-small"), vec![256]);
+        assert_eq!(m.windows_for("tiny-large"), vec![256]);
+        // one embed per (batch, n) — deduped across the window loop
+        let embeds: Vec<_> = m
+            .artifacts
+            .iter()
+            .filter(|a| a.model == "tiny" && a.kind == "embed")
+            .collect();
+        assert_eq!(embeds.len(), 4); // {b1,b4} × {n=1, n=chunk}
+        // the IO contract find_artifact matches on: first input dim 1 == n
+        let a = m
+            .artifacts
+            .iter()
+            .find(|a| a.name == "tiny__attn_p_b4_w1024")
+            .unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 64, 128]);
+        assert_eq!(a.inputs[9].shape, vec![4, 4, 1024, 32]); // k_win
+        assert_eq!(a.outputs[5].shape, vec![4, 4, 1024 + 64]); // a_sum
+    }
+
+    #[test]
+    fn loaded_manifest_is_not_synthetic() {
+        assert!(!manifest().synthetic);
     }
 }

@@ -1,11 +1,13 @@
-//! PJRT runtime: manifest-driven artifact loading + typed execution.
-//! The compiled XLA executables are the system's "GPU device"
-//! (DESIGN.md §1 hardware substitution).
+//! Runtime: manifest-driven artifact loading + typed execution.
+//! The artifact executor is the system's "GPU device" (DESIGN.md §1
+//! hardware substitution) — compiled XLA when an export exists, the
+//! in-process native backend ([`native`]) otherwise.
 
 pub mod artifacts;
 pub mod executor;
+pub mod native;
 pub mod pjrt;
 
 pub use artifacts::{ArtifactMeta, Manifest};
 pub use executor::{AttnOut, Executor};
-pub use pjrt::{Arg, ModelRuntime, PjrtRuntime};
+pub use pjrt::{Arg, ModelRuntime, PjrtRuntime, RuntimeStats};

@@ -1,0 +1,481 @@
+//! Native artifact executor — the in-process "GPU device".
+//!
+//! The real deployment compiles the four entry points of
+//! `python/compile/model.py` to XLA artifacts executed over the PJRT C API.
+//! That path needs the `xla` bindings crate plus `make artifacts`, neither of
+//! which exists in the offline build environment, so this module implements
+//! the *same contract* (kinds, input order, shapes, numerics) in pure Rust:
+//!
+//! * `embed`     — token + learned position embedding lookup
+//! * `attn_step` — LN → QKV projection → dense windowed attention over the
+//!   GPU-resident KV window with LSE + per-slot attention mass (the GPU half
+//!   of Algorithm 2 / MAW tracking of Algorithm 1)
+//! * `post_attn` — output projection + residual + FFN
+//! * `lm_head`   — final LN + tied-embedding logits
+//!
+//! Numerics mirror `python/compile/kernels/ref.py`: scores over *valid*
+//! slots only (window slot `j < win_len[b]`; chunk slot `i` visible to query
+//! `n` iff `i <= n && i < n_valid[b]`), softmax via the shared
+//! [`softmax_lse`] primitive, fully-masked rows yield `lse ≈ EMPTY_LSE` and
+//! zero output so the LSE merge treats them as empty.
+//!
+//! Every (batch row, head, query) is computed independently — no cross-row
+//! reductions — so results are bitwise identical whether a row runs alone
+//! (batch=1) or padded into a larger batch. The continuous-batching
+//! conformance tests (tests/integration_pool.rs) rely on this.
+
+use anyhow::{bail, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::ops::{axpy, dot, gelu_slice, layernorm, softmax_lse};
+
+use super::artifacts::ArtifactMeta;
+
+/// A resolved runtime argument (weights already looked up by the caller).
+pub enum Val<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> Val<'a> {
+    fn f32(&self, what: &str) -> Result<&'a [f32]> {
+        match *self {
+            Val::F32(v) => Ok(v),
+            Val::I32(_) => bail!("{what}: expected f32 buffer, got i32"),
+        }
+    }
+
+    fn i32(&self, what: &str) -> Result<&'a [i32]> {
+        match *self {
+            Val::I32(v) => Ok(v),
+            Val::F32(_) => bail!("{what}: expected i32 buffer, got f32"),
+        }
+    }
+}
+
+/// Execute one artifact call natively. `vals` follows the manifest input
+/// order exactly (the contract python/compile/aot.py::build_entries pins).
+pub fn execute(cfg: &ModelConfig, meta: &ArtifactMeta, vals: &[Val<'_>]) -> Result<Vec<Vec<f32>>> {
+    anyhow::ensure!(
+        vals.len() == meta.inputs.len(),
+        "{}: {} args for {} declared inputs",
+        meta.name,
+        vals.len(),
+        meta.inputs.len()
+    );
+    let b = meta.batch;
+    // N is dim 1 of the first input for every kind (tokens [B,N] for embed,
+    // hidden [B,N,D] otherwise) — same rule find_artifact matches on.
+    let n = meta
+        .inputs
+        .first()
+        .and_then(|i| i.shape.get(1).copied())
+        .unwrap_or(1);
+    match meta.kind.as_str() {
+        "embed" => embed(cfg, b, n, vals),
+        "attn_step" => attn_step(cfg, b, n, meta.window, vals),
+        "post_attn" => post_attn(cfg, b, n, vals),
+        "lm_head" => lm_head(cfg, b, vals),
+        other => bail!("{}: unknown artifact kind '{other}'", meta.name),
+    }
+}
+
+/// y[n] = x[k] @ W[k,n] + bias[n] over flat row-major W — same accumulation
+/// order as tensor::ops::affine so the native path and the rust oracle agree
+/// bit-for-bit.
+fn affine_flat(x: &[f32], w: &[f32], k: usize, n: usize, bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), n);
+    out.copy_from_slice(bias);
+    for (p, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[p * n..(p + 1) * n];
+        for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
+            *o += xv * wv;
+        }
+    }
+}
+
+fn check_len(what: &str, got: usize, want: usize) -> Result<()> {
+    anyhow::ensure!(got == want, "{what}: buffer len {got}, expected {want}");
+    Ok(())
+}
+
+/// tokens/positions i32[B,N] → hidden f32[B,N,D].
+fn embed(cfg: &ModelConfig, b: usize, n: usize, vals: &[Val<'_>]) -> Result<Vec<Vec<f32>>> {
+    let d = cfg.d_model;
+    let tokens = vals[0].i32("tokens")?;
+    let positions = vals[1].i32("positions")?;
+    let tok_emb = vals[2].f32("tok_emb")?;
+    let pos_emb = vals[3].f32("pos_emb")?;
+    check_len("tokens", tokens.len(), b * n)?;
+    check_len("positions", positions.len(), b * n)?;
+    check_len("tok_emb", tok_emb.len(), cfg.vocab * d)?;
+    check_len("pos_emb", pos_emb.len(), cfg.max_pos * d)?;
+
+    let mut hidden = vec![0.0f32; b * n * d];
+    for (i, out) in hidden.chunks_exact_mut(d).enumerate() {
+        let tok = tokens[i];
+        let pos = positions[i];
+        anyhow::ensure!(
+            (0..cfg.vocab as i32).contains(&tok),
+            "token {tok} out of vocab range"
+        );
+        anyhow::ensure!(
+            (0..cfg.max_pos as i32).contains(&pos),
+            "position {pos} exceeds max_pos {}",
+            cfg.max_pos
+        );
+        let e = &tok_emb[tok as usize * d..(tok as usize + 1) * d];
+        let p = &pos_emb[pos as usize * d..(pos as usize + 1) * d];
+        for j in 0..d {
+            out[j] = e[j] + p[j];
+        }
+    }
+    Ok(vec![hidden])
+}
+
+/// GPU half of one hybrid attention layer. Input order:
+/// [hidden, ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, k_win, v_win, win_len, n_valid]
+/// Outputs: [q, k_new, v_new, o_gpu, lse, a_sum].
+fn attn_step(
+    cfg: &ModelConfig,
+    b_n: usize,
+    n: usize,
+    w: usize,
+    vals: &[Val<'_>],
+) -> Result<Vec<Vec<f32>>> {
+    let (d, h_n, dh) = (cfg.d_model, cfg.n_heads, cfg.d_head());
+    let scale = 1.0 / (dh as f32).sqrt();
+    let s_total = w + n;
+
+    let hidden = vals[0].f32("hidden")?;
+    let ln1_g = vals[1].f32("ln1_g")?;
+    let ln1_b = vals[2].f32("ln1_b")?;
+    let wq = vals[3].f32("wq")?;
+    let bq = vals[4].f32("bq")?;
+    let wk = vals[5].f32("wk")?;
+    let bk = vals[6].f32("bk")?;
+    let wv = vals[7].f32("wv")?;
+    let bv = vals[8].f32("bv")?;
+    let k_win = vals[9].f32("k_win")?;
+    let v_win = vals[10].f32("v_win")?;
+    let win_len = vals[11].i32("win_len")?;
+    let n_valid = vals[12].i32("n_valid")?;
+    check_len("hidden", hidden.len(), b_n * n * d)?;
+    check_len("k_win", k_win.len(), b_n * h_n * w * dh)?;
+    check_len("v_win", v_win.len(), b_n * h_n * w * dh)?;
+    check_len("win_len", win_len.len(), b_n)?;
+    check_len("n_valid", n_valid.len(), b_n)?;
+
+    let mut q = vec![0.0f32; b_n * h_n * n * dh];
+    let mut k_new = vec![0.0f32; b_n * h_n * n * dh];
+    let mut v_new = vec![0.0f32; b_n * h_n * n * dh];
+    let mut o_gpu = vec![0.0f32; b_n * h_n * n * dh];
+    let mut lse = vec![0.0f32; b_n * h_n * n];
+    let mut a_sum = vec![0.0f32; b_n * h_n * s_total];
+
+    let mut x = vec![0.0f32; d];
+    let mut row = vec![0.0f32; d];
+    let mut scores: Vec<f32> = Vec::with_capacity(s_total);
+    let mut slot_of: Vec<usize> = Vec::with_capacity(s_total);
+    for b in 0..b_n {
+        let wl = (win_len[b].max(0) as usize).min(w);
+        let nv = (n_valid[b].max(0) as usize).min(n);
+        // ---- LN + QKV projections, split to [H, N, dh] ----
+        for t in 0..n {
+            layernorm(&hidden[(b * n + t) * d..(b * n + t + 1) * d], ln1_g, ln1_b, &mut x);
+            for (wmat, bias, dst, sc) in [
+                (wq, bq, &mut q, scale),
+                (wk, bk, &mut k_new, 1.0),
+                (wv, bv, &mut v_new, 1.0),
+            ] {
+                affine_flat(&x, wmat, d, d, bias, &mut row);
+                for h in 0..h_n {
+                    let out = &mut dst[((b * h_n + h) * n + t) * dh..((b * h_n + h) * n + t + 1) * dh];
+                    for j in 0..dh {
+                        out[j] = row[h * dh + j] * sc;
+                    }
+                }
+            }
+        }
+        // ---- dense windowed attention with LSE + attention-mass output ----
+        for h in 0..h_n {
+            let bh = b * h_n + h;
+            let kw = &k_win[bh * w * dh..(bh + 1) * w * dh];
+            let vw = &v_win[bh * w * dh..(bh + 1) * w * dh];
+            let kn = &k_new[bh * n * dh..(bh + 1) * n * dh];
+            let vn = &v_new[bh * n * dh..(bh + 1) * n * dh];
+            for t in 0..n {
+                let qv = &q[(bh * n + t) * dh..(bh * n + t + 1) * dh];
+                scores.clear();
+                slot_of.clear();
+                for s in 0..wl {
+                    scores.push(dot(qv, &kw[s * dh..(s + 1) * dh]));
+                    slot_of.push(s);
+                }
+                // chunk slot i visible iff i <= t (causal) and i < n_valid[b]
+                for i in 0..nv.min(t + 1) {
+                    scores.push(dot(qv, &kn[i * dh..(i + 1) * dh]));
+                    slot_of.push(w + i);
+                }
+                let l = softmax_lse(&mut scores);
+                lse[bh * n + t] = l;
+                let orow = &mut o_gpu[(bh * n + t) * dh..(bh * n + t + 1) * dh];
+                for (si, &p) in scores.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let slot = slot_of[si];
+                    let vrow = if slot < w {
+                        &vw[slot * dh..(slot + 1) * dh]
+                    } else {
+                        &vn[(slot - w) * dh..(slot - w + 1) * dh]
+                    };
+                    axpy(p, vrow, orow);
+                }
+                if t < nv {
+                    // padded query rows never contribute attention mass
+                    let arow = &mut a_sum[bh * s_total..(bh + 1) * s_total];
+                    for (si, &p) in scores.iter().enumerate() {
+                        arow[slot_of[si]] += p;
+                    }
+                }
+            }
+        }
+    }
+    Ok(vec![q, k_new, v_new, o_gpu, lse, a_sum])
+}
+
+/// Output projection + residual + FFN. Input order:
+/// [hidden, o_merged, wo, bo, ln2_g, ln2_b, w1, b1, w2, b2].
+fn post_attn(cfg: &ModelConfig, b_n: usize, n: usize, vals: &[Val<'_>]) -> Result<Vec<Vec<f32>>> {
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let hidden = vals[0].f32("hidden")?;
+    let o_merged = vals[1].f32("o_merged")?;
+    let wo = vals[2].f32("wo")?;
+    let bo = vals[3].f32("bo")?;
+    let ln2_g = vals[4].f32("ln2_g")?;
+    let ln2_b = vals[5].f32("ln2_b")?;
+    let w1 = vals[6].f32("w1")?;
+    let b1 = vals[7].f32("b1")?;
+    let w2 = vals[8].f32("w2")?;
+    let b2 = vals[9].f32("b2")?;
+    check_len("hidden", hidden.len(), b_n * n * d)?;
+    check_len("o_merged", o_merged.len(), b_n * n * d)?;
+    check_len("w1", w1.len(), d * f)?;
+    check_len("w2", w2.len(), f * d)?;
+
+    let mut out = vec![0.0f32; b_n * n * d];
+    let mut x = vec![0.0f32; d];
+    let mut y = vec![0.0f32; d];
+    let mut f1 = vec![0.0f32; f];
+    let mut f2 = vec![0.0f32; d];
+    for (i, hrow) in out.chunks_exact_mut(d).enumerate() {
+        affine_flat(&o_merged[i * d..(i + 1) * d], wo, d, d, bo, &mut y);
+        for j in 0..d {
+            hrow[j] = hidden[i * d + j] + y[j];
+        }
+        layernorm(hrow, ln2_g, ln2_b, &mut x);
+        affine_flat(&x, w1, d, f, b1, &mut f1);
+        gelu_slice(&mut f1);
+        affine_flat(&f1, w2, f, d, b2, &mut f2);
+        for j in 0..d {
+            hrow[j] += f2[j];
+        }
+    }
+    Ok(vec![out])
+}
+
+/// Final LN + tied-embedding logits. Input order:
+/// [hidden(B,1,D), lnf_g, lnf_b, tok_emb].
+fn lm_head(cfg: &ModelConfig, b_n: usize, vals: &[Val<'_>]) -> Result<Vec<Vec<f32>>> {
+    let (d, v) = (cfg.d_model, cfg.vocab);
+    let hidden = vals[0].f32("hidden")?;
+    let lnf_g = vals[1].f32("lnf_g")?;
+    let lnf_b = vals[2].f32("lnf_b")?;
+    let tok_emb = vals[3].f32("tok_emb")?;
+    check_len("hidden", hidden.len(), b_n * d)?;
+    check_len("tok_emb", tok_emb.len(), v * d)?;
+
+    let mut logits = vec![0.0f32; b_n * v];
+    let mut x = vec![0.0f32; d];
+    for b in 0..b_n {
+        layernorm(&hidden[b * d..(b + 1) * d], lnf_g, lnf_b, &mut x);
+        let lrow = &mut logits[b * v..(b + 1) * v];
+        for (tok, l) in lrow.iter_mut().enumerate() {
+            *l = dot(&x, &tok_emb[tok * d..(tok + 1) * d]);
+        }
+    }
+    Ok(vec![logits])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{random_weights, RefModel};
+    use crate::runtime::artifacts::Manifest;
+
+    fn tiny_small() -> ModelConfig {
+        crate::config::model::trained("tiny-small").unwrap()
+    }
+
+    fn meta_for<'m>(m: &'m Manifest, model: &str, kind: &str, batch: usize, n: usize) -> &'m ArtifactMeta {
+        m.artifacts
+            .iter()
+            .find(|a| {
+                a.model == model
+                    && a.kind == kind
+                    && a.batch == batch
+                    && a.inputs
+                        .first()
+                        .map(|i| i.shape.get(1).copied().unwrap_or(1) == n)
+                        .unwrap_or(false)
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn embed_matches_weight_rows() {
+        let cfg = tiny_small();
+        let w = random_weights(&cfg, 7);
+        let man = Manifest::synthetic(std::path::Path::new("unused"));
+        let meta = meta_for(&man, "tiny-small", "embed", 1, 1);
+        let tokens = [42i32];
+        let positions = [3i32];
+        let out = execute(
+            &cfg,
+            meta,
+            &[
+                Val::I32(&tokens),
+                Val::I32(&positions),
+                Val::F32(&w["tok_emb"].data),
+                Val::F32(&w["pos_emb"].data),
+            ],
+        )
+        .unwrap();
+        let d = cfg.d_model;
+        for j in 0..d {
+            let want = w["tok_emb"].data[42 * d + j] + w["pos_emb"].data[3 * d + j];
+            assert!((out[0][j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attn_step_empty_window_matches_causal_self_attention() {
+        // With win_len = 0 and a full chunk, attn_step must equal the
+        // oracle's causal attention over the chunk tokens alone.
+        let cfg = tiny_small();
+        let weights = random_weights(&cfg, 11);
+        let oracle = RefModel::new(cfg.clone(), weights.clone()).unwrap();
+        let man = Manifest::synthetic(std::path::Path::new("unused"));
+        let w256 = meta_for(&man, "tiny-small", "attn_step", 1, 64);
+        assert_eq!(w256.window, 256);
+
+        let text: Vec<u8> = (0..64u8).map(|i| b'a' + (i % 24)).collect();
+        let d = cfg.d_model;
+        // build hidden = embeddings (layer 0 input)
+        let mut hidden = vec![0.0f32; 64 * d];
+        for (t, &tok) in text.iter().enumerate() {
+            for j in 0..d {
+                hidden[t * d + j] = weights["tok_emb"].data[tok as usize * d + j]
+                    + weights["pos_emb"].data[t * d + j];
+            }
+        }
+        let lw = oracle.layer(0);
+        let k_win = vec![0.0f32; cfg.n_heads * 256 * cfg.d_head()];
+        let v_win = k_win.clone();
+        let win_len = [0i32];
+        let n_valid = [64i32];
+        let out = execute(
+            &cfg,
+            w256,
+            &[
+                Val::F32(&hidden),
+                Val::F32(&lw.ln1_g.data),
+                Val::F32(&lw.ln1_b.data),
+                Val::F32(&lw.wq.data),
+                Val::F32(&lw.bq.data),
+                Val::F32(&lw.wk.data),
+                Val::F32(&lw.bk.data),
+                Val::F32(&lw.wv.data),
+                Val::F32(&lw.bv.data),
+                Val::F32(&k_win),
+                Val::F32(&v_win),
+                Val::I32(&win_len),
+                Val::I32(&n_valid),
+            ],
+        )
+        .unwrap();
+        let o_gpu = &out[3];
+        // oracle attention output for layer 0 (capture=true gives probs; we
+        // recompute o from q/k/v the slow way instead: forward() already
+        // applies attention inside — compare via the captured probs path)
+        let (_, probs) = oracle.forward(&text, true);
+        let (h_n, dh) = (cfg.n_heads, cfg.d_head());
+        // reconstruct expected o for a few positions from probs and v
+        // (v = ln(hidden) @ wv + bv, same as k_new path); reuse out[2] = v_new
+        let v_new = &out[2];
+        for &t in &[0usize, 5, 63] {
+            for h in 0..h_n {
+                let p = &probs[0][h][t]; // [t+1]
+                let mut want = vec![0.0f32; dh];
+                for (s, &pw) in p.iter().enumerate() {
+                    for j in 0..dh {
+                        want[j] += pw * v_new[(h * 64 + s) * dh + j];
+                    }
+                }
+                let got = &o_gpu[(h * 64 + t) * dh..(h * 64 + t + 1) * dh];
+                for j in 0..dh {
+                    assert!(
+                        (got[j] - want[j]).abs() < 1e-4,
+                        "t={t} h={h} j={j}: {} vs {}",
+                        got[j],
+                        want[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fully_masked_row_yields_empty_lse_and_zero_output() {
+        let cfg = tiny_small();
+        let w = random_weights(&cfg, 3);
+        let oracle = RefModel::new(cfg.clone(), w).unwrap();
+        let man = Manifest::synthetic(std::path::Path::new("unused"));
+        let meta = meta_for(&man, "tiny-small", "attn_step", 1, 1);
+        let d = cfg.d_model;
+        let hidden = vec![0.1f32; d];
+        let lw = oracle.layer(0);
+        let k_win = vec![0.0f32; cfg.n_heads * meta.window * cfg.d_head()];
+        let v_win = k_win.clone();
+        let out = execute(
+            &cfg,
+            meta,
+            &[
+                Val::F32(&hidden),
+                Val::F32(&lw.ln1_g.data),
+                Val::F32(&lw.ln1_b.data),
+                Val::F32(&lw.wq.data),
+                Val::F32(&lw.bq.data),
+                Val::F32(&lw.wk.data),
+                Val::F32(&lw.bk.data),
+                Val::F32(&lw.wv.data),
+                Val::F32(&lw.bv.data),
+                Val::F32(&k_win),
+                Val::F32(&v_win),
+                Val::I32(&[0]),
+                Val::I32(&[0]), // n_valid = 0 → no visible slots at all
+            ],
+        )
+        .unwrap();
+        assert!(out[3].iter().all(|&x| x == 0.0), "o_gpu must be zero");
+        assert!(out[4].iter().all(|&l| l <= crate::attention::EMPTY_LSE));
+        assert!(out[5].iter().all(|&a| a == 0.0), "a_sum must be zero");
+    }
+}

@@ -1,12 +1,22 @@
-//! PJRT execution: load HLO-text artifacts, compile once on the CPU PJRT
-//! client (our stand-in "GPU" device, DESIGN.md §1), keep model weights
-//! resident as device buffers, and execute typed entry points.
+//! Runtime loading + typed execution over the artifact manifest.
 //!
-//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
-//! format (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos).
+//! Historically this file drove compiled HLO-text artifacts through the PJRT
+//! C API (the `xla` bindings crate). That crate is not in the offline
+//! registry, so execution now goes through the native in-process executor
+//! ([`super::native`]) which implements the identical artifact contract —
+//! same manifest, same input order, same output tuple, same numerics as the
+//! python-lowered graphs. The public types (`PjrtRuntime`, `ModelRuntime`,
+//! [`Arg`], [`RuntimeStats`]) are unchanged, so every caller of the old PJRT
+//! path compiles and behaves the same.
+//!
+//! Model resolution order:
+//! 1. `artifact_dir/manifest.json` + `<name>.hgw` (a real `make artifacts`
+//!    export: trained weights, authoritative shapes);
+//! 2. otherwise a [`Manifest::synthetic`] shape grid with deterministic
+//!    random weights — full functional stack, no trained quality claims
+//!    (`ModelRuntime::trained` is false).
 
 use std::cell::RefCell;
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 use std::time::Instant;
@@ -17,23 +27,42 @@ use crate::config::ModelConfig;
 use crate::tensor::Weights;
 
 use super::artifacts::{ArtifactMeta, Manifest};
+use super::native::{self, Val};
 
-/// Shared PJRT client + manifest.
+/// Stand-in for the PJRT client handle (kept so `rt.client.platform_name()`
+/// callers remain source-compatible).
+pub struct NativeClient;
+
+impl NativeClient {
+    pub fn platform_name(&self) -> &'static str {
+        "native-cpu"
+    }
+}
+
+/// Shared runtime: artifact manifest + execution backend.
 pub struct PjrtRuntime {
-    pub client: xla::PjRtClient,
+    pub client: NativeClient,
     pub manifest: Manifest,
 }
 
 impl PjrtRuntime {
+    /// Load the manifest from `artifact_dir`, falling back to the built-in
+    /// synthetic shape grid when no export exists there.
     pub fn new(artifact_dir: &Path) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt client: {e:?}"))?;
-        Ok(PjrtRuntime { client, manifest })
+        let manifest = if artifact_dir.join("manifest.json").is_file() {
+            Manifest::load(artifact_dir)?
+        } else {
+            Manifest::synthetic(artifact_dir)
+        };
+        Ok(PjrtRuntime {
+            client: NativeClient,
+            manifest,
+        })
     }
 
-    /// Load a trained model: host weights (for the CPU attention path and
-    /// the oracle) + device-resident weight buffers + compiled executables
-    /// for every artifact of this model.
+    /// Load a model: exported `.hgw` weights when present, deterministic
+    /// synthetic weights otherwise (seeded by the model name, so every
+    /// process sees identical parameters).
     pub fn load_model(self: &Rc<Self>, name: &str) -> Result<ModelRuntime> {
         let cfg = self
             .manifest
@@ -41,12 +70,30 @@ impl PjrtRuntime {
             .get(name)
             .cloned()
             .ok_or_else(|| anyhow!("model '{name}' not in manifest"))?;
-        let weights = crate::tensor::weights::load(&self.manifest.dir.join(format!("{name}.hgw")))?;
-        ModelRuntime::new(Rc::clone(self), cfg, weights)
+        let path = self.manifest.dir.join(format!("{name}.hgw"));
+        let (weights, trained) = if path.is_file() {
+            (crate::tensor::weights::load(&path)?, true)
+        } else {
+            (
+                crate::model::random_weights(&cfg, name_seed(name)),
+                false,
+            )
+        };
+        ModelRuntime::new(Rc::clone(self), cfg, weights, trained)
     }
 }
 
-/// Cumulative PJRT-path timing (perf diagnostics, EXPERIMENTS.md §Perf).
+/// Stable 64-bit seed from a model name (FNV-1a).
+fn name_seed(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        })
+}
+
+/// Cumulative execution-path timing (perf diagnostics, EXPERIMENTS.md §Perf).
+/// upload/download/compile are zero on the native backend and kept for
+/// source compatibility with the PJRT path's consumers.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub calls: u64,
@@ -60,10 +107,9 @@ pub struct ModelRuntime {
     pub rt: Rc<PjrtRuntime>,
     pub cfg: ModelConfig,
     pub weights: Weights,
-    /// device-resident weight buffers, uploaded once (execute_b path)
-    wbufs: BTreeMap<String, xla::PjRtBuffer>,
-    /// compiled executables keyed by artifact name
-    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// true iff weights came from a `make artifacts` export (quality
+    /// assertions — trained-model perplexity etc. — must gate on this).
+    pub trained: bool,
     pub stats: RefCell<RuntimeStats>,
 }
 
@@ -71,33 +117,47 @@ pub struct ModelRuntime {
 pub enum Arg<'a> {
     F32(&'a [f32], Vec<usize>),
     I32(&'a [i32], Vec<usize>),
-    /// named model weight (device-resident)
+    /// named model weight (resident)
     Weight(&'a str),
 }
 
 impl ModelRuntime {
-    fn new(rt: Rc<PjrtRuntime>, cfg: ModelConfig, weights: Weights) -> Result<ModelRuntime> {
-        let mut wbufs = BTreeMap::new();
-        for (name, t) in &weights {
-            let buf = rt
-                .client
-                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
-                .map_err(|e| anyhow!("uploading weight {name}: {e:?}"))?;
-            wbufs.insert(name.clone(), buf);
-        }
+    fn new(
+        rt: Rc<PjrtRuntime>,
+        cfg: ModelConfig,
+        weights: Weights,
+        trained: bool,
+    ) -> Result<ModelRuntime> {
         Ok(ModelRuntime {
             rt,
             cfg,
             weights,
-            wbufs,
-            exes: RefCell::new(BTreeMap::new()),
+            trained,
             stats: RefCell::new(RuntimeStats::default()),
         })
     }
 
     /// Construct from in-memory weights (tests with random weights).
-    pub fn from_weights(rt: Rc<PjrtRuntime>, cfg: ModelConfig, weights: Weights) -> Result<ModelRuntime> {
-        Self::new(rt, cfg, weights)
+    pub fn from_weights(
+        rt: Rc<PjrtRuntime>,
+        cfg: ModelConfig,
+        weights: Weights,
+    ) -> Result<ModelRuntime> {
+        Self::new(rt, cfg, weights, false)
+    }
+
+    /// Print a stderr banner when this model runs on synthetic weights, so
+    /// bench/example output is never mistaken for trained-model numbers.
+    pub fn warn_if_synthetic(&self) {
+        if !self.trained {
+            eprintln!(
+                "[hgca] model '{}' is using SYNTHETIC random weights ({}.hgw not found in {}); \
+                 quality numbers below are not paper results — run `make artifacts` to train",
+                self.cfg.name,
+                self.cfg.name,
+                self.rt.manifest.dir.display()
+            );
+        }
     }
 
     pub fn find_artifact(
@@ -129,47 +189,23 @@ impl ModelRuntime {
             })
     }
 
-    fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(&meta.name) {
-            return Ok(Rc::clone(e));
-        }
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&meta.file)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", meta.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .rt
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
-        self.stats.borrow_mut().compile_secs += t0.elapsed().as_secs_f64();
-        let exe = Rc::new(exe);
-        self.exes
-            .borrow_mut()
-            .insert(meta.name.clone(), Rc::clone(&exe));
-        Ok(exe)
-    }
-
-    /// Eagerly compile every artifact of this model (avoids first-call
-    /// latency spikes on the serving path).
+    /// Validate every artifact of this model resolves (no compile step on
+    /// the native backend; kept for serving-path symmetry).
     pub fn warmup(&self) -> Result<usize> {
-        let metas: Vec<ArtifactMeta> = self
+        let count = self
             .rt
             .manifest
             .artifacts
             .iter()
             .filter(|a| a.model == self.cfg.name)
-            .cloned()
-            .collect();
-        for m in &metas {
-            self.executable(m)?;
-        }
-        Ok(metas.len())
+            .count();
+        anyhow::ensure!(count > 0, "no artifacts for model {}", self.cfg.name);
+        Ok(count)
     }
 
     /// Execute an artifact. Inputs must match the manifest order; weights
-    /// come from the resident buffers, dynamic tensors are uploaded here.
-    /// Returns the tuple elements as f32 vectors.
+    /// come from the resident map, dynamic tensors are validated against
+    /// the declared shapes. Returns the tuple elements as f32 vectors.
     pub fn call(&self, meta: &ArtifactMeta, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
         anyhow::ensure!(
             args.len() == meta.inputs.len(),
@@ -178,67 +214,36 @@ impl ModelRuntime {
             args.len(),
             meta.inputs.len()
         );
-        let exe = self.executable(meta)?;
-        let client = &self.rt.client;
-
-        let t_up = Instant::now();
-        // uploaded dynamic buffers live here; arg_refs borrows both these
-        // and the resident weight buffers
-        let mut uploaded: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut arg_refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
-        // two passes: upload first (so the vec doesn't reallocate while borrowed)
-        for a in args {
+        let mut vals: Vec<Val<'_>> = Vec::with_capacity(args.len());
+        for (i, a) in args.iter().enumerate() {
+            let spec = &meta.inputs[i];
             match a {
                 Arg::F32(data, dims) => {
-                    let b = client
-                        .buffer_from_host_buffer::<f32>(data, dims, None)
-                        .map_err(|e| anyhow!("upload f32: {e:?}"))?;
-                    uploaded.push(b);
+                    check_shape(&meta.name, &spec.name, dims, &spec.shape, data.len())?;
+                    vals.push(Val::F32(*data));
                 }
                 Arg::I32(data, dims) => {
-                    let b = client
-                        .buffer_from_host_buffer::<i32>(data, dims, None)
-                        .map_err(|e| anyhow!("upload i32: {e:?}"))?;
-                    uploaded.push(b);
+                    check_shape(&meta.name, &spec.name, dims, &spec.shape, data.len())?;
+                    vals.push(Val::I32(*data));
                 }
-                Arg::Weight(_) => {}
-            }
-        }
-        let mut up_iter = uploaded.iter();
-        for a in args {
-            match a {
-                Arg::F32(..) | Arg::I32(..) => arg_refs.push(up_iter.next().unwrap()),
-                Arg::Weight(name) => arg_refs.push(
-                    self.wbufs
+                Arg::Weight(name) => {
+                    let t = self
+                        .weights
                         .get(*name)
-                        .ok_or_else(|| anyhow!("no weight buffer '{name}'"))?,
-                ),
+                        .ok_or_else(|| anyhow!("no weight '{name}'"))?;
+                    check_shape(&meta.name, &spec.name, &t.shape, &spec.shape, t.data.len())?;
+                    vals.push(Val::F32(&t.data));
+                }
             }
         }
-        let upload = t_up.elapsed().as_secs_f64();
 
-        let t_ex = Instant::now();
-        let out = exe
-            .execute_b(&arg_refs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", meta.name))?;
-        let exec = t_ex.elapsed().as_secs_f64();
-
-        let t_dl = Instant::now();
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("download: {e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        let mut res = Vec::with_capacity(parts.len());
-        for p in parts {
-            res.push(p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
-        }
-        let download = t_dl.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let res = native::execute(&self.cfg, meta, &vals)?;
+        let exec = t0.elapsed().as_secs_f64();
 
         let mut st = self.stats.borrow_mut();
         st.calls += 1;
         st.exec_secs += exec;
-        st.upload_secs += upload;
-        st.download_secs += download;
 
         anyhow::ensure!(
             res.len() == meta.outputs.len(),
@@ -247,6 +252,105 @@ impl ModelRuntime {
             res.len(),
             meta.outputs.len()
         );
+        for (o, spec) in res.iter().zip(meta.outputs.iter()) {
+            let want: usize = spec.shape.iter().product();
+            anyhow::ensure!(
+                o.len() == want,
+                "{}: output '{}' has {} elements, shape {:?} wants {want}",
+                meta.name,
+                spec.name,
+                o.len(),
+                spec.shape
+            );
+        }
         Ok(res)
+    }
+}
+
+fn check_shape(
+    artifact: &str,
+    input: &str,
+    got: &[usize],
+    want: &[usize],
+    len: usize,
+) -> Result<()> {
+    anyhow::ensure!(
+        got == want,
+        "{artifact}: input '{input}' shape {got:?}, manifest declares {want:?}"
+    );
+    let product: usize = want.iter().product();
+    anyhow::ensure!(
+        len == product,
+        "{artifact}: input '{input}' has {len} elements for shape {want:?}"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> Rc<PjrtRuntime> {
+        // point at a directory with no manifest → synthetic fallback
+        Rc::new(PjrtRuntime::new(Path::new("/nonexistent/hgca-artifacts")).unwrap())
+    }
+
+    #[test]
+    fn synthetic_fallback_loads_models() {
+        let rt = rt();
+        assert!(rt.manifest.synthetic);
+        let mr = rt.load_model("tiny-small").unwrap();
+        assert!(!mr.trained);
+        assert_eq!(mr.cfg.n_layers, 2);
+        assert!(mr.warmup().unwrap() > 0);
+        assert!(rt.load_model("nope").is_err());
+    }
+
+    #[test]
+    fn name_seed_is_stable_and_distinct() {
+        assert_eq!(name_seed("tiny"), name_seed("tiny"));
+        assert_ne!(name_seed("tiny"), name_seed("tiny-small"));
+    }
+
+    #[test]
+    fn call_validates_shapes_and_records_stats() {
+        let rt = rt();
+        let mr = rt.load_model("tiny-small").unwrap();
+        let meta = mr.find_artifact("embed", 1, None, 1).unwrap().clone();
+        let tokens = [5i32];
+        let positions = [0i32];
+        // wrong dims rejected
+        let bad = mr.call(
+            &meta,
+            &[
+                Arg::I32(&tokens, vec![1, 2]),
+                Arg::I32(&positions, vec![1, 1]),
+                Arg::Weight("tok_emb"),
+                Arg::Weight("pos_emb"),
+            ],
+        );
+        assert!(bad.is_err());
+        // correct dims execute and count a call
+        let out = mr
+            .call(
+                &meta,
+                &[
+                    Arg::I32(&tokens, vec![1, 1]),
+                    Arg::I32(&positions, vec![1, 1]),
+                    Arg::Weight("tok_emb"),
+                    Arg::Weight("pos_emb"),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), mr.cfg.d_model);
+        assert_eq!(mr.stats.borrow().calls, 1);
+    }
+
+    #[test]
+    fn deterministic_synthetic_weights_across_runtimes() {
+        let a = rt().load_model("tiny-small").unwrap();
+        let b = rt().load_model("tiny-small").unwrap();
+        assert_eq!(a.weights["tok_emb"].data, b.weights["tok_emb"].data);
     }
 }

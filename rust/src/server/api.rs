@@ -2,23 +2,51 @@
 //!
 //! Endpoints:
 //!   POST /v1/generate  {"prompt": "...", "max_new_tokens": 32}
-//!   GET  /v1/metrics   → serving metrics snapshot
+//!   POST /v1/batch     {"prompts": [...], "max_new_tokens": 16}
+//!   GET  /v1/metrics   → serving metrics snapshot (engine + pool + batcher)
 //!   GET  /health
+//!
+//! The engine loop is a continuous-batching scheduler: every POST is
+//! admitted into the running batch (no serialization of concurrent
+//! requests), one batcher tick runs per loop iteration, and responses are
+//! routed back per-request as sequences retire. GET endpoints answer
+//! between ticks, so metrics/health stay live while decodes are in flight.
 
-use std::sync::mpsc::Receiver;
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 
 use anyhow::Result;
 
-use crate::engine::batcher::{Batcher, Request};
+use crate::attention::AttnPool;
+use crate::engine::batcher::{Batcher, Completion, Request};
 use crate::engine::Engine;
 use crate::util::json::Json;
 
 use super::http::{HttpResponse, Incoming};
 
+/// One-shot synchronous generate (kept for single-request callers and the
+/// serve_bench smoke phase; the serving loop uses the batcher instead).
 pub fn handle_generate(engine: &mut Engine<'_>, body: &str, next_id: u64) -> HttpResponse {
+    let (prompt, max_new) = match parse_generate(body) {
+        Ok(p) => p,
+        Err(resp) => return *resp,
+    };
+    let mut seq = engine.new_sequence(next_id, &prompt);
+    match engine.generate(&mut seq, max_new) {
+        Ok(tokens) => completion_json(next_id, &prompt, &tokens),
+        Err(e) => HttpResponse::json(500, format!(r#"{{"error":"{e}"}}"#)),
+    }
+}
+
+fn parse_generate(body: &str) -> Result<(Vec<u8>, usize), Box<HttpResponse>> {
     let parsed = match Json::parse(body) {
         Ok(j) => j,
-        Err(e) => return HttpResponse::json(400, format!(r#"{{"error":"bad json: {e}"}}"#)),
+        Err(e) => {
+            return Err(Box::new(HttpResponse::json(
+                400,
+                format!(r#"{{"error":"bad json: {e}"}}"#),
+            )))
+        }
     };
     let prompt = parsed
         .get("prompt")
@@ -27,33 +55,34 @@ pub fn handle_generate(engine: &mut Engine<'_>, body: &str, next_id: u64) -> Htt
         .as_bytes()
         .to_vec();
     if prompt.is_empty() {
-        return HttpResponse::json(400, r#"{"error":"empty prompt"}"#.into());
+        return Err(Box::new(HttpResponse::json(
+            400,
+            r#"{"error":"empty prompt"}"#.into(),
+        )));
     }
     let max_new = parsed
         .get("max_new_tokens")
         .and_then(|v| v.as_usize())
         .unwrap_or(32);
-
-    let mut seq = engine.new_sequence(next_id, &prompt);
-    match engine.generate(&mut seq, max_new) {
-        Ok(tokens) => {
-            let text = String::from_utf8_lossy(&tokens).to_string();
-            let out = Json::obj(vec![
-                ("id", Json::num(next_id as f64)),
-                ("text", Json::str(text)),
-                ("prompt_tokens", Json::num(prompt.len() as f64)),
-                ("completion_tokens", Json::num(tokens.len() as f64)),
-            ]);
-            HttpResponse::json(200, out.to_string())
-        }
-        Err(e) => HttpResponse::json(500, format!(r#"{{"error":"{e}"}}"#)),
-    }
+    Ok((prompt, max_new))
 }
 
-pub fn handle_metrics(engine: &Engine<'_>) -> HttpResponse {
+fn completion_json(id: u64, prompt: &[u8], tokens: &[u8]) -> HttpResponse {
+    let text = String::from_utf8_lossy(tokens).to_string();
+    let out = Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("text", Json::str(text)),
+        ("prompt_tokens", Json::num(prompt.len() as f64)),
+        ("completion_tokens", Json::num(tokens.len() as f64)),
+    ]);
+    HttpResponse::json(200, out.to_string())
+}
+
+pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpResponse {
     let m = &engine.metrics;
     let tbt = m.tbt_summary();
-    let out = Json::obj(vec![
+    let pool = AttnPool::global().stats();
+    let mut fields = vec![
         ("tokens", Json::num(m.tokens as f64)),
         ("prefill_tokens", Json::num(m.prefill_tokens as f64)),
         ("throughput_tok_s", Json::num(m.throughput())),
@@ -69,89 +98,259 @@ pub fn handle_metrics(engine: &Engine<'_>) -> HttpResponse {
         ("peak_gpu_kv_bytes", Json::num(m.peak_gpu_kv_bytes as f64)),
         ("peak_cpu_kv_bytes", Json::num(m.peak_cpu_kv_bytes as f64)),
         ("policy", Json::str(engine.policy.name())),
-    ]);
-    HttpResponse::json(200, out.to_string())
+        // persistent CPU attention pool (tentpole counters)
+        ("pool_workers", Json::num(pool.workers as f64)),
+        ("pool_submissions", Json::num(pool.submissions as f64)),
+        ("pool_tasks", Json::num(pool.tasks as f64)),
+        ("pool_jobs", Json::num(pool.jobs as f64)),
+        ("pool_busy_secs", Json::num(pool.busy_secs)),
+        ("pool_queue_depth", Json::num(pool.queue_depth as f64)),
+        ("pool_queue_peak", Json::num(pool.queue_peak as f64)),
+    ];
+    if let Some(b) = batcher {
+        let s = b.stats();
+        fields.push(("batch_rows", Json::num(b.batch as f64)));
+        fields.push(("batch_ticks", Json::num(s.ticks as f64)));
+        fields.push(("batch_submitted", Json::num(s.submitted as f64)));
+        fields.push(("batch_completed", Json::num(s.completed as f64)));
+        fields.push(("batch_queued", Json::num(s.queued as f64)));
+        fields.push(("batch_active", Json::num(s.active as f64)));
+        fields.push(("batch_mean_occupancy", Json::num(s.mean_occupancy)));
+        fields.push(("batch_max_queue_ticks", Json::num(s.max_queue_ticks as f64)));
+    }
+    HttpResponse::json(200, Json::obj(fields).to_string())
 }
 
-/// The engine service loop: single thread owns the PJRT runtime and serves
-/// requests from the HTTP acceptor. Uses the continuous batcher when
-/// multiple requests are queued.
+/// Where a completion's response goes.
+enum Waiter {
+    /// a /v1/generate request: respond when its sequence retires
+    Single {
+        reply: Sender<HttpResponse>,
+        prompt: Vec<u8>,
+    },
+    /// one member of a /v1/batch group: respond when the whole group is done
+    Group { key: u64 },
+}
+
+struct Group {
+    reply: Sender<HttpResponse>,
+    remaining: usize,
+    items: Vec<(u64, Vec<u8>)>,
+}
+
+/// The engine service loop: single thread owns the model runtime and serves
+/// requests from the HTTP acceptor through the continuous batcher. New
+/// requests are admitted into the running batch at tick granularity;
+/// nothing blocks behind a long generation.
 pub fn engine_loop(engine: &mut Engine<'_>, rx: Receiver<Incoming>, batch: usize) -> Result<()> {
     let mut next_id = 0u64;
     let mut batcher = Batcher::new(batch);
-    for inc in rx {
-        match (inc.req.method.as_str(), inc.req.path.as_str()) {
-            ("GET", "/health") => {
-                let _ = inc.reply.send(HttpResponse::json(200, r#"{"ok":true}"#.into()));
+    let mut waiters: HashMap<u64, Waiter> = HashMap::new();
+    let mut groups: HashMap<u64, Group> = HashMap::new();
+    let mut next_group = 0u64;
+    let mut open = true;
+
+    while open || batcher.pending() > 0 {
+        // block only when idle; otherwise drain whatever has arrived and
+        // keep ticking the batch
+        if batcher.pending() == 0 && open {
+            match rx.recv() {
+                Ok(inc) => admit(
+                    engine, &mut batcher, &mut waiters, &mut groups, &mut next_id,
+                    &mut next_group, inc,
+                ),
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
             }
-            ("GET", "/v1/metrics") => {
-                let _ = inc.reply.send(handle_metrics(engine));
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(inc) => admit(
+                    engine, &mut batcher, &mut waiters, &mut groups, &mut next_id,
+                    &mut next_group, inc,
+                ),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
             }
-            ("POST", "/v1/generate") => {
-                next_id += 1;
-                // fast path: serve immediately (single in-flight request);
-                // the batcher path is exercised by serve_bench which floods
-                // requests through submit() directly.
-                let resp = handle_generate(engine, &inc.req.body, next_id);
-                let _ = inc.reply.send(resp);
-            }
-            ("POST", "/v1/batch") => {
-                // batch probe: {"prompts": [...], "max_new_tokens": n}
-                next_id += 1;
-                let resp = handle_batch(engine, &mut batcher, &inc.req.body, &mut next_id);
-                let _ = inc.reply.send(resp);
-            }
-            _ => {
-                let _ = inc
-                    .reply
-                    .send(HttpResponse::json(404, r#"{"error":"not found"}"#.into()));
+        }
+        if batcher.pending() > 0 {
+            match batcher.tick(engine) {
+                Ok(finished) => {
+                    for c in finished {
+                        resolve(&mut waiters, &mut groups, c);
+                    }
+                }
+                Err(e) => {
+                    // an engine failure poisons every in-flight request:
+                    // fail them all explicitly, then surface the error
+                    let msg = HttpResponse::json(500, format!(r#"{{"error":"{e}"}}"#));
+                    for (_, w) in waiters.drain() {
+                        if let Waiter::Single { reply, .. } = w {
+                            let _ = reply.send(msg.clone());
+                        }
+                    }
+                    for (_, g) in groups.drain() {
+                        let _ = g.reply.send(msg.clone());
+                    }
+                    return Err(e);
+                }
             }
         }
     }
     Ok(())
 }
 
-fn handle_batch(
+#[allow(clippy::too_many_arguments)]
+fn admit(
     engine: &mut Engine<'_>,
     batcher: &mut Batcher,
-    body: &str,
+    waiters: &mut HashMap<u64, Waiter>,
+    groups: &mut HashMap<u64, Group>,
     next_id: &mut u64,
-) -> HttpResponse {
+    next_group: &mut u64,
+    inc: Incoming,
+) {
+    match (inc.req.method.as_str(), inc.req.path.as_str()) {
+        ("GET", "/health") => {
+            let _ = inc.reply.send(HttpResponse::json(200, r#"{"ok":true}"#.into()));
+        }
+        ("GET", "/v1/metrics") => {
+            let _ = inc.reply.send(handle_metrics(engine, Some(batcher)));
+        }
+        ("POST", "/v1/generate") => match parse_generate(&inc.req.body) {
+            Ok((prompt, max_new)) => {
+                *next_id += 1;
+                batcher.submit(Request {
+                    id: *next_id,
+                    prompt: prompt.clone(),
+                    max_new_tokens: max_new,
+                });
+                waiters.insert(
+                    *next_id,
+                    Waiter::Single {
+                        reply: inc.reply,
+                        prompt,
+                    },
+                );
+            }
+            Err(resp) => {
+                let _ = inc.reply.send(*resp);
+            }
+        },
+        ("POST", "/v1/batch") => {
+            // batch probe: {"prompts": [...], "max_new_tokens": n}
+            match parse_batch(&inc.req.body) {
+                Ok((prompts, max_new)) => {
+                    *next_group += 1;
+                    let key = *next_group;
+                    groups.insert(
+                        key,
+                        Group {
+                            reply: inc.reply,
+                            remaining: prompts.len(),
+                            items: Vec::with_capacity(prompts.len()),
+                        },
+                    );
+                    for p in prompts {
+                        *next_id += 1;
+                        batcher.submit(Request {
+                            id: *next_id,
+                            prompt: p,
+                            max_new_tokens: max_new,
+                        });
+                        waiters.insert(*next_id, Waiter::Group { key });
+                    }
+                }
+                Err(resp) => {
+                    let _ = inc.reply.send(*resp);
+                }
+            }
+        }
+        _ => {
+            let _ = inc
+                .reply
+                .send(HttpResponse::json(404, r#"{"error":"not found"}"#.into()));
+        }
+    }
+}
+
+fn parse_batch(body: &str) -> Result<(Vec<Vec<u8>>, usize), Box<HttpResponse>> {
     let parsed = match Json::parse(body) {
         Ok(j) => j,
-        Err(e) => return HttpResponse::json(400, format!(r#"{{"error":"bad json: {e}"}}"#)),
+        Err(e) => {
+            return Err(Box::new(HttpResponse::json(
+                400,
+                format!(r#"{{"error":"bad json: {e}"}}"#),
+            )))
+        }
     };
     let Some(prompts) = parsed.get("prompts").and_then(|p| p.as_arr()) else {
-        return HttpResponse::json(400, r#"{"error":"missing prompts"}"#.into());
+        return Err(Box::new(HttpResponse::json(
+            400,
+            r#"{"error":"missing prompts"}"#.into(),
+        )));
     };
     let max_new = parsed
         .get("max_new_tokens")
         .and_then(|v| v.as_usize())
         .unwrap_or(16);
+    let mut out = Vec::with_capacity(prompts.len());
     for p in prompts {
         let Some(text) = p.as_str() else {
-            return HttpResponse::json(400, r#"{"error":"prompt not a string"}"#.into());
+            return Err(Box::new(HttpResponse::json(
+                400,
+                r#"{"error":"prompt not a string"}"#.into(),
+            )));
         };
-        *next_id += 1;
-        batcher.submit(Request {
-            id: *next_id,
-            prompt: text.as_bytes().to_vec(),
-            max_new_tokens: max_new,
-        });
+        out.push(text.as_bytes().to_vec());
     }
-    match batcher.run_to_completion(engine) {
-        Ok(done) => {
-            let items: Vec<Json> = done
-                .iter()
-                .map(|c| {
-                    Json::obj(vec![
-                        ("id", Json::num(c.id as f64)),
-                        ("text", Json::str(String::from_utf8_lossy(&c.text).to_string())),
-                    ])
-                })
-                .collect();
-            HttpResponse::json(200, Json::obj(vec![("completions", Json::arr(items))]).to_string())
+    if out.is_empty() {
+        return Err(Box::new(HttpResponse::json(
+            400,
+            r#"{"error":"empty prompts"}"#.into(),
+        )));
+    }
+    Ok((out, max_new))
+}
+
+fn resolve(waiters: &mut HashMap<u64, Waiter>, groups: &mut HashMap<u64, Group>, c: Completion) {
+    match waiters.remove(&c.id) {
+        Some(Waiter::Single { reply, prompt }) => {
+            let _ = reply.send(completion_json(c.id, &prompt, &c.text));
         }
-        Err(e) => HttpResponse::json(500, format!(r#"{{"error":"{e}"}}"#)),
+        Some(Waiter::Group { key }) => {
+            let done = {
+                let g = groups.get_mut(&key).expect("group for member");
+                g.items.push((c.id, c.text));
+                g.remaining -= 1;
+                g.remaining == 0
+            };
+            if done {
+                let mut g = groups.remove(&key).expect("group complete");
+                g.items.sort_by_key(|(id, _)| *id);
+                let items: Vec<Json> = g
+                    .items
+                    .iter()
+                    .map(|(id, text)| {
+                        Json::obj(vec![
+                            ("id", Json::num(*id as f64)),
+                            ("text", Json::str(String::from_utf8_lossy(text).to_string())),
+                        ])
+                    })
+                    .collect();
+                let _ = g.reply.send(HttpResponse::json(
+                    200,
+                    Json::obj(vec![("completions", Json::arr(items))]).to_string(),
+                ));
+            }
+        }
+        None => {
+            // waiter dropped (client hung up mid-flight) — nothing to do
+        }
     }
 }

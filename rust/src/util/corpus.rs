@@ -1,0 +1,265 @@
+//! Deterministic synthetic corpus generator — rust port of
+//! python/compile/corpus.py (WikiText stand-in; no network in the build
+//! environment). Same LCG, same tables, same control flow, so the bytes
+//! match the python export exactly and either side can (re)generate
+//! `data/corpus.txt` for the evaluation paths.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Tiny deterministic PRNG (mirrors corpus.py::_Lcg).
+struct Lcg {
+    state: u64,
+}
+
+impl Lcg {
+    fn new(seed: u64) -> Lcg {
+        Lcg { state: seed }
+    }
+
+    fn next(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.state >> 33
+    }
+
+    fn choice<'a>(&mut self, seq: &[&'a str]) -> &'a str {
+        seq[(self.next() as usize) % seq.len()]
+    }
+
+    fn randint(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+}
+
+const ENTITIES: [&str; 18] = [
+    "Arlington",
+    "the Brazos River",
+    "Fort Concho",
+    "Palo Duro Canyon",
+    "Governor Coke",
+    "the Texas and Pacific Railway",
+    "Colonel Mackenzie",
+    "the Red River",
+    "Judge Roy Bean",
+    "the Chisholm Trail",
+    "Galveston",
+    "the Comanche nation",
+    "Captain Goodnight",
+    "the Llano Estacado",
+    "the Rio Grande",
+    "General Sheridan",
+    "the Pecos valley",
+    "Austin",
+];
+
+const SUBJECTS: [&str; 10] = [
+    "The settlement",
+    "The expedition",
+    "The railway company",
+    "The garrison",
+    "A survey party",
+    "The territorial legislature",
+    "The cattle drive",
+    "The river crossing",
+    "The trading post",
+    "The county court",
+];
+
+const VERBS: [&str; 10] = [
+    "was established near",
+    "expanded along",
+    "negotiated with",
+    "was abandoned after the flood at",
+    "mapped the region around",
+    "granted land adjacent to",
+    "defended the route through",
+    "recorded the first census of",
+    "shipped grain from",
+    "surveyed",
+];
+
+const CLAUSES: [&str; 10] = [
+    "during the spring of that year",
+    "despite repeated delays",
+    "under the terms of the treaty",
+    "before the winter storms arrived",
+    "with support from the federal government",
+    "after the drought ended",
+    "at considerable expense",
+    "according to contemporary accounts",
+    "as noted in the annual report",
+    "following the election",
+];
+
+const CONNECTORS: [&str; 8] = [
+    "Meanwhile,",
+    "In the following decade,",
+    "By contrast,",
+    "Soon after,",
+    "Historical records show that",
+    "According to later historians,",
+    "In the same period,",
+    "Two years later,",
+];
+
+/// Default corpus length — matches corpus.py::generate.
+pub const DEFAULT_BYTES: usize = 262_144;
+
+/// Default seed — ASCII "HGCA", matching the python generator.
+pub const DEFAULT_SEED: u64 = 0x48474341;
+
+/// python str.title(): uppercase each word's first letter, lowercase the
+/// rest (the entity strings are alphabetic words + spaces only).
+fn title_case(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut start_of_word = true;
+    for c in s.chars() {
+        if c.is_ascii_alphabetic() {
+            if start_of_word {
+                out.push(c.to_ascii_uppercase());
+            } else {
+                out.push(c.to_ascii_lowercase());
+            }
+            start_of_word = false;
+        } else {
+            out.push(c);
+            start_of_word = true;
+        }
+    }
+    out
+}
+
+/// Generate `n_bytes` of the deterministic corpus (mirrors
+/// corpus.py::generate — same RNG consumption order).
+pub fn generate(n_bytes: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Lcg::new(seed);
+    let mut out = String::new();
+    let mut para_len: usize = 0;
+    let mut focal: Vec<&str> = (0..3).map(|_| rng.choice(&ENTITIES)).collect();
+    while out.len() < n_bytes {
+        if para_len as u64 > rng.randint(400, 900) {
+            out.push_str("\n\n");
+            para_len = 0;
+            if rng.randint(0, 3) == 0 {
+                focal = (0..3).map(|_| rng.choice(&ENTITIES)).collect();
+                let hdr = format!("= {} =\n\n", title_case(rng.choice(&ENTITIES)));
+                out.push_str(&hdr);
+            }
+        }
+        let ent = if rng.randint(0, 9) < 7 {
+            focal[(rng.next() as usize) % 3]
+        } else {
+            rng.choice(&ENTITIES)
+        };
+        let mut parts: Vec<String> = Vec::with_capacity(5);
+        if rng.randint(0, 2) == 0 {
+            parts.push(rng.choice(&CONNECTORS).to_string());
+        }
+        let subj = rng.choice(&SUBJECTS);
+        parts.push(if parts.is_empty() {
+            subj.to_string()
+        } else {
+            subj.to_ascii_lowercase()
+        });
+        parts.push(rng.choice(&VERBS).to_string());
+        parts.push(ent.to_string());
+        if rng.randint(0, 1) == 0 {
+            parts.push(rng.choice(&CLAUSES).to_string());
+        }
+        if rng.randint(0, 4) == 0 {
+            parts.push(format!("in 18{}", rng.randint(40, 99)));
+        }
+        let sent = format!("{}. ", parts.join(" "));
+        para_len += sent.len();
+        out.push_str(&sent);
+    }
+    out.truncate(n_bytes);
+    out.into_bytes()
+}
+
+/// Read `path`, generating it first when missing (the rust-side equivalent
+/// of `make data/corpus.txt`). Returns the corpus bytes.
+///
+/// Concurrent callers are safe: the file is written to a temp name and
+/// renamed into place (atomic within the directory), and every generator
+/// produces identical bytes, so readers only ever observe a complete
+/// corpus.
+pub fn ensure_corpus(path: &Path) -> Result<Vec<u8>> {
+    if path.is_file() {
+        return std::fs::read(path).with_context(|| format!("reading {}", path.display()));
+    }
+    let text = generate(DEFAULT_BYTES, DEFAULT_SEED);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    static UNIQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let tmp = path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        UNIQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, &text).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_ascii() {
+        let a = generate(4096, DEFAULT_SEED);
+        let b = generate(4096, DEFAULT_SEED);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4096);
+        assert!(a.iter().all(|&c| c.is_ascii()));
+    }
+
+    #[test]
+    fn prefix_stability() {
+        // a longer generation starts with the shorter one (pure streaming)
+        let short = generate(1000, DEFAULT_SEED);
+        let long = generate(2000, DEFAULT_SEED);
+        assert_eq!(&long[..1000], &short[..]);
+    }
+
+    #[test]
+    fn entities_recur() {
+        let text = String::from_utf8(generate(32_768, DEFAULT_SEED)).unwrap();
+        // focal-entity reuse → at least one entity appears many times
+        let max_count = ENTITIES
+            .iter()
+            .map(|e| text.matches(e).count())
+            .max()
+            .unwrap();
+        assert!(max_count >= 10, "max entity recurrence {max_count}");
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        assert_ne!(generate(512, 1), generate(512, 2));
+    }
+
+    #[test]
+    fn title_case_matches_python() {
+        assert_eq!(title_case("the Brazos River"), "The Brazos River");
+        assert_eq!(title_case("Austin"), "Austin");
+    }
+
+    #[test]
+    fn ensure_corpus_roundtrip() {
+        let dir = std::env::temp_dir().join("hgca_corpus_test");
+        let path = dir.join("corpus.txt");
+        let _ = std::fs::remove_file(&path);
+        let a = ensure_corpus(&path).unwrap();
+        assert_eq!(a.len(), DEFAULT_BYTES);
+        let b = ensure_corpus(&path).unwrap(); // second call reads the file
+        assert_eq!(a, b);
+    }
+}

@@ -1,6 +1,7 @@
 //! Shared substrates: JSON, PRNG, statistics, CLI parsing, property testing.
 
 pub mod argparse;
+pub mod corpus;
 pub mod json;
 pub mod proptest;
 pub mod rng;

