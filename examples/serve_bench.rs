@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         let mut served = 0;
         for inc in &rx {
             let resp = hgca::server::api::handle_generate(&mut engine, &inc.req.body, served);
-            let _ = inc.reply.send(resp);
+            let _ = inc.reply.send(hgca::server::ServerReply::Full(resp));
             served += 1;
             if served >= 4 {
                 break;

@@ -21,7 +21,7 @@
 
 use crate::tensor::ops::{axpy, dot, softmax_lse};
 
-use super::pool::AttnPool;
+use super::pool::{AttnPool, TaskSplit};
 
 /// One (row, head) unit of work: attention over `n` KV entries stored
 /// contiguously ([n][d_head] row-major).
@@ -77,6 +77,42 @@ pub fn sparse_attention_masked(
     q_valid: Option<&[usize]>,
 ) -> CpuAttnOutput {
     AttnPool::global().run_masked(jobs, q, n_query, d_head, threads, want_probs, q_valid)
+}
+
+/// Append-time sparse attention with a task split sized by store length
+/// (ROADMAP's pool-aware append re-evaluation).
+///
+/// Decode submissions split into ≈`cpu_threads` equal-job tasks
+/// ([`sparse_attention_masked`]) because every head's contextual cache has
+/// similar size. Append-time re-evaluation instead attends each head's
+/// *full* CPU store (Algorithm 1 line 19), whose length grows with the
+/// sequence and can vary widely — so here the split follows accumulated KV
+/// entries: a task closes at `entries_per_task` entries, soft-capped at
+/// `max_tasks` tasks. Packing only changes scheduling; outputs are bitwise
+/// identical to every other split.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attention_append(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    entries_per_task: usize,
+    max_tasks: usize,
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+) -> CpuAttnOutput {
+    AttnPool::global().run_split(
+        jobs,
+        q,
+        n_query,
+        d_head,
+        TaskSplit::ByEntries {
+            per_task: entries_per_task,
+            max_tasks,
+        },
+        want_probs,
+        q_valid,
+    )
 }
 
 /// The original per-call scoped-spawn implementation. Kept as (a) the

@@ -14,6 +14,22 @@
 /// Merge one head's states. Returns the merged lse.
 /// `o_acc` holds O_a on entry and the merged output on exit (the paper's
 /// in-place accumulation into the GPU output buffer).
+///
+/// # Example
+///
+/// Two partial attentions over singleton KV sets with equal scores merge
+/// into uniform attention over their union:
+///
+/// ```
+/// use hgca::attention::merge_head;
+///
+/// // each side attended one entry with score 0 → lse = ln(e⁰) = 0
+/// let mut o_gpu = vec![1.0_f32];
+/// let o_cpu = [3.0_f32];
+/// let lse = merge_head(&mut o_gpu, 0.0, &o_cpu, 0.0);
+/// assert!((o_gpu[0] - 2.0).abs() < 1e-6); // (1 + 3) / 2
+/// assert!((lse - 2.0_f32.ln()).abs() < 1e-6); // log-sum-exp of {0, 0}
+/// ```
 pub fn merge_head(o_acc: &mut [f32], lse_a: f32, o_b: &[f32], lse_b: f32) -> f32 {
     debug_assert_eq!(o_acc.len(), o_b.len());
     let m = lse_a.max(lse_b);

@@ -1,6 +1,13 @@
 //! Hybrid attention primitives (paper §3.3): CPU-side sparse attention on a
 //! persistent worker pool, the log-sum-exp merge, and a dense reference
 //! oracle.
+//!
+//! The data flow mirrors Algorithm 2: the GPU artifact produces a partial
+//! attention state (output + log-sum-exp) over the recent window, the
+//! [`cpu_attention`] kernels produce partial states over the CPU-resident
+//! selected entries, and [`merge`] fuses the two into attention over the
+//! union — so the CPU side never ships raw KV back over PCIe, only one
+//! `(o, lse)` pair per (row, head).
 
 pub mod cpu_attention;
 pub mod dense_ref;
@@ -8,7 +15,8 @@ pub mod merge;
 pub mod pool;
 
 pub use cpu_attention::{
-    sparse_attention, sparse_attention_masked, sparse_attention_spawn, CpuAttnOutput, HeadJob,
+    sparse_attention, sparse_attention_append, sparse_attention_masked, sparse_attention_spawn,
+    CpuAttnOutput, HeadJob,
 };
 pub use merge::{merge_head, merge_states, EMPTY_LSE};
-pub use pool::{AttnPool, PoolStats};
+pub use pool::{AttnPool, PoolStats, TaskSplit};

@@ -15,11 +15,17 @@
 //!   from the same queue until its batch drains (caller-assist), so progress
 //!   is guaranteed even with zero workers and small batches finish at
 //!   near-inline latency.
-//! * **determinism** — task packing depends only on `(jobs.len(),
-//!   max_parallel)`, never on worker count or scheduling, and every job's
-//!   arithmetic touches only its own inputs/outputs. Results are therefore
-//!   **bitwise identical** across pool sizes, parallelism caps, and repeated
-//!   runs. The conformance suite pins this.
+//! * **determinism** — task packing ([`TaskSplit`]) depends only on the
+//!   job shapes and the split parameters, never on worker count or
+//!   scheduling, and every job's arithmetic touches only its own
+//!   inputs/outputs. Results are therefore **bitwise identical** across
+//!   pool sizes, parallelism caps, split strategies, and repeated runs.
+//!   The conformance suite pins this.
+//! * **split strategies** — decode packs by job count
+//!   ([`TaskSplit::EvenJobs`], heads have similar working sets); append-time
+//!   full-store re-evaluation packs by KV entries
+//!   ([`TaskSplit::ByEntries`]), so parallelism follows the store length
+//!   instead of the decode cap.
 //!
 //! Multiple engines (threads) may share one pool; tasks from concurrent
 //! submissions interleave in FIFO order. [`AttnPool::global`] is the
@@ -32,6 +38,84 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use super::cpu_attention::{run_job_range, CpuAttnOutput, HeadJob, EMPTY_LSE};
+
+/// How a submission's (row, head) jobs are packed into contiguous pool
+/// tasks. The plan depends only on the job list and the split parameters —
+/// never on worker availability or scheduling — which is what keeps pool
+/// output bitwise identical across pool sizes (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskSplit {
+    /// At most `max_parallel` contiguous tasks of (near-)equal *job count* —
+    /// the decode path, where every head's working set (the contextual
+    /// cache) has similar size and job count is a good proxy for work.
+    EvenJobs {
+        /// Upper bound on the number of packed tasks (the engine passes
+        /// `cfg.cpu_threads`).
+        max_parallel: usize,
+    },
+    /// Contiguous tasks sized by accumulated *KV entries*: a task closes
+    /// once adding the next job would exceed `per_task` entries. This is
+    /// the append path (full-store re-evaluation, Algorithm 1 line 19),
+    /// where per-head lengths grow with the sequence and the right
+    /// parallelism follows the store size rather than the decode cap
+    /// (ROADMAP: pool-aware append re-evaluation).
+    ByEntries {
+        /// Target KV entries per task (≥ 1; a single job larger than this
+        /// still forms one task — jobs are never split).
+        per_task: usize,
+        /// Soft cap on task count: when the greedy split produces more,
+        /// adjacent tasks are merged down to at most this many.
+        max_tasks: usize,
+    },
+}
+
+impl TaskSplit {
+    /// Contiguous per-task job counts (in job order; sums to `jobs.len()`).
+    pub(crate) fn plan(&self, jobs: &[HeadJob<'_>]) -> Vec<usize> {
+        let nj = jobs.len();
+        if nj == 0 {
+            return Vec::new();
+        }
+        match *self {
+            TaskSplit::EvenJobs { max_parallel } => {
+                let threads = max_parallel.max(1).min(nj);
+                let per_task = nj.div_ceil(threads).max(1);
+                let mut counts = Vec::with_capacity(nj.div_ceil(per_task));
+                let mut start = 0;
+                while start < nj {
+                    let c = per_task.min(nj - start);
+                    counts.push(c);
+                    start += c;
+                }
+                counts
+            }
+            TaskSplit::ByEntries { per_task, max_tasks } => {
+                let per_task = per_task.max(1);
+                let mut counts = Vec::new();
+                let (mut cur_jobs, mut cur_entries) = (0usize, 0usize);
+                for job in jobs {
+                    if cur_jobs > 0 && cur_entries + job.n > per_task {
+                        counts.push(cur_jobs);
+                        cur_jobs = 0;
+                        cur_entries = 0;
+                    }
+                    cur_jobs += 1;
+                    cur_entries += job.n;
+                }
+                if cur_jobs > 0 {
+                    counts.push(cur_jobs);
+                }
+                let max_tasks = max_tasks.max(1);
+                if counts.len() > max_tasks {
+                    // merge adjacent tasks down to the cap (deterministic)
+                    let group = counts.len().div_ceil(max_tasks);
+                    counts = counts.chunks(group).map(|g| g.iter().sum::<usize>()).collect();
+                }
+                counts
+            }
+        }
+    }
+}
 
 /// One queued unit of work: a type-erased closure over a contiguous job
 /// range, plus the batch it belongs to.
@@ -235,6 +319,27 @@ impl AttnPool {
     /// tasks the submission splits into (the engine passes
     /// `cfg.cpu_threads`); output is bitwise independent of both this cap
     /// and the pool's worker count.
+    ///
+    /// This is the submit/wait entry point: the call enqueues one task per
+    /// packed job range and blocks until every task has completed (workers
+    /// and the calling thread drain the same queue).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use hgca::attention::{AttnPool, HeadJob};
+    ///
+    /// let pool = AttnPool::new(2);
+    /// // one head attending 3 KV entries of dimension 4
+    /// let k = vec![0.0_f32; 3 * 4]; // zero keys → uniform softmax
+    /// let v = vec![1.0_f32; 3 * 4];
+    /// let jobs = [HeadJob { k: &k, v: &v, n: 3 }];
+    /// let q = vec![0.5_f32; 4];
+    /// let out = pool.run_masked(&jobs, &q, 1, 4, 1, false, None);
+    /// assert_eq!(out.o.len(), 4); // [jobs][n_query][d_head]
+    /// assert!((out.o[0] - 1.0).abs() < 1e-6); // mean of identical values
+    /// assert!((out.lse[0] - 3.0_f32.ln()).abs() < 1e-6);
+    /// ```
     #[allow(clippy::too_many_arguments)]
     pub fn run_masked(
         &self,
@@ -243,6 +348,32 @@ impl AttnPool {
         n_query: usize,
         d_head: usize,
         max_parallel: usize,
+        want_probs: bool,
+        q_valid: Option<&[usize]>,
+    ) -> CpuAttnOutput {
+        self.run_split(
+            jobs,
+            q,
+            n_query,
+            d_head,
+            TaskSplit::EvenJobs { max_parallel },
+            want_probs,
+            q_valid,
+        )
+    }
+
+    /// [`run_masked`](AttnPool::run_masked) with an explicit [`TaskSplit`].
+    /// Packing only changes scheduling: outputs are bitwise identical for
+    /// every split (each job's arithmetic touches only its own inputs and
+    /// its own disjoint output range).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_split(
+        &self,
+        jobs: &[HeadJob<'_>],
+        q: &[f32],
+        n_query: usize,
+        d_head: usize,
+        split: TaskSplit,
         want_probs: bool,
         q_valid: Option<&[usize]>,
     ) -> CpuAttnOutput {
@@ -264,11 +395,10 @@ impl AttnPool {
             };
         }
 
-        let threads = max_parallel.max(1).min(nj);
         // contiguous job ranges per task — the "adjacent head packing";
-        // depends only on (nj, threads), never on worker availability
-        let per_task = nj.div_ceil(threads).max(1);
-        let n_tasks = nj.div_ceil(per_task);
+        // depends only on the job shapes, never on worker availability
+        let counts = split.plan(jobs);
+        let n_tasks = counts.len();
         let batch = BatchState::new(n_tasks);
 
         let c = &self.shared.counters;
@@ -282,8 +412,7 @@ impl AttnPool {
             let mut probs_rest: &mut [Vec<f32>] = &mut probs;
             let mut queue = self.shared.queue.lock().unwrap();
             let mut start = 0;
-            while start < nj {
-                let count = per_task.min(nj - start);
+            for &count in &counts {
                 let (o_task, o_next) = o_rest.split_at_mut(count * n_query * d_head);
                 let (lse_task, lse_next) = lse_rest.split_at_mut(count * n_query);
                 let (p_task, p_next) = if want_probs {
@@ -304,7 +433,7 @@ impl AttnPool {
                     )
                 });
                 // SAFETY: every borrow captured by `run` outlives this call —
-                // run_masked blocks on batch completion before returning, so
+                // run_split blocks on batch completion before returning, so
                 // the 'static promotion never outlives the borrowed data.
                 // Output slices are pairwise disjoint by construction
                 // (split_at_mut), so concurrent tasks never alias.
@@ -533,6 +662,86 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn entries_split_bitwise_matches_even_split() {
+        // the append-path split must be a pure scheduling change: outputs
+        // bitwise identical to the decode-path split for every sizing
+        let mut rng = Rng::new(0xC33);
+        let dh = 8;
+        let kvs = rand_jobs(&mut rng, 11, dh, 40);
+        let jobs = as_jobs(&kvs);
+        let mut q = vec![0.0; jobs.len() * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let pool = AttnPool::new(3);
+        let reference = pool.run_masked(&jobs, &q, 1, dh, 4, true, None);
+        for per_task in [1usize, 8, 64, 10_000] {
+            for max_tasks in [1usize, 3, 64] {
+                let out = pool.run_split(
+                    &jobs,
+                    &q,
+                    1,
+                    dh,
+                    TaskSplit::ByEntries { per_task, max_tasks },
+                    true,
+                    None,
+                );
+                assert_eq!(out.o, reference.o, "per_task={per_task} max_tasks={max_tasks}");
+                assert_eq!(out.lse, reference.lse, "per_task={per_task}");
+                assert_eq!(out.probs, reference.probs, "per_task={per_task}");
+                assert!(out.tasks <= max_tasks.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn entries_split_task_count_follows_store_size() {
+        // 8 uniform jobs of 16 entries each (128 total)
+        let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..8)
+            .map(|_| (vec![0.0; 16 * 4], vec![0.0; 16 * 4], 16))
+            .collect();
+        let jobs = as_jobs(&kvs);
+        let q = vec![0.0; jobs.len() * 4];
+        let pool = AttnPool::new(0);
+        let tasks = |per_task: usize, max_tasks: usize| {
+            pool.run_split(
+                &jobs,
+                &q,
+                1,
+                4,
+                TaskSplit::ByEntries { per_task, max_tasks },
+                false,
+                None,
+            )
+            .tasks
+        };
+        assert_eq!(tasks(32, 64), 4); // 2 jobs (32 entries) per task
+        assert_eq!(tasks(1_000, 64), 1); // small store → one task
+        assert_eq!(tasks(1, 64), 8); // per-job tasks at minimum granularity
+        assert_eq!(tasks(1, 3), 3); // soft cap merges adjacent tasks
+    }
+
+    #[test]
+    fn entries_split_handles_empty_jobs() {
+        // zero-entry jobs accumulate no weight and never stall the plan
+        let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> =
+            (0..5).map(|_| (Vec::new(), Vec::new(), 0)).collect();
+        let jobs = as_jobs(&kvs);
+        let q = vec![1.0; jobs.len() * 4];
+        let pool = AttnPool::new(1);
+        let out = pool.run_split(
+            &jobs,
+            &q,
+            1,
+            4,
+            TaskSplit::ByEntries { per_task: 64, max_tasks: 4 },
+            true,
+            None,
+        );
+        assert_eq!(out.tasks, 1); // all-zero entries pack into one task
+        assert!(out.lse.iter().all(|&l| l == EMPTY_LSE));
+        assert!(out.o.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -16,6 +16,12 @@ pub struct HgcaConfig {
     pub beta: f32,
     /// CPU threads for sparse attention (heads get packed, §3.3).
     pub cpu_threads: usize,
+    /// KV entries per CPU task for append-time full-store re-evaluation
+    /// (the pool-aware split: task count follows the store length instead
+    /// of the decode parallelism cap — see
+    /// [`crate::attention::sparse_attention_append`]). Larger values mean
+    /// fewer, longer tasks.
+    pub append_entries_per_task: usize,
     /// Prefill/append chunk length (must match a compiled artifact).
     pub chunk: usize,
     /// Max batch rows (must match a compiled artifact batch).
@@ -37,6 +43,7 @@ impl Default for HgcaConfig {
             cpu_threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4),
+            append_entries_per_task: 1024,
             chunk: 64,
             max_batch: 4,
             gpu_only: false,
@@ -65,6 +72,10 @@ impl HgcaConfig {
         );
         anyhow::ensure!(self.beta >= 0.0, "beta must be non-negative");
         anyhow::ensure!(self.cpu_threads > 0, "cpu_threads must be positive");
+        anyhow::ensure!(
+            self.append_entries_per_task > 0,
+            "append_entries_per_task must be positive"
+        );
         anyhow::ensure!(self.chunk > 0 && self.max_batch > 0, "chunk/batch positive");
         Ok(())
     }

@@ -20,14 +20,19 @@ use super::strategy::Policy;
 
 /// One in-flight sequence.
 pub struct Sequence {
+    /// Caller-assigned id (echoed in completions / token events).
     pub id: u64,
+    /// All known tokens: prompt + generated; entries past `processed` are
+    /// pending (not yet absorbed into the KV caches).
     pub tokens: Vec<u8>,
+    /// Per-layer GPU window + CPU store for this sequence.
     pub kv: KvManager,
     /// tokens already absorbed into the KV cache
     pub processed: usize,
 }
 
 impl Sequence {
+    /// A fresh sequence holding `prompt` as pending tokens.
     pub fn new(id: u64, prompt: &[u8], model: &ModelConfig, cfg: &HgcaConfig) -> Sequence {
         Sequence {
             id,
@@ -37,18 +42,30 @@ impl Sequence {
         }
     }
 
+    /// Tokens absorbed so far across GPU window + CPU store.
     pub fn total_kv_entries(&self) -> usize {
         self.kv.seq_len
     }
 }
 
+/// The hybrid-attention inference engine (one model, any number of
+/// sequences). Single-threaded by design: the engine thread owns the
+/// runtime; parallelism lives below (the CPU attention pool) and above
+/// (the continuous batcher admitting concurrent requests).
 pub struct Engine<'m> {
+    /// Model runtime (compiled artifacts + weights).
     pub mr: &'m ModelRuntime,
+    /// HGCA tunables (window, chunk, β, thread caps…).
     pub cfg: HgcaConfig,
+    /// Attention placement policy (HGCA or a paper baseline).
     pub policy: Policy,
+    /// Simulated-hardware cost model (the paper's testbed).
     pub testbed: Testbed,
+    /// Token sampler (greedy by default — the determinism tests rely on it).
     pub sampler: Sampler,
+    /// Serving counters (throughput, TBT, memory peaks, prefill chunks…).
     pub metrics: Metrics,
+    /// Sampler randomness (unused by greedy).
     pub rng: Rng,
     /// scratch: batch window staging buffers, reused across steps
     k_win: Vec<f32>,
@@ -56,6 +73,8 @@ pub struct Engine<'m> {
 }
 
 impl<'m> Engine<'m> {
+    /// An engine over `mr` with the paper testbed, greedy sampling, and
+    /// fresh metrics.
     pub fn new(mr: &'m ModelRuntime, cfg: HgcaConfig, policy: Policy) -> Engine<'m> {
         Engine {
             mr,
@@ -70,6 +89,7 @@ impl<'m> Engine<'m> {
         }
     }
 
+    /// The model configuration this engine serves.
     pub fn model(&self) -> &ModelConfig {
         &self.mr.cfg
     }
@@ -90,6 +110,7 @@ impl<'m> Engine<'m> {
             })
     }
 
+    /// A fresh [`Sequence`] sized for this engine's model + config.
     pub fn new_sequence(&self, id: u64, prompt: &[u8]) -> Sequence {
         Sequence::new(id, prompt, &self.mr.cfg, &self.cfg)
     }
@@ -319,9 +340,27 @@ impl<'m> Engine<'m> {
                 // for this layer (continuous batching: cross-request work is
                 // fused, then split back per sequence by the LSE merge)
                 let cpu_t = Timer::start();
-                let cpu_out = crate::attention::cpu_attention::sparse_attention_masked(
-                    &jobs, &out.q, n, dh, self.cfg.cpu_threads, is_append, Some(&q_valid),
-                );
+                let store_sized = is_append || self.policy.decode_attends_full_store();
+                let cpu_out = if store_sized {
+                    // the gather spans the FULL store per head (append
+                    // re-evaluation, or a full-offload-style policy): size
+                    // the task split by store length, not the decode
+                    // parallelism cap (pool-aware split)
+                    crate::attention::cpu_attention::sparse_attention_append(
+                        &jobs,
+                        &out.q,
+                        n,
+                        dh,
+                        self.cfg.append_entries_per_task,
+                        self.cfg.cpu_threads.saturating_mul(4).max(1),
+                        is_append,
+                        Some(&q_valid),
+                    )
+                } else {
+                    crate::attention::cpu_attention::sparse_attention_masked(
+                        &jobs, &out.q, n, dh, self.cfg.cpu_threads, is_append, Some(&q_valid),
+                    )
+                };
                 self.metrics
                     .observe_cpu_attn(cpu_t.secs(), jobs.len() as u64, cpu_out.tasks as u64);
 
@@ -439,26 +478,50 @@ impl<'m> Engine<'m> {
         }
     }
 
+    /// Absorb **one chunk** (at most `cfg.chunk` tokens) of the sequence's
+    /// pending tokens into the KV cache. This is the scheduling granule of
+    /// chunked prefill: the continuous batcher calls it between decode
+    /// ticks so a long prompt admission never stalls running sequences.
+    ///
+    /// Returns `Some(logits)` of the last valid position once the final
+    /// pending token has been absorbed (`None` while chunks remain). A
+    /// sequence with nothing pending returns `Some(empty)` without running
+    /// a step. One call is one artifact step — splitting a prefill across
+    /// calls is bitwise identical to running [`Engine::prefill`] in one go,
+    /// and steps for *other* sequences in between do not perturb it (no
+    /// cross-sequence state below the engine API).
+    pub fn prefill_step(&mut self, seq: &mut Sequence) -> Result<Option<Vec<f32>>> {
+        if seq.processed >= seq.tokens.len() {
+            return Ok(Some(Vec::new()));
+        }
+        let chunk = self.cfg.chunk;
+        let remaining = seq.tokens.len() - seq.processed;
+        let need = remaining <= chunk;
+        let out = if remaining == 1 {
+            self.step(&mut [seq], 1, 1, need)?
+        } else {
+            // padded chunk: one artifact call regardless of remainder
+            let v = remaining.min(chunk);
+            self.step_masked(&mut [seq], 1, chunk, &[v], need)?
+        };
+        self.metrics.prefill_tokens += remaining.min(chunk) as u64;
+        self.metrics.prefill_chunks += 1;
+        if need {
+            Ok(Some(out.into_iter().next().unwrap_or_default()))
+        } else {
+            Ok(None)
+        }
+    }
+
     /// Absorb a sequence's pending tokens (prompt or forced text) into the
     /// KV cache: full chunks via the append artifact, remainder token-wise.
     /// Returns last-position logits when the caller needs them.
     pub fn prefill(&mut self, seq: &mut Sequence) -> Result<Vec<f32>> {
-        let chunk = self.cfg.chunk;
         let mut logits = Vec::new();
         while seq.processed < seq.tokens.len() {
-            let remaining = seq.tokens.len() - seq.processed;
-            let need = remaining <= chunk;
-            let out = if remaining == 1 {
-                self.step(&mut [seq], 1, 1, need)?
-            } else {
-                // padded chunk: one artifact call regardless of remainder
-                let v = remaining.min(chunk);
-                self.step_masked(&mut [seq], 1, chunk, &[v], need)?
-            };
-            if need {
-                logits = out.into_iter().next().unwrap_or_default();
+            if let Some(l) = self.prefill_step(seq)? {
+                logits = l;
             }
-            self.metrics.prefill_tokens += remaining.min(chunk) as u64;
         }
         Ok(logits)
     }

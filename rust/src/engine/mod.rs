@@ -1,10 +1,19 @@
 //! Inference engine: hybrid attention orchestration (Algorithm 2),
 //! generation loops, continuous batching, policy strategies.
+//!
+//! * [`engine`] runs one hybrid step: dense window attention on the
+//!   artifact ("GPU") in parallel with CPU sparse attention over the
+//!   selected store entries, fused by the LSE merge.
+//! * [`batcher`] schedules sequences over the fixed-batch artifacts:
+//!   FIFO admission, chunked prefill interleaved with fused decode steps,
+//!   per-token events for streaming.
+//! * [`strategy`] selects which CPU entries are attended and how the step
+//!   is charged on the simulated testbed (HGCA + paper baselines).
 
 pub mod batcher;
 pub mod engine;
 pub mod strategy;
 
-pub use batcher::{Batcher, BatcherStats, Completion, Request};
+pub use batcher::{Batcher, BatcherStats, Completion, Request, TokenEvent};
 pub use engine::{Engine, Sequence};
 pub use strategy::Policy;

@@ -49,6 +49,17 @@ impl Policy {
         !matches!(self, Policy::GpuOnly)
     }
 
+    /// Does the decode-time gather scale with the *full* CPU store rather
+    /// than a bounded selection? Store-sized working sets use the
+    /// entries-based pool task split ([`crate::attention::TaskSplit::ByEntries`])
+    /// even at decode time, so CPU parallelism follows the store length —
+    /// the same pool-aware sizing append-time re-evaluation uses. HGCA's
+    /// decode set (the contextual cache) and the top-k/static baselines are
+    /// selection-bounded, so they keep the equal-job split.
+    pub fn decode_attends_full_store(&self) -> bool {
+        matches!(self, Policy::FullOffload)
+    }
+
     /// Build the per-head (k, v) gather for one layer's CPU-side attention.
     /// Returns (k, v, n) per head — contiguous buffers ready for HeadJob.
     /// HGCA uses the pre-packed contextual cache (zero gather — §3.3);
@@ -259,6 +270,17 @@ mod tests {
         assert!(t < 0.01);
         assert!(p.discards_unselected());
         assert!(!Policy::Hgca { beta: 1.0 }.discards_unselected());
+    }
+
+    #[test]
+    fn full_offload_decode_is_store_sized() {
+        // only full-offload gathers the whole store at decode time, so only
+        // it opts into the entries-based split outside append steps
+        assert!(Policy::FullOffload.decode_attends_full_store());
+        assert!(!Policy::Hgca { beta: 1.0 }.decode_attends_full_store());
+        assert!(!Policy::H2o { frac: 0.2 }.decode_attends_full_store());
+        assert!(!Policy::Static { sinks: 4, recent: 64 }.decode_attends_full_store());
+        assert!(!Policy::GpuOnly.decode_attends_full_store());
     }
 
     #[test]

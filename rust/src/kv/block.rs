@@ -18,6 +18,7 @@ pub struct KvBlock {
 }
 
 impl KvBlock {
+    /// A zeroed block of `len` entries per head.
     pub fn new(heads: usize, d_head: usize, len: usize) -> KvBlock {
         KvBlock {
             heads,
@@ -30,20 +31,24 @@ impl KvBlock {
         }
     }
 
+    /// Key vector of one (head, entry).
     pub fn k_at(&self, h: usize, t: usize) -> &[f32] {
         let o = (h * self.len + t) * self.d_head;
         &self.k[o..o + self.d_head]
     }
 
+    /// Value vector of one (head, entry).
     pub fn v_at(&self, h: usize, t: usize) -> &[f32] {
         let o = (h * self.len + t) * self.d_head;
         &self.v[o..o + self.d_head]
     }
 
+    /// MAW of one (head, entry).
     pub fn maw_at(&self, h: usize, t: usize) -> f32 {
         self.maw[h * self.len + t]
     }
 
+    /// Transfer size (the simulated PCIe eviction cost is charged on this).
     pub fn size_bytes(&self) -> usize {
         (self.k.len() + self.v.len() + self.maw.len()) * 4 + self.pos.len() * 8
     }

@@ -26,9 +26,11 @@ pub struct HeadStore {
 }
 
 impl HeadStore {
+    /// Entries stored for this head.
     pub fn len(&self) -> usize {
         self.maw.len()
     }
+    /// True when no entries have been evicted to this head yet.
     pub fn is_empty(&self) -> bool {
         self.maw.is_empty()
     }
@@ -46,23 +48,33 @@ pub struct HeadCtx {
 }
 
 impl HeadCtx {
+    /// Selected entries for this head.
     pub fn len(&self) -> usize {
         self.idx.len()
     }
+    /// True when the β-threshold selected nothing for this head.
     pub fn is_empty(&self) -> bool {
         self.idx.is_empty()
     }
 }
 
+/// The CPU half of one layer's KV state: every evicted entry per head
+/// (`full`) plus the contiguous selected subset (`ctx`) the sparse
+/// attention actually reads.
 #[derive(Debug, Clone)]
 pub struct CpuLayerStore {
+    /// Attention heads.
     pub heads: usize,
+    /// Head dimension.
     pub d_head: usize,
+    /// Per-head full store (nothing is ever dropped).
     pub full: Vec<HeadStore>,
+    /// Per-head contextual cache (the β-selected working set).
     pub ctx: Vec<HeadCtx>,
 }
 
 impl CpuLayerStore {
+    /// An empty store for `heads` heads.
     pub fn new(heads: usize, d_head: usize) -> Self {
         CpuLayerStore {
             heads,
@@ -72,10 +84,12 @@ impl CpuLayerStore {
         }
     }
 
+    /// Entries per head (identical across heads — eviction is whole-block).
     pub fn len(&self) -> usize {
         self.full[0].len()
     }
 
+    /// True while nothing has been evicted to this layer.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -166,6 +180,8 @@ impl CpuLayerStore {
         self.ctx.iter().map(|c| c.len() as f32 / n).collect()
     }
 
+    /// Resident bytes (full store + contextual cache; the paper's peak
+    /// CPU-KV metric).
     pub fn size_bytes(&self) -> usize {
         let full: usize = self
             .full

@@ -12,11 +12,16 @@
 
 use super::block::KvBlock;
 
+/// The per-(layer, sequence) GPU window: recent KV entries + MAW tracking.
 #[derive(Debug, Clone)]
 pub struct GpuLayerCache {
+    /// Attention heads.
     pub heads: usize,
+    /// Head dimension.
     pub d_head: usize,
+    /// Entries per eviction block.
     pub blk_size: usize,
+    /// Blocks in the window (W = blk_num × blk_size).
     pub blk_num: usize,
     /// k/v laid out [H][W][dh] row-major — matches the artifact input.
     pub k: Vec<f32>,
@@ -32,6 +37,7 @@ pub struct GpuLayerCache {
 }
 
 impl GpuLayerCache {
+    /// An empty window of `blk_num × blk_size` slots with MAW factor `alpha`.
     pub fn new(heads: usize, d_head: usize, blk_size: usize, blk_num: usize, alpha: f32) -> Self {
         let w = blk_size * blk_num;
         GpuLayerCache {
@@ -48,16 +54,19 @@ impl GpuLayerCache {
         }
     }
 
+    /// Window capacity W.
     pub fn window(&self) -> usize {
         self.blk_size * self.blk_num
     }
 
+    /// Key vector of one (head, slot).
     pub fn k_at(&self, h: usize, slot: usize) -> &[f32] {
         let w = self.window();
         let o = (h * w + slot) * self.d_head;
         &self.k[o..o + self.d_head]
     }
 
+    /// Value vector of one (head, slot).
     pub fn v_at(&self, h: usize, slot: usize) -> &[f32] {
         let w = self.window();
         let o = (h * w + slot) * self.d_head;
@@ -151,6 +160,7 @@ impl GpuLayerCache {
         }
     }
 
+    /// Resident bytes (k + v + maw; the paper's peak-GPU-KV metric).
     pub fn size_bytes(&self) -> usize {
         (self.k.len() + self.v.len() + self.maw.len()) * 4
     }

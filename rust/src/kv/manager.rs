@@ -6,16 +6,21 @@ use crate::config::{HgcaConfig, ModelConfig};
 use super::cpu_store::CpuLayerStore;
 use super::gpu_pool::GpuLayerCache;
 
+/// One layer's split KV state: the GPU window + the CPU store.
 #[derive(Debug, Clone)]
 pub struct LayerKv {
+    /// Recent entries, resident on the "GPU" (the artifact's k_win/v_win).
     pub gpu: GpuLayerCache,
+    /// Evicted entries + the selected contextual cache, resident on the CPU.
     pub cpu: CpuLayerStore,
 }
 
 /// KV state for one sequence across all layers.
 #[derive(Debug, Clone)]
 pub struct KvManager {
+    /// Per-layer GPU window + CPU store.
     pub layers: Vec<LayerKv>,
+    /// The HGCA tunables this manager was built with.
     pub cfg: HgcaConfig,
     /// total tokens absorbed so far (= next position)
     pub seq_len: usize,
@@ -24,6 +29,7 @@ pub struct KvManager {
 }
 
 impl KvManager {
+    /// Empty KV state for one sequence of `model` under `cfg`.
     pub fn new(model: &ModelConfig, cfg: &HgcaConfig) -> KvManager {
         let layers = (0..model.n_layers)
             .map(|_| LayerKv {
@@ -83,6 +89,7 @@ impl KvManager {
         self.layers.iter().map(|l| l.gpu.size_bytes()).sum()
     }
 
+    /// CPU-resident KV bytes across layers.
     pub fn cpu_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.cpu.size_bytes()).sum()
     }

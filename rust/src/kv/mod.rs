@@ -1,4 +1,12 @@
 //! Locality-aware KV cache management (paper §3.2, Algorithm 1).
+//!
+//! Per (sequence, layer), KV entries live in exactly one of two places:
+//! the recent-window [`GpuLayerCache`] (a circular block buffer that is the
+//! attention artifact's `k_win`/`v_win` input) or the [`CpuLayerStore`]
+//! (every evicted entry, plus the β-threshold-selected *contextual cache*
+//! the CPU sparse attention reads). [`KvBlock`] is the eviction granule;
+//! [`KvManager`] glues the two halves per layer and does the Algorithm 1
+//! bookkeeping (make-room, append, MAW advance).
 
 pub mod block;
 pub mod cpu_store;

@@ -18,6 +18,9 @@ hgca — Hybrid GPU-CPU Attention serving engine (paper reproduction)
 
 USAGE:
   hgca serve    [--addr 127.0.0.1:8471] [--model tiny] [--policy hgca] [--beta 1.0]
+                [--batch 4] [--prefill-budget TOKENS]   # prompt tokens absorbed per tick
+                # POST /v1/generate accepts "stream": true for chunked-transfer
+                # token streaming; see docs/API.md
   hgca generate --prompt TEXT [--max-new 64] [--model tiny] [--policy hgca]
   hgca ppl      [--len 512] [--model tiny] [--policy hgca] [--beta 1.0] [--window 256]
   hgca analyze  [--model tiny] [--len 256]      # attention-pattern stats (Figs. 3-5)
@@ -202,7 +205,11 @@ fn run() -> Result<()> {
             let (tx, rx) = std::sync::mpsc::channel();
             let (local, _handle) = hgca::server::serve(&addr, tx)?;
             println!("hgca serving on http://{local} (policy={})", engine.policy.name());
-            hgca::server::api::engine_loop(&mut engine, rx, args.usize("batch", 4)?)?;
+            let mut batcher = hgca::engine::Batcher::new(args.usize("batch", 4)?);
+            if let Some(budget) = args.get("prefill-budget") {
+                batcher = batcher.with_prefill_budget(budget.parse()?);
+            }
+            hgca::server::api::engine_loop_with(&mut engine, rx, batcher)?;
         }
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");

@@ -15,6 +15,13 @@ pub struct Metrics {
     pub tokens: u64,
     /// prefill tokens absorbed
     pub prefill_tokens: u64,
+    /// prefill chunk steps executed (one artifact call each); together with
+    /// the batcher's decode-step count this gives the prefill/decode
+    /// interleave ratio exported on `/v1/metrics`
+    pub prefill_chunks: u64,
+    /// streamed response chunks flushed to clients (token lines + final
+    /// summary lines over chunked transfer encoding)
+    pub stream_flushes: u64,
     /// bytes moved GPU→CPU by evictions (simulated PCIe)
     pub evict_bytes: u64,
     /// peak memory observations

@@ -2,6 +2,10 @@
 //! vendored registry). One acceptor thread + a worker pool feeding the
 //! single-threaded engine loop through channels — Python never appears on
 //! this path; the engine thread owns the PJRT runtime.
+//!
+//! Two reply shapes (see [`ServerReply`]): a complete JSON response in one
+//! shot, or a chunked-transfer stream of NDJSON lines the engine loop
+//! flushes token by token (`/v1/generate` with `"stream": true`).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -9,6 +13,10 @@ use std::sync::mpsc::{Receiver, Sender};
 
 use anyhow::{anyhow, Result};
 
+use crate::util::json::Json;
+
+/// A parsed HTTP request (method + path + body; headers beyond
+/// `Content-Length` are ignored).
 #[derive(Debug, Clone)]
 pub struct HttpRequest {
     pub method: String,
@@ -16,6 +24,7 @@ pub struct HttpRequest {
     pub body: String,
 }
 
+/// A complete (non-streamed) HTTP response body with its status code.
 #[derive(Debug, Clone)]
 pub struct HttpResponse {
     pub status: u16,
@@ -23,11 +32,37 @@ pub struct HttpResponse {
 }
 
 impl HttpResponse {
+    /// A response carrying a JSON body.
     pub fn json(status: u16, body: String) -> HttpResponse {
         HttpResponse { status, body }
     }
 }
 
+/// `{"error": "<msg>"}` with proper JSON string escaping (error messages —
+/// notably the JSON parser's own — can contain double quotes; interpolating
+/// them raw would produce malformed bodies).
+pub fn error_json(status: u16, msg: impl std::fmt::Display) -> HttpResponse {
+    let body = Json::obj(vec![("error", Json::str(msg.to_string()))]).to_string();
+    HttpResponse::json(status, body)
+}
+
+/// One reply fragment from the engine loop to an HTTP connection.
+///
+/// A request is answered either by a single [`ServerReply::Full`], or by a
+/// sequence of [`ServerReply::Chunk`]s terminated by [`ServerReply::End`]
+/// (wire format: `Transfer-Encoding: chunked`, one NDJSON line per chunk,
+/// flushed as produced so clients see tokens while the engine decodes).
+#[derive(Debug, Clone)]
+pub enum ServerReply {
+    /// The whole response at once.
+    Full(HttpResponse),
+    /// One chunk of a streamed response (the first chunk sends the headers).
+    Chunk(String),
+    /// Terminates a streamed response.
+    End,
+}
+
+/// Read one request off the socket (request line, `Content-Length`, body).
 pub fn parse_request(stream: &mut TcpStream) -> Result<HttpRequest> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
@@ -60,6 +95,7 @@ pub fn parse_request(stream: &mut TcpStream) -> Result<HttpRequest> {
     })
 }
 
+/// Write a complete (Content-Length-framed) response.
 pub fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> Result<()> {
     let reason = match resp.status {
         200 => "OK",
@@ -79,15 +115,68 @@ pub fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> Result<()>
     Ok(())
 }
 
-/// A parsed request paired with a one-shot reply channel.
+/// Send the status line + headers of a chunked-transfer stream.
+fn write_stream_head(stream: &mut TcpStream) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Send one transfer chunk and flush it (this flush is what puts a token on
+/// the wire while the engine keeps decoding).
+fn write_stream_chunk(stream: &mut TcpStream, data: &str) -> Result<()> {
+    write!(stream, "{:x}\r\n{}\r\n", data.len(), data)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Send the zero-length terminal chunk.
+fn write_stream_tail(stream: &mut TcpStream) -> Result<()> {
+    write!(stream, "0\r\n\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Forward engine replies to the socket until the request is answered: one
+/// [`ServerReply::Full`], or a `Chunk…End` stream. A dropped sender (engine
+/// gone) terminates an open stream gracefully and maps to a 500 otherwise.
+fn pump_replies(stream: &mut TcpStream, rrx: &Receiver<ServerReply>) -> Result<()> {
+    match rrx.recv() {
+        Ok(ServerReply::Full(resp)) => write_response(stream, &resp),
+        Ok(ServerReply::Chunk(first)) => {
+            write_stream_head(stream)?;
+            write_stream_chunk(stream, &first)?;
+            loop {
+                match rrx.recv() {
+                    Ok(ServerReply::Chunk(c)) => write_stream_chunk(stream, &c)?,
+                    // End, a stray Full, or a dropped sender all close the
+                    // stream; the terminal chunk tells the client it's whole
+                    Ok(ServerReply::End) | Ok(ServerReply::Full(_)) | Err(_) => break,
+                }
+            }
+            write_stream_tail(stream)
+        }
+        Ok(ServerReply::End) | Err(_) => write_response(
+            stream,
+            &HttpResponse::json(500, r#"{"error":"engine gone"}"#.into()),
+        ),
+    }
+}
+
+/// A parsed request paired with its reply channel (single [`ServerReply::Full`]
+/// send, or a `Chunk…End` stream for streamed generation).
 pub struct Incoming {
     pub req: HttpRequest,
-    pub reply: Sender<HttpResponse>,
+    pub reply: Sender<ServerReply>,
 }
 
 /// Accept loop: parses each connection and forwards it to the engine
-/// thread; replies synchronously when the engine answers. Returns the
-/// bound local address (port 0 supported for tests).
+/// thread; replies when the engine answers (streamed replies are flushed
+/// chunk by chunk as they arrive). Returns the bound local address (port 0
+/// supported for tests).
 pub fn serve(addr: &str, tx: Sender<Incoming>) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
@@ -96,22 +185,26 @@ pub fn serve(addr: &str, tx: Sender<Incoming>) -> Result<(std::net::SocketAddr, 
             let Ok(mut stream) = stream else { continue };
             let tx = tx.clone();
             std::thread::spawn(move || {
-                let resp = match parse_request(&mut stream) {
+                match parse_request(&mut stream) {
                     Ok(req) => {
-                        let (rtx, rrx): (Sender<HttpResponse>, Receiver<HttpResponse>) =
+                        let (rtx, rrx): (Sender<ServerReply>, Receiver<ServerReply>) =
                             std::sync::mpsc::channel();
                         if tx.send(Incoming { req, reply: rtx }).is_ok() {
-                            rrx.recv().unwrap_or(HttpResponse::json(
-                                500,
-                                r#"{"error":"engine gone"}"#.into(),
-                            ))
+                            let _ = pump_replies(&mut stream, &rrx);
                         } else {
-                            HttpResponse::json(500, r#"{"error":"server shutting down"}"#.into())
+                            let _ = write_response(
+                                &mut stream,
+                                &HttpResponse::json(
+                                    500,
+                                    r#"{"error":"server shutting down"}"#.into(),
+                                ),
+                            );
                         }
                     }
-                    Err(e) => HttpResponse::json(400, format!(r#"{{"error":"{e}"}}"#)),
-                };
-                let _ = write_response(&mut stream, &resp);
+                    Err(e) => {
+                        let _ = write_response(&mut stream, &error_json(400, e));
+                    }
+                }
             });
         }
     });
@@ -134,7 +227,7 @@ mod tests {
                     inc.req.path,
                     if inc.req.body.is_empty() { "null".into() } else { inc.req.body.clone() }
                 );
-                let _ = inc.reply.send(HttpResponse::json(200, body));
+                let _ = inc.reply.send(ServerReply::Full(HttpResponse::json(200, body)));
             }
         });
         let mut s = TcpStream::connect(addr).unwrap();
@@ -159,5 +252,47 @@ mod tests {
         let mut out = String::new();
         s.read_to_string(&mut out).unwrap();
         assert!(out.starts_with("HTTP/1.1 400"));
+    }
+
+    #[test]
+    fn streamed_reply_uses_chunked_transfer() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (addr, _h) = serve("127.0.0.1:0", tx).unwrap();
+        // engine that streams two lines then ends
+        std::thread::spawn(move || {
+            for inc in rx {
+                let _ = inc.reply.send(ServerReply::Chunk("{\"token\":\"a\"}\n".into()));
+                let _ = inc.reply.send(ServerReply::Chunk("{\"done\":true}\n".into()));
+                let _ = inc.reply.send(ServerReply::End);
+            }
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /stream HTTP/1.1\r\nContent-Length: 0\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+        assert!(out.contains("Transfer-Encoding: chunked"));
+        assert!(out.contains("{\"token\":\"a\"}"));
+        assert!(out.contains("{\"done\":true}"));
+        assert!(out.ends_with("0\r\n\r\n"), "missing terminal chunk: {out:?}");
+    }
+
+    #[test]
+    fn dropped_engine_closes_stream_with_terminal_chunk() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (addr, _h) = serve("127.0.0.1:0", tx).unwrap();
+        std::thread::spawn(move || {
+            for inc in rx {
+                let _ = inc.reply.send(ServerReply::Chunk("{\"token\":\"x\"}\n".into()));
+                // sender dropped without End — client must still see a
+                // complete chunked framing
+            }
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET /stream HTTP/1.1\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.contains("{\"token\":\"x\"}"));
+        assert!(out.ends_with("0\r\n\r\n"));
     }
 }

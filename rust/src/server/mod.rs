@@ -1,6 +1,11 @@
 //! Serving front-end: std-net HTTP server + JSON API + engine service loop.
+//!
+//! [`http`] owns the sockets (accept loop, request parsing, full and
+//! chunked-transfer responses); [`api`] owns the semantics (endpoint
+//! routing, the continuous-batching engine loop, response/stream routing
+//! back to waiting connections). See docs/API.md for the wire contract.
 
 pub mod api;
 pub mod http;
 
-pub use http::{serve, HttpRequest, HttpResponse, Incoming};
+pub use http::{serve, HttpRequest, HttpResponse, Incoming, ServerReply};

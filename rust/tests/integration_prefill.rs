@@ -1,0 +1,244 @@
+//! Conformance suite for chunked prefill + streaming generation:
+//!
+//! * a long-prompt admission mid-decode produces bitwise-identical tokens
+//!   to isolated execution, and the decode-in-flight sequence advances at
+//!   least once between consecutive prefill chunks (no head-of-line
+//!   blocking);
+//! * the per-tick prefill token budget is configurable and only changes
+//!   scheduling, never tokens;
+//! * `/v1/generate` with `"stream": true` emits a chunked-transfer NDJSON
+//!   stream whose token sequence is byte-identical to the non-streamed
+//!   response, and the stream counters surface on `/v1/metrics`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::batcher::{Batcher, Request};
+use hgca::engine::{Engine, Policy};
+use hgca::runtime::PjrtRuntime;
+use hgca::util::json::Json;
+
+fn runtime() -> Rc<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(PjrtRuntime::new(&dir).expect("runtime"))
+}
+
+/// 300 ASCII bytes — five 64-token prefill chunks, and long enough to spill
+/// past the default 256-entry GPU window into the CPU store.
+fn long_prompt() -> String {
+    let mut s = String::new();
+    let mut i = 0;
+    while s.len() < 300 {
+        s.push_str(&format!("Sector {i} of the survey covered the river basin. "));
+        i += 1;
+    }
+    s.truncate(300);
+    s
+}
+
+/// Ground truth: a fresh engine generates the prompt alone (monolithic
+/// prefill via Engine::generate).
+fn isolated(prompt: &str, max_new: usize) -> Vec<u8> {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut seq = engine.new_sequence(0, prompt.as_bytes());
+    engine.generate(&mut seq, max_new).unwrap()
+}
+
+fn http_raw(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let out = http_raw(addr, method, path, body);
+    let status: u16 = out.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = out.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+/// Reassemble the payload of a chunked-transfer response body.
+fn decode_chunked(raw: &str) -> String {
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let mut out = String::new();
+    let mut rest = body;
+    loop {
+        let Some((len_line, after)) = rest.split_once("\r\n") else {
+            break;
+        };
+        let len = usize::from_str_radix(len_line.trim(), 16).unwrap_or(0);
+        if len == 0 || after.len() < len {
+            break;
+        }
+        out.push_str(&after[..len]);
+        rest = after.get(len + 2..).unwrap_or("");
+    }
+    out
+}
+
+#[test]
+fn long_prompt_admission_interleaves_with_decode_and_is_conformant() {
+    let short = "The railway company surveyed ";
+    let long = long_prompt();
+    let want_short = isolated(short, 24);
+    let want_long = isolated(&long, 8);
+
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    // batch=4 matches a compiled artifact batch (the synthetic grid is {1, 4})
+    let mut batcher = Batcher::new(4);
+    batcher.submit(Request {
+        id: 1,
+        prompt: short.as_bytes().to_vec(),
+        max_new_tokens: 24,
+    });
+    batcher.tick(&mut engine).unwrap();
+    batcher.tick(&mut engine).unwrap();
+    // a five-chunk prompt joins while request 1 is mid-decode
+    batcher.submit(Request {
+        id: 2,
+        prompt: long.as_bytes().to_vec(),
+        max_new_tokens: 8,
+    });
+    let mut done = Vec::new();
+    let mut prev = batcher.stats();
+    let mut chunked_ticks = 0u64;
+    while batcher.pending() > 0 {
+        done.extend(batcher.tick(&mut engine).unwrap());
+        let s = batcher.stats();
+        let chunks = s.prefill_chunks - prev.prefill_chunks;
+        if chunks > 0 {
+            chunked_ticks += 1;
+            // the head-of-line invariant: a decode step ran in the same
+            // tick, i.e. the in-flight sequence advanced between any two
+            // consecutive prefill chunks of the long prompt
+            assert!(
+                s.decode_steps > prev.decode_steps,
+                "prefill chunk scheduled without an interleaved decode step (tick {})",
+                s.ticks
+            );
+            assert_eq!(chunks, 1, "default budget must schedule one chunk per tick");
+        }
+        prev = s;
+    }
+    // the long prompt alone needs ceil(300/64) = 5 chunk ticks
+    assert!(
+        chunked_ticks >= 5,
+        "expected >= 5 chunked-prefill ticks, got {chunked_ticks}"
+    );
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2);
+    assert_eq!(
+        done[0].text, want_short,
+        "decode-in-flight sequence perturbed by the chunked admission"
+    );
+    assert_eq!(
+        done[1].text, want_long,
+        "chunked prefill diverged from isolated execution"
+    );
+}
+
+#[test]
+fn prefill_budget_packs_multiple_chunks_per_tick() {
+    let long = long_prompt();
+    let want = isolated(&long, 6);
+
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut batcher = Batcher::new(4).with_prefill_budget(10_000);
+    batcher.submit(Request {
+        id: 7,
+        prompt: long.as_bytes().to_vec(),
+        max_new_tokens: 6,
+    });
+    let done = batcher.run_to_completion(&mut engine).unwrap();
+    let s = batcher.stats();
+    assert_eq!(done.len(), 1);
+    assert_eq!(
+        done[0].text, want,
+        "budget sizing changed tokens (must only change scheduling)"
+    );
+    assert_eq!(s.prefill_chunks, 5, "300 bytes = five 64-token chunks");
+    // a large budget absorbs the whole prompt in the admission tick:
+    // 6 tokens = 1 from prefill logits + 5 decode steps
+    assert_eq!(s.decode_steps, 5);
+    assert_eq!(s.ticks, 5);
+}
+
+#[test]
+fn streamed_output_matches_non_streamed() {
+    let prompt = "The expedition mapped the region around ";
+    let expected = isolated(prompt, 12);
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (addr, _h) = hgca::server::serve("127.0.0.1:0", tx).unwrap();
+    let engine_thread = std::thread::spawn(move || {
+        let rt = runtime();
+        let mr = rt.load_model("tiny").unwrap();
+        let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        let _ = hgca::server::api::engine_loop(&mut engine, rx, 4);
+    });
+
+    // non-streamed reference through the same server
+    let body = format!(r#"{{"prompt": "{prompt}", "max_new_tokens": 12}}"#);
+    let (st, resp) = http(addr, "POST", "/v1/generate", &body);
+    assert_eq!(st, 200, "body: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    let plain_text = j.req_str("text").unwrap().to_string();
+    assert_eq!(j.req_usize("completion_tokens").unwrap(), 12);
+
+    // streamed: chunked transfer, one NDJSON line per token + summary
+    let body = format!(r#"{{"prompt": "{prompt}", "max_new_tokens": 12, "stream": true}}"#);
+    let raw = http_raw(addr, "POST", "/v1/generate", &body);
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    assert!(raw.contains("Transfer-Encoding: chunked"), "{raw}");
+    let payload = decode_chunked(&raw);
+    let lines: Vec<&str> = payload.lines().collect();
+    assert_eq!(lines.len(), 13, "12 token lines + final summary: {payload:?}");
+    let mut bytes = Vec::new();
+    for (i, line) in lines[..12].iter().enumerate() {
+        let t = Json::parse(line).unwrap();
+        assert_eq!(t.req_usize("index").unwrap(), i, "stream order");
+        bytes.push(t.req_usize("byte").unwrap() as u8);
+        assert!(t.get("done").is_none());
+    }
+    let fin = Json::parse(lines[12]).unwrap();
+    assert_eq!(fin.get("done").and_then(|d| d.as_bool()), Some(true));
+    assert_eq!(fin.req_usize("completion_tokens").unwrap(), 12);
+    assert_eq!(fin.req_usize("prompt_tokens").unwrap(), prompt.len());
+
+    // token identity: streamed bytes == isolated generation == the
+    // non-streamed text for the same request
+    assert_eq!(bytes, expected, "streamed tokens diverge from generation");
+    assert_eq!(fin.req_str("text").unwrap(), plain_text);
+    assert_eq!(String::from_utf8_lossy(&bytes).to_string(), plain_text);
+
+    // stream + prefill counters surface on /v1/metrics
+    let (st, m) = http(addr, "GET", "/v1/metrics", "");
+    assert_eq!(st, 200);
+    let j = Json::parse(&m).unwrap();
+    assert!(
+        j.req_f64("stream_flushes").unwrap() >= 13.0,
+        "12 token flushes + 1 summary flush"
+    );
+    assert!(j.req_f64("prefill_chunks").unwrap() >= 2.0);
+    assert!(j.req_f64("batch_prefill_chunks").unwrap() >= 2.0);
+    assert!(j.req_f64("batch_decode_steps").unwrap() >= 11.0);
+    assert!(j.req_f64("prefill_decode_interleave").unwrap() > 0.0);
+
+    drop(engine_thread);
+}
