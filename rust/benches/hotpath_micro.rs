@@ -2,17 +2,24 @@
 //! the §Perf pass optimizes — CPU sparse attention, LSE merge, MAW update,
 //! window staging, PJRT call overhead. Baseline + after numbers live in
 //! EXPERIMENTS.md §Perf.
+//!
+//! With `HGCA_BENCH_JSON=path` the pool-vs-spawn cases are also written as
+//! a JSON document (`BENCH_*.json`) for the CI bench-regression gate
+//! (`tools/bench_gate.rs`): per case, the pool-path p50/throughput, the
+//! spawn baseline, and their speedup ratio.
 
 use std::path::Path;
 use std::rc::Rc;
 
 use hgca::attention::{merge_states, sparse_attention, sparse_attention_spawn, HeadJob};
 use hgca::bench::bench;
+use hgca::util::json::Json;
 use hgca::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(0);
     let dh = 32;
+    let mut gate_cases: Vec<Json> = Vec::new();
 
     // ---- persistent pool vs per-call thread spawn ----
     // the decode hot path: small job counts (batch×heads ≤ 64), every step
@@ -45,6 +52,15 @@ fn main() {
             s_spawn.p50 * 1e6,
             s_spawn.p50 / s_pool.p50
         );
+        gate_cases.push(Json::obj(vec![
+            ("jobs", Json::num(jobs_n as f64)),
+            ("n", Json::num(n as f64)),
+            ("threads", Json::num(threads as f64)),
+            ("pool_p50_us", Json::num(s_pool.p50 * 1e6)),
+            ("spawn_p50_us", Json::num(s_spawn.p50 * 1e6)),
+            ("pool_calls_per_sec", Json::num(1.0 / s_pool.p50)),
+            ("speedup", Json::num(s_spawn.p50 / s_pool.p50)),
+        ]));
         // bitwise stability: repeated pool runs at different parallelism
         // caps must reproduce the spawn path exactly
         let reference = sparse_attention_spawn(&jobs, &q, 1, dh, 1, false);
@@ -55,6 +71,20 @@ fn main() {
         }
     }
     println!();
+
+    // ---- CI gate dump (BENCH_*.json; see tools/bench_gate.rs) ----
+    if let Ok(path) = std::env::var("HGCA_BENCH_JSON") {
+        let doc = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("bench", Json::str("hotpath_micro/pool_vs_spawn")),
+            ("cases", Json::arr(gate_cases)),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("write HGCA_BENCH_JSON");
+        println!("wrote bench gate json: {path}");
+        // gate mode runs only the gated cases — the remaining sections are
+        // exploratory and nothing in CI consumes their numbers
+        return;
+    }
 
     // ---- CPU sparse attention across job counts/sizes ----
     for (jobs_n, n) in [(4usize, 512usize), (16, 512), (16, 4096), (64, 1024)] {

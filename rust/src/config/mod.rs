@@ -4,4 +4,4 @@ pub mod model;
 pub mod runtime;
 
 pub use model::ModelConfig;
-pub use runtime::HgcaConfig;
+pub use runtime::{HgcaConfig, ServingConfig};

@@ -81,9 +81,60 @@ impl HgcaConfig {
     }
 }
 
+/// Serving-layer lifecycle knobs (`hgca serve` flags): defaults applied to
+/// every admitted request plus the admission-control watermark. Engine
+/// tunables stay in [`HgcaConfig`]; these only shape scheduling.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServingConfig {
+    /// Default deadline applied to requests that do not carry their own
+    /// `deadline_ms` (`--deadline-default`). `None` = no default deadline.
+    pub deadline_default_ms: Option<u64>,
+    /// Load-shedding watermark (`--shed-watermark`): when batch occupancy
+    /// + queue depth would exceed this, new admissions are rejected with
+    /// an immediate 429-style JSON error instead of queuing unboundedly.
+    /// `None` = never shed.
+    pub shed_watermark: Option<usize>,
+    /// Max ticks a request may wait in the admission queue
+    /// (`--max-queue-ticks`) before it is shed. `None` = wait forever.
+    pub max_queue_ticks: Option<u64>,
+}
+
+impl ServingConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let Some(w) = self.shed_watermark {
+            anyhow::ensure!(w > 0, "shed watermark must be positive");
+        }
+        if let Some(ms) = self.deadline_default_ms {
+            anyhow::ensure!(ms > 0, "default deadline must be positive");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serving_config_validation() {
+        ServingConfig::default().validate().unwrap();
+        let ok = ServingConfig {
+            deadline_default_ms: Some(500),
+            shed_watermark: Some(8),
+            max_queue_ticks: Some(64),
+        };
+        ok.validate().unwrap();
+        let bad = ServingConfig {
+            shed_watermark: Some(0),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ServingConfig {
+            deadline_default_ms: Some(0),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
 
     #[test]
     fn default_window() {

@@ -5,11 +5,13 @@
 //! sparse attention; simulated time is charged per the active policy on
 //! the paper's testbed model (DESIGN.md §1 — two timing domains).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::attention::{merge_states, HeadJob, EMPTY_LSE};
 use crate::config::{HgcaConfig, ModelConfig};
-use crate::kv::KvManager;
+use crate::kv::{GpuBlockPool, KvManager};
 use crate::metrics::{Metrics, Timer};
 use crate::model::Sampler;
 use crate::runtime::{Executor, ModelRuntime};
@@ -67,6 +69,12 @@ pub struct Engine<'m> {
     pub metrics: Metrics,
     /// Sampler randomness (unused by greedy).
     pub rng: Rng,
+    /// GPU KV block accounting pool: every sequence created through
+    /// [`Engine::new_sequence`] leases its window blocks here and returns
+    /// them when it drops (normal retire or lifecycle cancellation), so
+    /// reclamation is observable (`kv_blocks_in_use` / `kv_blocks_reclaimed`
+    /// on `/v1/metrics`).
+    pub kv_pool: Arc<GpuBlockPool>,
     /// scratch: batch window staging buffers, reused across steps
     k_win: Vec<f32>,
     v_win: Vec<f32>,
@@ -84,6 +92,7 @@ impl<'m> Engine<'m> {
             sampler: Sampler::Greedy,
             metrics: Metrics::new(),
             rng: Rng::new(0x48474341),
+            kv_pool: Arc::new(GpuBlockPool::new()),
             k_win: Vec::new(),
             v_win: Vec::new(),
         }
@@ -110,9 +119,12 @@ impl<'m> Engine<'m> {
             })
     }
 
-    /// A fresh [`Sequence`] sized for this engine's model + config.
+    /// A fresh [`Sequence`] sized for this engine's model + config, with
+    /// its GPU window blocks leased from [`Engine::kv_pool`].
     pub fn new_sequence(&self, id: u64, prompt: &[u8]) -> Sequence {
-        Sequence::new(id, prompt, &self.mr.cfg, &self.cfg)
+        let mut seq = Sequence::new(id, prompt, &self.mr.cfg, &self.cfg);
+        seq.kv.lease_from(&self.kv_pool);
+        seq
     }
 
     // ------------------------------------------------------------------

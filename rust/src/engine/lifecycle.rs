@@ -1,0 +1,211 @@
+//! Request lifecycle: cancellation tokens, deadlines, and finish reasons.
+//!
+//! Every admitted request carries a [`RequestHandle`]; the batcher checks
+//! it at the top of each tick ([`crate::engine::Batcher::tick`]) and
+//! retires tripped/expired rows mid-batch — their GPU KV block lease
+//! returns to the [`crate::kv::GpuBlockPool`], their CPU store drops with
+//! the sequence, and pending prefill chunks are descheduled. Request
+//! *exit* is a first-class scheduler event, exactly like admission
+//! (Orca-style iteration-level scheduling).
+//!
+//! The token is the only piece of engine state that other threads touch:
+//! the HTTP layer trips it when a stream write fails (client disconnect,
+//! see `server/http.rs`), `/v1/cancel` trips it by request id, and tests
+//! trip it directly. A token trips exactly once — the first reason wins.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Why a request was asked to stop before reaching its token budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CancelReason {
+    /// Explicit cancellation (`/v1/cancel` or an in-process token trip).
+    Cancelled = 1,
+    /// The request's deadline passed.
+    Deadline = 2,
+    /// The client stopped reading its response stream.
+    Disconnected = 3,
+    /// The request exceeded its max-queue-wait admission bound.
+    QueueTimeout = 4,
+}
+
+/// A shared one-shot cancellation flag. Cheap to clone (one `Arc`);
+/// `Send + Sync` so connection threads can trip it while the engine
+/// thread polls it between ticks.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicU8>);
+
+const LIVE: u8 = 0;
+
+impl CancelToken {
+    /// A live (untripped) token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Trip the token with `reason`. Only the first trip takes effect;
+    /// returns whether this call was the one that tripped it.
+    pub fn trip(&self, reason: CancelReason) -> bool {
+        self.0
+            .compare_exchange(LIVE, reason as u8, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// The reason the token was tripped with, if any.
+    pub fn tripped(&self) -> Option<CancelReason> {
+        match self.0.load(Ordering::Acquire) {
+            LIVE => None,
+            1 => Some(CancelReason::Cancelled),
+            2 => Some(CancelReason::Deadline),
+            3 => Some(CancelReason::Disconnected),
+            _ => Some(CancelReason::QueueTimeout),
+        }
+    }
+}
+
+/// Lifecycle state attached to a request at submission. The default
+/// handle never expires and can only exit early via its token.
+#[derive(Debug, Clone, Default)]
+pub struct RequestHandle {
+    /// One-shot cancellation flag owned by this request (what
+    /// `/v1/cancel` trips).
+    pub token: CancelToken,
+    /// A second, *shared* token this request also observes — used to link
+    /// every member of a `/v1/batch` group to its connection, so a
+    /// dropped client cancels the whole group while `/v1/cancel` still
+    /// targets one member.
+    pub link: Option<CancelToken>,
+    /// Absolute wall-clock deadline; the row retires with partial tokens
+    /// when it passes.
+    pub deadline: Option<Instant>,
+    /// Max ticks the request may wait in the admission queue before it is
+    /// shed (never admitted, never allocates KV).
+    pub max_queue_ticks: Option<u64>,
+}
+
+impl RequestHandle {
+    /// Whether the deadline has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// The reason this request was asked to stop: its own token first,
+    /// then the linked (connection) token.
+    pub fn tripped(&self) -> Option<CancelReason> {
+        self.token
+            .tripped()
+            .or_else(|| self.link.as_ref().and_then(|t| t.tripped()))
+    }
+}
+
+/// How a request ended. Serialized as the `finish_reason` field of every
+/// completion (full responses, stream summary lines, batch items).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new_tokens` budget (the only normal exit).
+    Length,
+    /// Explicitly cancelled; `text` holds the tokens generated so far.
+    Cancelled,
+    /// Deadline expired; `text` holds the tokens generated so far.
+    Deadline,
+    /// Client disconnected mid-stream; the row was retired.
+    Disconnected,
+    /// Shed from the admission queue (max-queue-wait exceeded) — zero
+    /// tokens, no KV was ever allocated.
+    QueueTimeout,
+}
+
+impl FinishReason {
+    /// Wire representation (docs/API.md `finish_reason` values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Deadline => "deadline",
+            FinishReason::Disconnected => "disconnected",
+            FinishReason::QueueTimeout => "shed",
+        }
+    }
+
+    /// The finish reason a tripped token maps to.
+    pub fn from_cancel(r: CancelReason) -> FinishReason {
+        match r {
+            CancelReason::Cancelled => FinishReason::Cancelled,
+            CancelReason::Deadline => FinishReason::Deadline,
+            CancelReason::Disconnected => FinishReason::Disconnected,
+            CancelReason::QueueTimeout => FinishReason::QueueTimeout,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn token_trips_once_first_reason_wins() {
+        let t = CancelToken::new();
+        assert_eq!(t.tripped(), None);
+        assert!(t.trip(CancelReason::Deadline));
+        assert!(!t.trip(CancelReason::Cancelled));
+        assert_eq!(t.tripped(), Some(CancelReason::Deadline));
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        t.trip(CancelReason::Disconnected);
+        assert_eq!(c.tripped(), Some(CancelReason::Disconnected));
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let now = Instant::now();
+        let h = RequestHandle {
+            deadline: Some(now + Duration::from_millis(5)),
+            ..Default::default()
+        };
+        assert!(!h.expired(now));
+        assert!(h.expired(now + Duration::from_millis(6)));
+        assert!(!RequestHandle::default().expired(now));
+    }
+
+    #[test]
+    fn linked_token_trips_handle_but_not_sibling_tokens() {
+        let conn = CancelToken::new();
+        let a = RequestHandle {
+            link: Some(conn.clone()),
+            ..Default::default()
+        };
+        let b = RequestHandle {
+            link: Some(conn.clone()),
+            ..Default::default()
+        };
+        // cancelling member a does not touch member b
+        a.token.trip(CancelReason::Cancelled);
+        assert_eq!(a.tripped(), Some(CancelReason::Cancelled));
+        assert_eq!(b.tripped(), None);
+        // the shared connection token reaches every member
+        conn.trip(CancelReason::Disconnected);
+        assert_eq!(b.tripped(), Some(CancelReason::Disconnected));
+        // a's own token still wins for a
+        assert_eq!(a.tripped(), Some(CancelReason::Cancelled));
+    }
+
+    #[test]
+    fn wire_names() {
+        assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(
+            FinishReason::from_cancel(CancelReason::QueueTimeout).as_str(),
+            "shed"
+        );
+        assert_eq!(
+            FinishReason::from_cancel(CancelReason::Disconnected).as_str(),
+            "disconnected"
+        );
+    }
+}

@@ -9,11 +9,15 @@
 //!   per-token events for streaming.
 //! * [`strategy`] selects which CPU entries are attended and how the step
 //!   is charged on the simulated testbed (HGCA + paper baselines).
+//! * [`lifecycle`] makes request *exit* a first-class scheduler event:
+//!   cancellation tokens, deadlines, queue-wait bounds, finish reasons.
 
 pub mod batcher;
 pub mod engine;
+pub mod lifecycle;
 pub mod strategy;
 
 pub use batcher::{Batcher, BatcherStats, Completion, Request, TokenEvent};
 pub use engine::{Engine, Sequence};
+pub use lifecycle::{CancelReason, CancelToken, FinishReason, RequestHandle};
 pub use strategy::Policy;

@@ -10,7 +10,93 @@
 //! PCIe DMA; here the buffer is the exact tensor the PJRT artifact receives
 //! as `k_win`/`v_win`, and the simulator charges transfer time.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
 use super::block::KvBlock;
+
+/// Process-wide accounting pool for GPU KV blocks.
+///
+/// Every [`crate::engine::Sequence`] leases its per-layer window blocks
+/// (`n_layers × blk_num`) from its engine's pool at creation and returns
+/// them when it drops — including early retirement (cancel / deadline /
+/// disconnect), which is what makes reclamation *observable*: the
+/// free-count is restored and `reclaimed_blocks` advances the moment a
+/// row is retired mid-batch. The pool is pure accounting (the backing
+/// buffers live in [`GpuLayerCache`]); on real hardware it would own the
+/// device allocator free list.
+#[derive(Debug, Default)]
+pub struct GpuBlockPool {
+    in_use: AtomicUsize,
+    acquired: AtomicU64,
+    reclaimed: AtomicU64,
+}
+
+impl GpuBlockPool {
+    /// An empty pool (no blocks outstanding).
+    pub fn new() -> GpuBlockPool {
+        GpuBlockPool::default()
+    }
+
+    /// Lease `blocks` blocks from the pool. The lease returns them when
+    /// dropped (RAII — retiring a sequence is the release).
+    pub fn acquire(self: &Arc<Self>, blocks: usize) -> BlockLease {
+        self.in_use.fetch_add(blocks, Ordering::AcqRel);
+        self.acquired.fetch_add(blocks as u64, Ordering::AcqRel);
+        BlockLease {
+            pool: Arc::clone(self),
+            blocks,
+        }
+    }
+
+    /// Blocks currently leased out.
+    pub fn in_use(&self) -> usize {
+        self.in_use.load(Ordering::Acquire)
+    }
+
+    /// Cumulative blocks ever leased.
+    pub fn acquired_blocks(&self) -> u64 {
+        self.acquired.load(Ordering::Acquire)
+    }
+
+    /// Cumulative blocks returned to the pool (the `kv_blocks_reclaimed`
+    /// metric).
+    pub fn reclaimed_blocks(&self) -> u64 {
+        self.reclaimed.load(Ordering::Acquire)
+    }
+}
+
+/// An RAII lease of GPU KV blocks; dropping it returns the blocks to the
+/// pool and advances the reclaim counter.
+#[derive(Debug)]
+pub struct BlockLease {
+    pool: Arc<GpuBlockPool>,
+    blocks: usize,
+}
+
+impl BlockLease {
+    /// Blocks this lease holds.
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+}
+
+impl Clone for BlockLease {
+    /// Cloning a lease acquires a fresh lease of the same size (the clone
+    /// owns its own share — keeps `KvManager: Clone` honest).
+    fn clone(&self) -> BlockLease {
+        self.pool.acquire(self.blocks)
+    }
+}
+
+impl Drop for BlockLease {
+    fn drop(&mut self) {
+        self.pool.in_use.fetch_sub(self.blocks, Ordering::AcqRel);
+        self.pool
+            .reclaimed
+            .fetch_add(self.blocks as u64, Ordering::AcqRel);
+    }
+}
 
 /// The per-(layer, sequence) GPU window: recent KV entries + MAW tracking.
 #[derive(Debug, Clone)]
@@ -169,6 +255,36 @@ impl GpuLayerCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn block_pool_accounts_acquire_and_reclaim() {
+        let pool = Arc::new(GpuBlockPool::new());
+        let a = pool.acquire(8);
+        let b = pool.acquire(4);
+        assert_eq!(pool.in_use(), 12);
+        assert_eq!(pool.acquired_blocks(), 12);
+        assert_eq!(pool.reclaimed_blocks(), 0);
+        drop(a);
+        assert_eq!(pool.in_use(), 4);
+        assert_eq!(pool.reclaimed_blocks(), 8);
+        drop(b);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.reclaimed_blocks(), 12);
+    }
+
+    #[test]
+    fn lease_clone_owns_its_share() {
+        let pool = Arc::new(GpuBlockPool::new());
+        let a = pool.acquire(3);
+        let b = a.clone();
+        assert_eq!(b.blocks(), 3);
+        assert_eq!(pool.in_use(), 6);
+        drop(a);
+        assert_eq!(pool.in_use(), 3);
+        drop(b);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.reclaimed_blocks(), 6);
+    }
 
     fn cache() -> GpuLayerCache {
         GpuLayerCache::new(2, 4, 2, 3, 0.5) // H=2, dh=4, W=6

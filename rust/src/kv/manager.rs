@@ -1,10 +1,12 @@
 //! Per-sequence KV manager: glues the GPU window and CPU store per layer
 //! and implements the full Algorithm 1 flow for decode and append steps.
 
+use std::sync::Arc;
+
 use crate::config::{HgcaConfig, ModelConfig};
 
 use super::cpu_store::CpuLayerStore;
-use super::gpu_pool::GpuLayerCache;
+use super::gpu_pool::{BlockLease, GpuBlockPool, GpuLayerCache};
 
 /// One layer's split KV state: the GPU window + the CPU store.
 #[derive(Debug, Clone)]
@@ -26,6 +28,10 @@ pub struct KvManager {
     pub seq_len: usize,
     /// cumulative bytes moved over the (simulated) PCIe link by evictions
     pub evict_bytes: u64,
+    /// GPU block lease held against the engine's [`GpuBlockPool`];
+    /// dropping the manager (sequence retirement — normal or early)
+    /// returns the blocks to the pool
+    lease: Option<BlockLease>,
 }
 
 impl KvManager {
@@ -48,7 +54,21 @@ impl KvManager {
             cfg: cfg.clone(),
             seq_len: 0,
             evict_bytes: 0,
+            lease: None,
         }
+    }
+
+    /// Lease this manager's GPU window blocks (`n_layers × blk_num`) from
+    /// `pool`. The lease is released when the manager drops, so retiring a
+    /// sequence — finished, cancelled, expired, or disconnected — restores
+    /// the pool's free count (observable via [`GpuBlockPool::in_use`]).
+    pub fn lease_from(&mut self, pool: &Arc<GpuBlockPool>) {
+        self.lease = Some(pool.acquire(self.layers.len() * self.cfg.blk_num));
+    }
+
+    /// Blocks currently leased from the engine's pool (0 when unleased).
+    pub fn leased_blocks(&self) -> usize {
+        self.lease.as_ref().map_or(0, BlockLease::blocks)
     }
 
     /// Make room in layer `li` for `n_new` entries, offloading evicted
@@ -194,5 +214,18 @@ mod tests {
         let m = mk();
         assert!(m.gpu_bytes() > 0);
         assert_eq!(m.cpu_bytes(), 0);
+    }
+
+    #[test]
+    fn lease_returns_blocks_on_drop() {
+        let pool = Arc::new(crate::kv::GpuBlockPool::new());
+        let mut m = mk(); // 2 layers × blk_num 2 → 4 blocks
+        assert_eq!(m.leased_blocks(), 0);
+        m.lease_from(&pool);
+        assert_eq!(m.leased_blocks(), 4);
+        assert_eq!(pool.in_use(), 4);
+        drop(m);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.reclaimed_blocks(), 4);
     }
 }

@@ -15,5 +15,5 @@ pub mod manager;
 
 pub use block::KvBlock;
 pub use cpu_store::CpuLayerStore;
-pub use gpu_pool::GpuLayerCache;
+pub use gpu_pool::{BlockLease, GpuBlockPool, GpuLayerCache};
 pub use manager::KvManager;

@@ -19,8 +19,12 @@ hgca — Hybrid GPU-CPU Attention serving engine (paper reproduction)
 USAGE:
   hgca serve    [--addr 127.0.0.1:8471] [--model tiny] [--policy hgca] [--beta 1.0]
                 [--batch 4] [--prefill-budget TOKENS]   # prompt tokens absorbed per tick
+                [--deadline-default MS]   # deadline applied when a request has none
+                [--shed-watermark N]      # reject admissions (429) past N pending
+                [--max-queue-ticks N]     # shed queued requests waiting > N ticks
                 # POST /v1/generate accepts "stream": true for chunked-transfer
-                # token streaming; see docs/API.md
+                # token streaming, "deadline_ms" per request, and POST
+                # /v1/cancel {"id": N} cancels mid-flight; see docs/API.md
   hgca generate --prompt TEXT [--max-new 64] [--model tiny] [--policy hgca]
   hgca ppl      [--len 512] [--model tiny] [--policy hgca] [--beta 1.0] [--window 256]
   hgca analyze  [--model tiny] [--len 256]      # attention-pattern stats (Figs. 3-5)
@@ -209,7 +213,22 @@ fn run() -> Result<()> {
             if let Some(budget) = args.get("prefill-budget") {
                 batcher = batcher.with_prefill_budget(budget.parse()?);
             }
-            hgca::server::api::engine_loop_with(&mut engine, rx, batcher)?;
+            let serving = hgca::config::ServingConfig {
+                deadline_default_ms: match args.get("deadline-default") {
+                    Some(ms) => Some(ms.parse()?),
+                    None => None,
+                },
+                shed_watermark: match args.get("shed-watermark") {
+                    Some(n) => Some(n.parse()?),
+                    None => None,
+                },
+                max_queue_ticks: match args.get("max-queue-ticks") {
+                    Some(n) => Some(n.parse()?),
+                    None => None,
+                },
+            };
+            serving.validate()?;
+            hgca::server::api::engine_loop_with(&mut engine, rx, batcher, serving)?;
         }
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");

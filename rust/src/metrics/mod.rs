@@ -33,6 +33,17 @@ pub struct Metrics {
     pub cpu_attn_jobs: u64,
     /// packed tasks those jobs became (≈ jobs / adjacent-head merge factor)
     pub cpu_attn_tasks: u64,
+    /// requests retired by explicit cancellation (`/v1/cancel` or a token
+    /// trip)
+    pub requests_cancelled: u64,
+    /// requests retired because their deadline passed (partial tokens are
+    /// still delivered)
+    pub requests_deadline_expired: u64,
+    /// requests retired because the client stopped reading its stream
+    pub requests_disconnected: u64,
+    /// requests rejected by admission control (watermark 429s) or shed
+    /// from the queue after exceeding their max-queue-wait bound
+    pub requests_shed: u64,
 }
 
 impl Metrics {

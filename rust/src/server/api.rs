@@ -1,10 +1,20 @@
 //! JSON API: request routing + the engine service loop.
 //!
 //! Endpoints (full schemas in docs/API.md):
-//!   POST /v1/generate  {"prompt": "...", "max_new_tokens": 32, "stream": false}
-//!   POST /v1/batch     {"prompts": [...], "max_new_tokens": 16}
+//!   POST /v1/generate  {"prompt": "...", "max_new_tokens": 32, "stream": false,
+//!                       "deadline_ms": 2000}
+//!   POST /v1/batch     {"prompts": [...], "max_new_tokens": 16, "deadline_ms": 2000}
+//!   POST /v1/cancel    {"id": N} → trips the request's cancellation token
 //!   GET  /v1/metrics   → serving metrics snapshot (engine + pool + batcher)
 //!   GET  /health
+//!
+//! Every admitted request carries a lifecycle handle (cancellation token +
+//! optional deadline + max-queue-wait bound); the batcher retires tripped
+//! rows mid-batch and their completion arrives with a `finish_reason`
+//! (`length`/`cancelled`/`deadline`/`disconnected`/`shed`). When batch
+//! occupancy + queue depth exceed the configured watermark
+//! ([`crate::config::ServingConfig::shed_watermark`]), new admissions are
+//! rejected immediately with a 429-style JSON error (load shedding).
 //!
 //! The engine loop is a continuous-batching scheduler: every POST is
 //! admitted into the running batch (no serialization of concurrent
@@ -20,11 +30,14 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::attention::AttnPool;
+use crate::config::ServingConfig;
 use crate::engine::batcher::{Batcher, Completion, Request};
+use crate::engine::lifecycle::{CancelReason, CancelToken, FinishReason, RequestHandle};
 use crate::engine::Engine;
 use crate::metrics::Metrics;
 use crate::util::json::Json;
@@ -33,20 +46,25 @@ use super::http::{error_json, HttpResponse, Incoming, ServerReply};
 
 /// One-shot synchronous generate (kept for single-request callers and the
 /// serve_bench smoke phase; the serving loop uses the batcher instead).
-/// Always replies in full — streaming requires the engine loop.
+/// Always replies in full, and lifecycle fields are engine-loop features:
+/// `stream` and `deadline_ms` are validated but **ignored** here — there
+/// is no tick boundary to check a token or deadline at. Serve real
+/// traffic through [`engine_loop`].
 pub fn handle_generate(engine: &mut Engine<'_>, body: &str, next_id: u64) -> HttpResponse {
-    let (prompt, max_new, _stream) = match parse_generate(body) {
+    let (prompt, max_new, _stream, _deadline) = match parse_generate(body) {
         Ok(p) => p,
         Err(resp) => return *resp,
     };
     let mut seq = engine.new_sequence(next_id, &prompt);
     match engine.generate(&mut seq, max_new) {
-        Ok(tokens) => completion_json(next_id, &prompt, &tokens),
+        Ok(tokens) => completion_json(next_id, &prompt, &tokens, FinishReason::Length),
         Err(e) => error_json(500, e),
     }
 }
 
-fn parse_generate(body: &str) -> Result<(Vec<u8>, usize, bool), Box<HttpResponse>> {
+type GenerateParams = (Vec<u8>, usize, bool, Option<u64>);
+
+fn parse_generate(body: &str) -> Result<GenerateParams, Box<HttpResponse>> {
     let parsed = match Json::parse(body) {
         Ok(j) => j,
         Err(e) => return Err(Box::new(error_json(400, format!("bad json: {e}")))),
@@ -71,29 +89,80 @@ fn parse_generate(body: &str) -> Result<(Vec<u8>, usize, bool), Box<HttpResponse
         .get("stream")
         .and_then(|v| v.as_bool())
         .unwrap_or(false);
-    Ok((prompt, max_new, stream))
+    let deadline_ms = parse_deadline_ms(&parsed)?;
+    Ok((prompt, max_new, stream, deadline_ms))
+}
+
+/// Extract + validate the optional `deadline_ms` field (shared by
+/// `/v1/generate` and `/v1/batch` so the two endpoints cannot diverge).
+/// A present-but-invalid value (wrong type, non-finite, ≤ 0) is a 400 —
+/// silently ignoring it would run the request unbounded while the client
+/// believes a deadline is in force.
+fn parse_deadline_ms(parsed: &Json) -> Result<Option<u64>, Box<HttpResponse>> {
+    let Some(v) = parsed.get("deadline_ms") else {
+        return Ok(None);
+    };
+    if matches!(v, Json::Null) {
+        return Ok(None);
+    }
+    match v.as_f64().filter(|ms| ms.is_finite() && *ms > 0.0) {
+        // ceil: a fractional deadline in (0,1) must not truncate to an
+        // instantly-expired 0 ms
+        Some(ms) => Ok(Some(ms.ceil() as u64)),
+        None => Err(Box::new(HttpResponse::json(
+            400,
+            r#"{"error":"deadline_ms must be a positive number"}"#.into(),
+        ))),
+    }
 }
 
 /// The response fields shared by the non-streamed body and the streamed
-/// summary line (the wire contract says they match).
-fn completion_fields(id: u64, prompt: &[u8], tokens: &[u8]) -> Vec<(&'static str, Json)> {
+/// summary line (the wire contract says they match). `finish_reason` is
+/// `length` for a normal completion; lifecycle retirements deliver their
+/// partial `text` with the retiring reason.
+fn completion_fields(
+    id: u64,
+    prompt: &[u8],
+    tokens: &[u8],
+    reason: FinishReason,
+) -> Vec<(&'static str, Json)> {
     vec![
         ("id", Json::num(id as f64)),
         ("text", Json::str(String::from_utf8_lossy(tokens).to_string())),
         ("prompt_tokens", Json::num(prompt.len() as f64)),
         ("completion_tokens", Json::num(tokens.len() as f64)),
+        ("finish_reason", Json::str(reason.as_str())),
     ]
 }
 
-fn completion_json(id: u64, prompt: &[u8], tokens: &[u8]) -> HttpResponse {
-    HttpResponse::json(200, Json::obj(completion_fields(id, prompt, tokens)).to_string())
+fn completion_json(id: u64, prompt: &[u8], tokens: &[u8], reason: FinishReason) -> HttpResponse {
+    HttpResponse::json(
+        200,
+        Json::obj(completion_fields(id, prompt, tokens, reason)).to_string(),
+    )
 }
 
-/// One streamed token line: `{"index":N,"byte":B,"token":"s"}` + newline.
-/// `byte` carries the exact generated byte so clients can reconstruct the
-/// byte-identical sequence even when a byte is not valid UTF-8 on its own.
-fn token_line(index: usize, byte: u8) -> String {
+/// The 503 body for a request shed from the admission queue after
+/// exceeding its max-queue-wait bound (it never occupied a row).
+fn queue_timeout_json(id: u64) -> HttpResponse {
+    HttpResponse::json(
+        503,
+        Json::obj(vec![
+            ("error", Json::str("queue wait exceeded")),
+            ("id", Json::num(id as f64)),
+            ("finish_reason", Json::str(FinishReason::QueueTimeout.as_str())),
+        ])
+        .to_string(),
+    )
+}
+
+/// One streamed token line: `{"byte":B,"id":R,"index":N,"token":"s"}` +
+/// newline. `byte` carries the exact generated byte so clients can
+/// reconstruct the byte-identical sequence even when a byte is not valid
+/// UTF-8 on its own; `id` is the request id `/v1/cancel` accepts.
+fn token_line(id: u64, index: usize, byte: u8) -> String {
     let mut line = Json::obj(vec![
+        ("id", Json::num(id as f64)),
         ("index", Json::num(index as f64)),
         ("byte", Json::num(byte as f64)),
         (
@@ -109,7 +178,7 @@ fn token_line(index: usize, byte: u8) -> String {
 /// The final summary line of a stream: same fields as the non-streamed
 /// response, plus `"done": true`.
 fn final_line(c: &Completion, prompt: &[u8]) -> String {
-    let mut fields = completion_fields(c.id, prompt, &c.text);
+    let mut fields = completion_fields(c.id, prompt, &c.text, c.finish_reason);
     fields.push(("done", Json::Bool(true)));
     let mut line = Json::obj(fields).to_string();
     line.push('\n');
@@ -152,6 +221,14 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         ("pool_busy_secs", Json::num(pool.busy_secs)),
         ("pool_queue_depth", Json::num(pool.queue_depth as f64)),
         ("pool_queue_peak", Json::num(pool.queue_peak as f64)),
+        // request lifecycle (exit is a first-class scheduler event)
+        ("requests_cancelled", Json::num(m.requests_cancelled as f64)),
+        ("requests_deadline_expired", Json::num(m.requests_deadline_expired as f64)),
+        ("requests_disconnected", Json::num(m.requests_disconnected as f64)),
+        ("requests_shed", Json::num(m.requests_shed as f64)),
+        // GPU KV block accounting: free-count restoration on retirement
+        ("kv_blocks_in_use", Json::num(engine.kv_pool.in_use() as f64)),
+        ("kv_blocks_reclaimed", Json::num(engine.kv_pool.reclaimed_blocks() as f64)),
     ];
     if let Some(b) = batcher {
         let s = b.stats();
@@ -164,6 +241,7 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         fields.push(("batch_prefilling", Json::num(s.prefilling as f64)));
         fields.push(("batch_mean_occupancy", Json::num(s.mean_occupancy)));
         fields.push(("batch_max_queue_ticks", Json::num(s.max_queue_ticks as f64)));
+        fields.push(("batch_retired", Json::num(s.retired as f64)));
         fields.push(("batch_prefill_chunks", Json::num(s.prefill_chunks as f64)));
         fields.push(("batch_decode_steps", Json::num(s.decode_steps as f64)));
         fields.push((
@@ -184,6 +262,9 @@ enum Waiter {
         stream: bool,
         /// tokens already streamed (the NDJSON `index` counter)
         streamed: usize,
+        /// the request's cancellation token — tripped here when a stream
+        /// flush fails (the connection pump is gone)
+        token: CancelToken,
     },
     /// one member of a /v1/batch group: respond when the whole group is done
     Group { key: u64 },
@@ -192,7 +273,7 @@ enum Waiter {
 struct Group {
     reply: Sender<ServerReply>,
     remaining: usize,
-    items: Vec<(u64, Vec<u8>)>,
+    items: Vec<(u64, Vec<u8>, FinishReason)>,
 }
 
 /// The engine service loop: single thread owns the model runtime and serves
@@ -202,15 +283,17 @@ struct Group {
 /// chunks between decode ticks, and streamed requests flush each token the
 /// tick it is generated.
 pub fn engine_loop(engine: &mut Engine<'_>, rx: Receiver<Incoming>, batch: usize) -> Result<()> {
-    engine_loop_with(engine, rx, Batcher::new(batch))
+    engine_loop_with(engine, rx, Batcher::new(batch), ServingConfig::default())
 }
 
 /// [`engine_loop`] over a caller-configured [`Batcher`] (e.g. with a custom
-/// per-tick prefill token budget).
+/// per-tick prefill token budget) and [`ServingConfig`] (default deadline,
+/// load-shed watermark, max queue wait).
 pub fn engine_loop_with(
     engine: &mut Engine<'_>,
     rx: Receiver<Incoming>,
     mut batcher: Batcher,
+    serving: ServingConfig,
 ) -> Result<()> {
     let mut next_id = 0u64;
     let mut waiters: HashMap<u64, Waiter> = HashMap::new();
@@ -225,7 +308,7 @@ pub fn engine_loop_with(
             match rx.recv() {
                 Ok(inc) => admit(
                     engine, &mut batcher, &mut waiters, &mut groups, &mut next_id,
-                    &mut next_group, inc,
+                    &mut next_group, &serving, inc,
                 ),
                 Err(_) => {
                     open = false;
@@ -237,7 +320,7 @@ pub fn engine_loop_with(
             match rx.try_recv() {
                 Ok(inc) => admit(
                     engine, &mut batcher, &mut waiters, &mut groups, &mut next_id,
-                    &mut next_group, inc,
+                    &mut next_group, &serving, inc,
                 ),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -256,12 +339,21 @@ pub fn engine_loop_with(
                             reply,
                             stream: true,
                             streamed,
+                            token,
                             ..
                         }) = waiters.get_mut(&ev.id)
                         {
-                            let _ = reply.send(ServerReply::Chunk(token_line(*streamed, ev.token)));
-                            *streamed += 1;
-                            engine.metrics.stream_flushes += 1;
+                            let line = token_line(ev.id, *streamed, ev.token);
+                            if reply.send(ServerReply::Chunk(line)).is_err() {
+                                // the connection pump is gone (client hung
+                                // up): stop fusing decode work into a dead
+                                // channel — the next tick's sweep retires
+                                // this row and reclaims its KV blocks
+                                token.trip(CancelReason::Disconnected);
+                            } else {
+                                *streamed += 1;
+                                engine.metrics.stream_flushes += 1;
+                            }
                         }
                     }
                     for c in finished {
@@ -296,6 +388,61 @@ pub fn engine_loop_with(
     Ok(())
 }
 
+/// The 429 load-shedding response: emitted instead of admission when
+/// batch occupancy + queue depth would exceed the watermark. An idle
+/// server (zero pending) always admits — the watermark sheds *load*, so a
+/// single batch larger than the watermark must not be rejected forever
+/// (retry-with-backoff has to be able to succeed once the queue drains).
+fn shed_check(batcher: &Batcher, serving: &ServingConfig, incoming: usize) -> Option<HttpResponse> {
+    let w = serving.shed_watermark?;
+    let depth = batcher.pending();
+    (depth > 0 && depth + incoming > w).then(|| {
+        HttpResponse::json(
+            429,
+            Json::obj(vec![
+                ("error", Json::str("overloaded: admission watermark exceeded")),
+                ("shed", Json::Bool(true)),
+                ("pending", Json::num(depth as f64)),
+                ("watermark", Json::num(w as f64)),
+            ])
+            .to_string(),
+        )
+    })
+}
+
+/// The lifecycle handle for a `/v1/generate` admission: the connection's
+/// cancel token, the request's own deadline (or the serving default), and
+/// the configured max queue wait.
+fn request_handle(
+    cancel: &CancelToken,
+    deadline_ms: Option<u64>,
+    serving: &ServingConfig,
+) -> RequestHandle {
+    RequestHandle {
+        token: cancel.clone(),
+        link: None,
+        deadline: deadline_ms
+            .or(serving.deadline_default_ms)
+            .map(|ms| Instant::now() + Duration::from_millis(ms)),
+        max_queue_ticks: serving.max_queue_ticks,
+    }
+}
+
+/// The lifecycle handle for one `/v1/batch` member: its own token (so
+/// `/v1/cancel` targets a single member) *linked* to the connection token
+/// (so a dropped batch client still cancels every member row).
+fn member_handle(
+    conn: &CancelToken,
+    deadline_ms: Option<u64>,
+    serving: &ServingConfig,
+) -> RequestHandle {
+    RequestHandle {
+        token: CancelToken::new(),
+        link: Some(conn.clone()),
+        ..request_handle(conn, deadline_ms, serving)
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn admit(
     engine: &mut Engine<'_>,
@@ -304,6 +451,7 @@ fn admit(
     groups: &mut HashMap<u64, Group>,
     next_id: &mut u64,
     next_group: &mut u64,
+    serving: &ServingConfig,
     inc: Incoming,
 ) {
     match (inc.req.method.as_str(), inc.req.path.as_str()) {
@@ -318,13 +466,22 @@ fn admit(
                 .send(ServerReply::Full(handle_metrics(engine, Some(batcher))));
         }
         ("POST", "/v1/generate") => match parse_generate(&inc.req.body) {
-            Ok((prompt, max_new, stream)) => {
+            Ok((prompt, max_new, stream, deadline_ms)) => {
+                if let Some(resp) = shed_check(batcher, serving, 1) {
+                    engine.metrics.requests_shed += 1;
+                    let _ = inc.reply.send(ServerReply::Full(resp));
+                    return;
+                }
                 *next_id += 1;
-                batcher.submit(Request {
-                    id: *next_id,
-                    prompt: prompt.clone(),
-                    max_new_tokens: max_new,
-                });
+                let handle = request_handle(&inc.cancel, deadline_ms, serving);
+                batcher.submit_with(
+                    Request {
+                        id: *next_id,
+                        prompt: prompt.clone(),
+                        max_new_tokens: max_new,
+                    },
+                    handle,
+                );
                 waiters.insert(
                     *next_id,
                     Waiter::Single {
@@ -332,6 +489,7 @@ fn admit(
                         prompt,
                         stream,
                         streamed: 0,
+                        token: inc.cancel,
                     },
                 );
             }
@@ -342,7 +500,12 @@ fn admit(
         ("POST", "/v1/batch") => {
             // batch probe: {"prompts": [...], "max_new_tokens": n}
             match parse_batch(&inc.req.body) {
-                Ok((prompts, max_new)) => {
+                Ok((prompts, max_new, deadline_ms)) => {
+                    if let Some(resp) = shed_check(batcher, serving, prompts.len()) {
+                        engine.metrics.requests_shed += prompts.len() as u64;
+                        let _ = inc.reply.send(ServerReply::Full(resp));
+                        return;
+                    }
                     *next_group += 1;
                     let key = *next_group;
                     groups.insert(
@@ -355,11 +518,15 @@ fn admit(
                     );
                     for p in prompts {
                         *next_id += 1;
-                        batcher.submit(Request {
-                            id: *next_id,
-                            prompt: p,
-                            max_new_tokens: max_new,
-                        });
+                        let handle = member_handle(&inc.cancel, deadline_ms, serving);
+                        batcher.submit_with(
+                            Request {
+                                id: *next_id,
+                                prompt: p,
+                                max_new_tokens: max_new,
+                            },
+                            handle,
+                        );
                         waiters.insert(*next_id, Waiter::Group { key });
                     }
                 }
@@ -367,6 +534,28 @@ fn admit(
                     let _ = inc.reply.send(ServerReply::Full(*resp));
                 }
             }
+        }
+        ("POST", "/v1/cancel") => {
+            // {"id": N} — trip the request's token; the next tick retires it
+            let id = Json::parse(&inc.req.body)
+                .ok()
+                .and_then(|j| j.get("id").and_then(|v| v.as_f64()))
+                .map(|id| id as u64);
+            let resp = match id {
+                Some(id) => {
+                    let found = batcher.cancel(id);
+                    HttpResponse::json(
+                        if found { 200 } else { 404 },
+                        Json::obj(vec![
+                            ("id", Json::num(id as f64)),
+                            ("cancelled", Json::Bool(found)),
+                        ])
+                        .to_string(),
+                    )
+                }
+                None => HttpResponse::json(400, r#"{"error":"missing id"}"#.into()),
+            };
+            let _ = inc.reply.send(ServerReply::Full(resp));
         }
         _ => {
             let _ = inc.reply.send(ServerReply::Full(HttpResponse::json(
@@ -377,7 +566,9 @@ fn admit(
     }
 }
 
-fn parse_batch(body: &str) -> Result<(Vec<Vec<u8>>, usize), Box<HttpResponse>> {
+type BatchParams = (Vec<Vec<u8>>, usize, Option<u64>);
+
+fn parse_batch(body: &str) -> Result<BatchParams, Box<HttpResponse>> {
     let parsed = match Json::parse(body) {
         Ok(j) => j,
         Err(e) => return Err(Box::new(error_json(400, format!("bad json: {e}")))),
@@ -408,7 +599,19 @@ fn parse_batch(body: &str) -> Result<(Vec<Vec<u8>>, usize), Box<HttpResponse>> {
             r#"{"error":"empty prompts"}"#.into(),
         )));
     }
-    Ok((out, max_new))
+    let deadline_ms = parse_deadline_ms(&parsed)?;
+    Ok((out, max_new, deadline_ms))
+}
+
+/// Advance the lifecycle exit counters for one completion.
+fn count_exit(metrics: &mut Metrics, reason: FinishReason) {
+    match reason {
+        FinishReason::Length => {}
+        FinishReason::Cancelled => metrics.requests_cancelled += 1,
+        FinishReason::Deadline => metrics.requests_deadline_expired += 1,
+        FinishReason::Disconnected => metrics.requests_disconnected += 1,
+        FinishReason::QueueTimeout => metrics.requests_shed += 1,
+    }
 }
 
 fn resolve(
@@ -417,6 +620,7 @@ fn resolve(
     metrics: &mut Metrics,
     c: Completion,
 ) {
+    count_exit(metrics, c.finish_reason);
     match waiters.remove(&c.id) {
         Some(Waiter::Single {
             reply,
@@ -424,31 +628,43 @@ fn resolve(
             stream,
             ..
         }) => {
-            if stream {
+            if c.finish_reason == FinishReason::QueueTimeout {
+                // shed from the queue before admission: nothing streamed
+                // yet, so a plain error response is always well-formed
+                let _ = reply.send(ServerReply::Full(queue_timeout_json(c.id)));
+            } else if stream {
                 let _ = reply.send(ServerReply::Chunk(final_line(&c, &prompt)));
                 let _ = reply.send(ServerReply::End);
-                metrics.stream_flushes += 1;
+                if c.finish_reason != FinishReason::Disconnected {
+                    metrics.stream_flushes += 1;
+                }
             } else {
-                let _ = reply.send(ServerReply::Full(completion_json(c.id, &prompt, &c.text)));
+                let _ = reply.send(ServerReply::Full(completion_json(
+                    c.id,
+                    &prompt,
+                    &c.text,
+                    c.finish_reason,
+                )));
             }
         }
         Some(Waiter::Group { key }) => {
             let done = {
                 let g = groups.get_mut(&key).expect("group for member");
-                g.items.push((c.id, c.text));
+                g.items.push((c.id, c.text, c.finish_reason));
                 g.remaining -= 1;
                 g.remaining == 0
             };
             if done {
                 let mut g = groups.remove(&key).expect("group complete");
-                g.items.sort_by_key(|(id, _)| *id);
+                g.items.sort_by_key(|(id, _, _)| *id);
                 let items: Vec<Json> = g
                     .items
                     .iter()
-                    .map(|(id, text)| {
+                    .map(|(id, text, reason)| {
                         Json::obj(vec![
                             ("id", Json::num(*id as f64)),
                             ("text", Json::str(String::from_utf8_lossy(text).to_string())),
+                            ("finish_reason", Json::str(reason.as_str())),
                         ])
                     })
                     .collect();

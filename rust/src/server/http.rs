@@ -13,6 +13,7 @@ use std::sync::mpsc::{Receiver, Sender};
 
 use anyhow::{anyhow, Result};
 
+use crate::engine::lifecycle::{CancelReason, CancelToken};
 use crate::util::json::Json;
 
 /// A parsed HTTP request (method + path + body; headers beyond
@@ -101,6 +102,8 @@ pub fn write_response(stream: &mut TcpStream, resp: &HttpResponse) -> Result<()>
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
         _ => "Error",
     };
     write!(
@@ -143,7 +146,25 @@ fn write_stream_tail(stream: &mut TcpStream) -> Result<()> {
 /// Forward engine replies to the socket until the request is answered: one
 /// [`ServerReply::Full`], or a `Chunk…End` stream. A dropped sender (engine
 /// gone) terminates an open stream gracefully and maps to a 500 otherwise.
-fn pump_replies(stream: &mut TcpStream, rrx: &Receiver<ServerReply>) -> Result<()> {
+///
+/// A *write* failure means the client stopped reading (disconnect): the
+/// request's cancellation token is tripped so the engine loop retires the
+/// row instead of generating into a dead channel (ROADMAP streaming
+/// backpressure), and the GPU KV blocks return to the pool.
+fn pump_replies(
+    stream: &mut TcpStream,
+    rrx: &Receiver<ServerReply>,
+    cancel: &CancelToken,
+) -> Result<()> {
+    let out = pump_replies_inner(stream, rrx);
+    if out.is_err() {
+        // the socket rejected a write — nobody is reading this response
+        cancel.trip(CancelReason::Disconnected);
+    }
+    out
+}
+
+fn pump_replies_inner(stream: &mut TcpStream, rrx: &Receiver<ServerReply>) -> Result<()> {
     match rrx.recv() {
         Ok(ServerReply::Full(resp)) => write_response(stream, &resp),
         Ok(ServerReply::Chunk(first)) => {
@@ -167,10 +188,13 @@ fn pump_replies(stream: &mut TcpStream, rrx: &Receiver<ServerReply>) -> Result<(
 }
 
 /// A parsed request paired with its reply channel (single [`ServerReply::Full`]
-/// send, or a `Chunk…End` stream for streamed generation).
+/// send, or a `Chunk…End` stream for streamed generation) and the
+/// connection's cancellation token — tripped by the connection thread on
+/// write failure so the engine loop can retire the request's batch row.
 pub struct Incoming {
     pub req: HttpRequest,
     pub reply: Sender<ServerReply>,
+    pub cancel: CancelToken,
 }
 
 /// Accept loop: parses each connection and forwards it to the engine
@@ -189,8 +213,14 @@ pub fn serve(addr: &str, tx: Sender<Incoming>) -> Result<(std::net::SocketAddr, 
                     Ok(req) => {
                         let (rtx, rrx): (Sender<ServerReply>, Receiver<ServerReply>) =
                             std::sync::mpsc::channel();
-                        if tx.send(Incoming { req, reply: rtx }).is_ok() {
-                            let _ = pump_replies(&mut stream, &rrx);
+                        let cancel = CancelToken::new();
+                        let inc = Incoming {
+                            req,
+                            reply: rtx,
+                            cancel: cancel.clone(),
+                        };
+                        if tx.send(inc).is_ok() {
+                            let _ = pump_replies(&mut stream, &rrx, &cancel);
                         } else {
                             let _ = write_response(
                                 &mut stream,
@@ -275,6 +305,39 @@ mod tests {
         assert!(out.contains("{\"token\":\"a\"}"));
         assert!(out.contains("{\"done\":true}"));
         assert!(out.ends_with("0\r\n\r\n"), "missing terminal chunk: {out:?}");
+    }
+
+    #[test]
+    fn write_failure_trips_disconnect_token() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (addr, _h) = serve("127.0.0.1:0", tx).unwrap();
+        let (ctx, crx) = std::sync::mpsc::channel();
+        // engine that streams forever (until the send side fails)
+        std::thread::spawn(move || {
+            for inc in rx {
+                ctx.send(inc.cancel.clone()).unwrap();
+                let mut i = 0;
+                while inc
+                    .reply
+                    .send(ServerReply::Chunk(format!("{{\"i\":{i}}}\n")))
+                    .is_ok()
+                {
+                    i += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET /stream HTTP/1.1\r\n\r\n").unwrap();
+        let mut buf = [0u8; 256];
+        let _ = s.read(&mut buf).unwrap(); // headers + first chunk arrived
+        drop(s); // client stops reading — the dead-channel case
+        let token = crx.recv().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while token.tripped().is_none() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(token.tripped(), Some(CancelReason::Disconnected));
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! Conformance suite for the request-lifecycle subsystem: cancellation,
+//! deadlines, queue-wait shedding, load shedding, and mid-stream
+//! disconnect.
+//!
+//! The load-bearing invariant (ISSUE acceptance): retiring one request
+//! mid-batch — cancelled, expired, or disconnected — leaves every
+//! surviving request's token stream **bitwise-identical** to its isolated
+//! run, and the retired request's GPU KV blocks are observably reclaimed
+//! (the engine pool's free count is restored).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use hgca::config::{HgcaConfig, ServingConfig};
+use hgca::engine::{Batcher, CancelReason, Engine, FinishReason, Policy, Request, RequestHandle};
+use hgca::runtime::PjrtRuntime;
+use hgca::util::json::Json;
+
+fn runtime() -> Rc<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(PjrtRuntime::new(&dir).expect("runtime"))
+}
+
+/// Ground truth: a fresh engine generates the prompt alone.
+fn isolated(prompt: &str, max_new: usize) -> Vec<u8> {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut seq = engine.new_sequence(0, prompt.as_bytes());
+    engine.generate(&mut seq, max_new).unwrap()
+}
+
+fn http_raw(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let out = http_raw(addr, method, path, body);
+    let status: u16 = out.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = out.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+/// Reassemble the payload of a chunked-transfer response body.
+fn decode_chunked(raw: &str) -> String {
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let mut out = String::new();
+    let mut rest = body;
+    loop {
+        let Some((len_line, after)) = rest.split_once("\r\n") else {
+            break;
+        };
+        let len = usize::from_str_radix(len_line.trim(), 16).unwrap_or(0);
+        if len == 0 || after.len() < len {
+            break;
+        }
+        out.push_str(&after[..len]);
+        rest = after.get(len + 2..).unwrap_or("");
+    }
+    out
+}
+
+/// Poll `/v1/metrics` until `pred` holds (returns the last snapshot), or
+/// panic after `secs` seconds — the "bounded number of ticks" assertions.
+fn await_metrics(
+    addr: std::net::SocketAddr,
+    secs: u64,
+    what: &str,
+    pred: impl Fn(&Json) -> bool,
+) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        let (st, body) = http(addr, "GET", "/v1/metrics", "");
+        assert_eq!(st, 200);
+        let j = Json::parse(&body).unwrap();
+        if pred(&j) {
+            return j;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {what}; last metrics: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+// ---------------------------------------------------------------------
+// batcher-level lifecycle (no HTTP)
+// ---------------------------------------------------------------------
+
+#[test]
+fn cancel_mid_batch_preserves_survivor_bitwise_and_reclaims_blocks() {
+    let survivor_prompt = "The railway company surveyed ";
+    let want = isolated(survivor_prompt, 24);
+
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let cfg = HgcaConfig::default();
+    let per_seq = mr.cfg.n_layers * cfg.blk_num;
+    let mut engine = Engine::new(&mr, cfg, Policy::Hgca { beta: 1.0 });
+    let mut batcher = Batcher::new(4);
+
+    batcher.submit(Request {
+        id: 1,
+        prompt: survivor_prompt.as_bytes().to_vec(),
+        max_new_tokens: 24,
+    });
+    let victim = RequestHandle::default();
+    let token = victim.token.clone();
+    batcher.submit_with(
+        Request {
+            id: 2,
+            prompt: "The garrison stationed at the fort ".as_bytes().to_vec(),
+            max_new_tokens: 64,
+        },
+        victim,
+    );
+
+    let mut done = Vec::new();
+    for _ in 0..6 {
+        done.extend(batcher.tick(&mut engine).unwrap());
+    }
+    assert!(done.is_empty(), "nothing should have finished yet");
+    let in_use_before = engine.kv_pool.in_use();
+    let reclaimed_before = engine.kv_pool.reclaimed_blocks();
+    assert_eq!(in_use_before, 2 * per_seq, "two active sequences leased");
+
+    // cancel the victim mid-decode; the next tick's sweep retires it
+    assert!(token.trip(CancelReason::Cancelled));
+    done.extend(batcher.tick(&mut engine).unwrap());
+    let cancelled = done.iter().find(|c| c.id == 2).expect("victim retired");
+    assert_eq!(cancelled.finish_reason, FinishReason::Cancelled);
+    assert!(cancelled.decode_steps < 64, "retired with partial tokens");
+    assert_eq!(cancelled.text.len(), cancelled.decode_steps);
+
+    // GPU KV blocks observably reclaimed: pool free count restored
+    assert_eq!(engine.kv_pool.in_use(), in_use_before - per_seq);
+    assert_eq!(
+        engine.kv_pool.reclaimed_blocks(),
+        reclaimed_before + per_seq as u64
+    );
+
+    // the survivor's tokens are bitwise-identical to its isolated run
+    done.extend(batcher.run_to_completion(&mut engine).unwrap());
+    let survivor = done.iter().find(|c| c.id == 1).expect("survivor finished");
+    assert_eq!(survivor.finish_reason, FinishReason::Length);
+    assert_eq!(
+        survivor.text, want,
+        "mid-batch retirement perturbed a surviving request's tokens"
+    );
+    assert_eq!(engine.kv_pool.in_use(), 0, "all leases returned");
+    assert_eq!(batcher.stats().retired, 1);
+}
+
+#[test]
+fn deadline_expiry_retires_with_partial_tokens() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut batcher = Batcher::new(4);
+    batcher.submit_with(
+        Request {
+            id: 7,
+            prompt: "The county court convened ".as_bytes().to_vec(),
+            max_new_tokens: 10_000,
+        },
+        RequestHandle {
+            deadline: Some(Instant::now() + Duration::from_millis(60)),
+            ..Default::default()
+        },
+    );
+    let done = batcher.run_to_completion(&mut engine).unwrap();
+    assert_eq!(done.len(), 1);
+    let c = &done[0];
+    assert_eq!(c.id, 7);
+    assert_eq!(c.finish_reason, FinishReason::Deadline);
+    assert!(c.decode_steps < 10_000, "deadline must cut generation short");
+    assert_eq!(c.text.len(), c.decode_steps);
+    assert_eq!(engine.kv_pool.in_use(), 0, "expired row returned its blocks");
+}
+
+#[test]
+fn queue_wait_bound_sheds_without_admission() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    // one row: the second request can never be admitted while the first runs
+    let mut batcher = Batcher::new(1);
+    batcher.submit(Request {
+        id: 1,
+        prompt: "The railway ".as_bytes().to_vec(),
+        max_new_tokens: 12,
+    });
+    batcher.submit_with(
+        Request {
+            id: 2,
+            prompt: "The garrison ".as_bytes().to_vec(),
+            max_new_tokens: 12,
+        },
+        RequestHandle {
+            max_queue_ticks: Some(2),
+            ..Default::default()
+        },
+    );
+    let acquired_before = engine.kv_pool.acquired_blocks();
+    let done = batcher.run_to_completion(&mut engine).unwrap();
+    let shed = done.iter().find(|c| c.id == 2).expect("queued request shed");
+    assert_eq!(shed.finish_reason, FinishReason::QueueTimeout);
+    assert_eq!(shed.decode_steps, 0);
+    assert!(shed.text.is_empty(), "shed request never generated");
+    assert!(shed.queue_ticks > 2);
+    let first = done.iter().find(|c| c.id == 1).unwrap();
+    assert_eq!(first.finish_reason, FinishReason::Length);
+    assert_eq!(first.text.len(), 12);
+    // the shed request never allocated KV: exactly one sequence ever leased
+    let cfg = HgcaConfig::default();
+    assert_eq!(
+        engine.kv_pool.acquired_blocks() - acquired_before,
+        (mr.cfg.n_layers * cfg.blk_num) as u64
+    );
+}
+
+// ---------------------------------------------------------------------
+// HTTP-level lifecycle (server + engine loop)
+// ---------------------------------------------------------------------
+
+/// Spawn a server + engine loop with the given serving config; returns the
+/// bound address.
+fn spawn_server(serving: ServingConfig) -> std::net::SocketAddr {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let (addr, _h) = hgca::server::serve("127.0.0.1:0", tx).unwrap();
+    std::thread::spawn(move || {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let rt = Rc::new(PjrtRuntime::new(&dir).unwrap());
+        let mr = rt.load_model("tiny").unwrap();
+        let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        let _ = hgca::server::api::engine_loop_with(&mut engine, rx, Batcher::new(4), serving);
+    });
+    addr
+}
+
+#[test]
+fn mid_stream_disconnect_retires_row_and_preserves_concurrent_request() {
+    let survivor_prompt = "The expedition mapped ";
+    let want = isolated(survivor_prompt, 30);
+    let addr = spawn_server(ServingConfig::default());
+
+    // victim: a long streaming generation whose reader goes away
+    let mut victim = TcpStream::connect(addr).unwrap();
+    let body = r#"{"prompt": "The dead channel ", "max_new_tokens": 600, "stream": true}"#;
+    write!(
+        victim,
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    // read a few token lines so the stream is demonstrably live (the
+    // headers are ~105 bytes; 400 bytes ⇒ several complete token lines)...
+    let mut seen = Vec::new();
+    let mut buf = [0u8; 256];
+    while seen.len() < 400 {
+        let n = victim.read(&mut buf).unwrap();
+        assert!(n > 0, "stream ended before disconnect");
+        seen.extend_from_slice(&buf[..n]);
+    }
+    // ...then a concurrent request joins the batch
+    let handle = std::thread::spawn(move || {
+        let body =
+            format!(r#"{{"prompt": "{survivor_prompt}", "max_new_tokens": 30, "stream": true}}"#);
+        http_raw(addr, "POST", "/v1/generate", &body)
+    });
+    // ...and the victim's reader drops mid-stream
+    drop(victim);
+
+    // the survivor's streamed bytes are bitwise-identical to isolation
+    let raw = handle.join().unwrap();
+    let payload = decode_chunked(&raw);
+    let mut bytes = Vec::new();
+    for line in payload.lines() {
+        let j = Json::parse(line).unwrap();
+        if j.get("done").is_none() {
+            bytes.push(j.req_usize("byte").unwrap() as u8);
+        }
+    }
+    assert_eq!(
+        bytes, want,
+        "concurrent request's tokens perturbed by the disconnect"
+    );
+
+    // the engine retires the dead row within a bounded number of ticks and
+    // its KV blocks return to the pool (free count restored)
+    await_metrics(addr, 30, "disconnect retirement", |j| {
+        j.req_f64("requests_disconnected").unwrap() >= 1.0
+            && j.req_f64("kv_blocks_in_use").unwrap() == 0.0
+            && j.req_f64("kv_blocks_reclaimed").unwrap() >= 1.0
+            && j.req_f64("batch_active").unwrap() == 0.0
+    });
+}
+
+#[test]
+fn deadline_ms_yields_summary_line_with_partial_tokens() {
+    let addr = spawn_server(ServingConfig::default());
+    let body =
+        r#"{"prompt": "The harvest season ", "max_new_tokens": 5000, "deadline_ms": 90, "stream": true}"#;
+    let raw = http_raw(addr, "POST", "/v1/generate", body);
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    let payload = decode_chunked(&raw);
+    let last = payload.lines().last().expect("summary line");
+    let j = Json::parse(last).unwrap();
+    assert_eq!(j.req_str("finish_reason").unwrap(), "deadline");
+    assert!(j.get("done").and_then(|d| d.as_bool()).unwrap_or(false));
+    let tokens = j.req_usize("completion_tokens").unwrap();
+    assert!(tokens < 5000, "deadline must cut the stream short");
+    // token lines carry the partial text that was generated before expiry
+    assert_eq!(payload.lines().count(), tokens + 1);
+    let m = await_metrics(addr, 10, "deadline counter", |j| {
+        j.req_f64("requests_deadline_expired").unwrap() >= 1.0
+    });
+    assert_eq!(m.req_f64("kv_blocks_in_use").unwrap(), 0.0);
+}
+
+#[test]
+fn shed_watermark_rejects_with_429_and_never_admits() {
+    let addr = spawn_server(ServingConfig {
+        shed_watermark: Some(1),
+        ..Default::default()
+    });
+    // fill the single admission slot with a long-running request
+    let first = std::thread::spawn(move || {
+        http(
+            addr,
+            "POST",
+            "/v1/generate",
+            r#"{"prompt": "The quarry supplied stone ", "max_new_tokens": 1500}"#,
+        )
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    // a second admission must be rejected immediately with well-formed JSON
+    let (st, body) = http(
+        addr,
+        "POST",
+        "/v1/generate",
+        r#"{"prompt": "The second ", "max_new_tokens": 4}"#,
+    );
+    assert_eq!(st, 429, "body: {body}");
+    let j = Json::parse(&body).expect("shed error must be well-formed JSON");
+    assert!(j.req_str("error").unwrap().contains("overloaded"));
+    assert!(j.get("shed").and_then(|s| s.as_bool()).unwrap_or(false));
+    assert_eq!(j.req_usize("watermark").unwrap(), 1);
+
+    let m = await_metrics(addr, 10, "shed counter", |j| {
+        j.req_f64("requests_shed").unwrap() >= 1.0
+    });
+    // never admitted: exactly one request ever submitted to the batcher
+    assert_eq!(m.req_f64("batch_submitted").unwrap(), 1.0);
+
+    let (st, _) = first.join().unwrap();
+    assert_eq!(st, 200, "the in-flight request completes normally");
+}
+
+#[test]
+fn cancel_endpoint_ends_stream_with_cancelled_reason() {
+    let addr = spawn_server(ServingConfig::default());
+    // first request on this server → id 1
+    let mut victim = TcpStream::connect(addr).unwrap();
+    let body = r#"{"prompt": "The long cancelled story ", "max_new_tokens": 800, "stream": true}"#;
+    write!(
+        victim,
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    // wait until tokens are flowing (token lines carry the request id);
+    // 400 bytes past the ~105-byte headers is several complete lines
+    let mut seen = Vec::new();
+    let mut buf = [0u8; 256];
+    while seen.len() < 400 {
+        let n = victim.read(&mut buf).unwrap();
+        assert!(n > 0, "stream ended before cancel");
+        seen.extend_from_slice(&buf[..n]);
+    }
+    let head = String::from_utf8_lossy(&seen);
+    let first_line = decode_chunked(&head).lines().next().unwrap().to_string();
+    assert_eq!(
+        Json::parse(&first_line).unwrap().req_usize("id").unwrap(),
+        1,
+        "token lines carry the id /v1/cancel accepts"
+    );
+
+    let (st, body) = http(addr, "POST", "/v1/cancel", r#"{"id": 1}"#);
+    assert_eq!(st, 200, "body: {body}");
+    assert!(Json::parse(&body)
+        .unwrap()
+        .get("cancelled")
+        .and_then(|c| c.as_bool())
+        .unwrap_or(false));
+
+    // the stream terminates with a cancelled summary line
+    let mut rest = String::new();
+    victim.read_to_string(&mut rest).unwrap();
+    let full = format!("{head}{rest}");
+    let payload = decode_chunked(&full);
+    let last = payload.lines().last().unwrap();
+    let j = Json::parse(last).unwrap();
+    assert_eq!(j.req_str("finish_reason").unwrap(), "cancelled");
+    assert!(j.req_usize("completion_tokens").unwrap() < 800);
+
+    await_metrics(addr, 10, "cancel counter", |j| {
+        j.req_f64("requests_cancelled").unwrap() >= 1.0
+            && j.req_f64("kv_blocks_in_use").unwrap() == 0.0
+    });
+
+    // cancelling an unknown id reports not-found
+    let (st, body) = http(addr, "POST", "/v1/cancel", r#"{"id": 99}"#);
+    assert_eq!(st, 404);
+    assert!(body.contains("false"));
+}

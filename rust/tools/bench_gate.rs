@@ -1,0 +1,160 @@
+//! CI bench-regression gate: compares a fresh `hotpath_micro` pool-vs-spawn
+//! dump (`BENCH_ci.json`, emitted with `HGCA_BENCH_JSON=...`) against the
+//! checked-in baseline (`BENCH_baseline.json`) and fails when the pool
+//! path regresses beyond the tolerance.
+//!
+//! The gated metric is the pool/spawn **speedup ratio** per case: both
+//! sides run on the same machine in the same process, so the ratio is the
+//! machine-portable measure of pool-path throughput (an absolute-µs gate
+//! would mostly measure the CI runner, not the code). `--absolute` adds a
+//! raw `pool_calls_per_sec` comparison for same-machine baselines.
+//!
+//! Usage:
+//!   bench_gate [--baseline BENCH_baseline.json] [--current BENCH_ci.json]
+//!              [--max-regress-pct 25] [--absolute]
+//!
+//! Refresh the baseline after an intentional perf change with (absolute
+//! path — cargo runs the bench with cwd set to the package root, not the
+//! workspace root):
+//!   HGCA_BENCH_JSON=$PWD/BENCH_baseline.json cargo bench --bench hotpath_micro
+//!
+//! Exit codes: 0 pass, 1 regression, 2 usage/io error.
+
+use hgca::util::argparse::Args;
+use hgca::util::json::Json;
+
+struct Case {
+    jobs: usize,
+    n: usize,
+    threads: usize,
+    pool_calls_per_sec: f64,
+    speedup: f64,
+}
+
+fn load(path: &str) -> Result<Vec<Case>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let cases = doc
+        .get("cases")
+        .and_then(|c| c.as_arr())
+        .ok_or_else(|| format!("{path}: missing 'cases' array"))?;
+    let mut out = Vec::with_capacity(cases.len());
+    for c in cases {
+        let f = |k: &str| -> Result<f64, String> {
+            c.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("{path}: case missing '{k}'"))
+        };
+        out.push(Case {
+            jobs: f("jobs")? as usize,
+            n: f("n")? as usize,
+            threads: f("threads")? as usize,
+            pool_calls_per_sec: f("pool_calls_per_sec")?,
+            speedup: f("speedup")?,
+        });
+    }
+    Ok(out)
+}
+
+fn run() -> Result<bool, String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["absolute"]).map_err(|e| e.to_string())?;
+    let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
+    let current_path = args.get_or("current", "BENCH_ci.json");
+    let pct = args
+        .f64("max-regress-pct", 25.0)
+        .map_err(|e| e.to_string())?;
+    let absolute = args.flag("absolute");
+    let floor = 1.0 - pct / 100.0;
+
+    let baseline = load(baseline_path)?;
+    let current = load(current_path)?;
+    println!("bench gate: {current_path} vs {baseline_path} (tolerance {pct}%)");
+
+    // case drift is an error, not a silent skip: a renamed/added bench case
+    // without a baseline refresh would otherwise leave it ungated, and a
+    // baseline-only case would never be checked again
+    let mut drift = Vec::new();
+    for cur in &current {
+        if !baseline
+            .iter()
+            .any(|b| b.jobs == cur.jobs && b.n == cur.n && b.threads == cur.threads)
+        {
+            drift.push(format!(
+                "current case jobs={} n={} t={} missing from baseline",
+                cur.jobs, cur.n, cur.threads
+            ));
+        }
+    }
+    for base in &baseline {
+        if !current
+            .iter()
+            .any(|c| c.jobs == base.jobs && c.n == base.n && c.threads == base.threads)
+        {
+            drift.push(format!(
+                "baseline case jobs={} n={} t={} not produced by the bench",
+                base.jobs, base.n, base.threads
+            ));
+        }
+    }
+    if !drift.is_empty() {
+        return Err(format!(
+            "case drift — refresh the baseline (HGCA_BENCH_JSON=$PWD/{baseline_path} cargo bench \
+             --bench hotpath_micro, from the workspace root):\n  {}",
+            drift.join("\n  ")
+        ));
+    }
+
+    let mut pass = true;
+    let mut compared = 0;
+    for cur in &current {
+        let base = baseline
+            .iter()
+            .find(|b| b.jobs == cur.jobs && b.n == cur.n && b.threads == cur.threads)
+            .expect("drift checked above");
+        compared += 1;
+        let rel = cur.speedup / base.speedup;
+        let ok = rel >= floor;
+        println!(
+            "  jobs={:>3} n={:>5} t={}: speedup {:.2}x vs baseline {:.2}x ({:+.1}%) {}",
+            cur.jobs,
+            cur.n,
+            cur.threads,
+            cur.speedup,
+            base.speedup,
+            (rel - 1.0) * 100.0,
+            if ok { "ok" } else { "REGRESSED" },
+        );
+        pass &= ok;
+        if absolute {
+            let arel = cur.pool_calls_per_sec / base.pool_calls_per_sec;
+            let aok = arel >= floor;
+            println!(
+                "      pool {:.0} calls/s vs baseline {:.0} ({:+.1}%) {}",
+                cur.pool_calls_per_sec,
+                base.pool_calls_per_sec,
+                (arel - 1.0) * 100.0,
+                if aok { "ok" } else { "REGRESSED" },
+            );
+            pass &= aok;
+        }
+    }
+    if compared == 0 {
+        return Err("no comparable cases between baseline and current".into());
+    }
+    Ok(pass)
+}
+
+fn main() {
+    match run() {
+        Ok(true) => println!("bench gate: PASS"),
+        Ok(false) => {
+            eprintln!("bench gate: FAIL — pool-path throughput regressed past tolerance");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("bench gate: error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
