@@ -81,10 +81,11 @@ impl HgcaConfig {
     }
 }
 
-/// Serving-layer lifecycle knobs (`hgca serve` flags): defaults applied to
-/// every admitted request plus the admission-control watermark. Engine
-/// tunables stay in [`HgcaConfig`]; these only shape scheduling.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+/// Serving-layer scheduling knobs (`hgca serve` flags): defaults applied
+/// to every admitted request, the admission-control watermark, and the
+/// GPU KV pool capacity. Engine tunables stay in [`HgcaConfig`]; these
+/// only shape scheduling (policy walkthrough: docs/SCHEDULING.md).
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
     /// Default deadline applied to requests that do not carry their own
     /// `deadline_ms` (`--deadline-default`). `None` = no default deadline.
@@ -97,9 +98,45 @@ pub struct ServingConfig {
     /// Max ticks a request may wait in the admission queue
     /// (`--max-queue-ticks`) before it is shed. `None` = wait forever.
     pub max_queue_ticks: Option<u64>,
+    /// Explicit GPU KV pool capacity in blocks (`--kv-blocks`). `None`
+    /// derives the capacity from the model shape:
+    /// `blocks_per_sequence × batch rows × kv_headroom` (see
+    /// [`ServingConfig::effective_kv_blocks`]).
+    pub kv_blocks: Option<usize>,
+    /// Headroom factor for the derived KV capacity (`--kv-headroom`,
+    /// default 1.0 — exactly enough blocks for a full batch of
+    /// sequences). Values < 1 make KV availability, not row count, the
+    /// binding admission constraint; values > 1 leave slack.
+    pub kv_headroom: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            deadline_default_ms: None,
+            shed_watermark: None,
+            max_queue_ticks: None,
+            kv_blocks: None,
+            kv_headroom: 1.0,
+        }
+    }
 }
 
 impl ServingConfig {
+    /// The GPU KV pool capacity (blocks) the server runs with: the
+    /// explicit `--kv-blocks` value when given, otherwise derived from
+    /// the model shape as `ceil(blocks_per_seq × batch_rows ×
+    /// kv_headroom)` (≥ 1). With the default headroom of 1.0 the derived
+    /// pool holds exactly one full batch of sequences, so KV gating
+    /// coincides with row gating — admission behaviour is unchanged until
+    /// the operator tightens either knob.
+    pub fn effective_kv_blocks(&self, blocks_per_seq: usize, batch_rows: usize) -> usize {
+        self.kv_blocks.unwrap_or_else(|| {
+            let derived = (blocks_per_seq * batch_rows) as f64 * self.kv_headroom;
+            (derived.ceil() as usize).max(1)
+        })
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         if let Some(w) = self.shed_watermark {
             anyhow::ensure!(w > 0, "shed watermark must be positive");
@@ -107,6 +144,13 @@ impl ServingConfig {
         if let Some(ms) = self.deadline_default_ms {
             anyhow::ensure!(ms > 0, "default deadline must be positive");
         }
+        if let Some(b) = self.kv_blocks {
+            anyhow::ensure!(b > 0, "kv blocks capacity must be positive");
+        }
+        anyhow::ensure!(
+            self.kv_headroom.is_finite() && self.kv_headroom > 0.0,
+            "kv headroom must be a positive finite factor"
+        );
         Ok(())
     }
 }
@@ -122,6 +166,8 @@ mod tests {
             deadline_default_ms: Some(500),
             shed_watermark: Some(8),
             max_queue_ticks: Some(64),
+            kv_blocks: Some(128),
+            kv_headroom: 1.5,
         };
         ok.validate().unwrap();
         let bad = ServingConfig {
@@ -134,6 +180,42 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+        let bad = ServingConfig {
+            kv_blocks: Some(0),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        for headroom in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let bad = ServingConfig {
+                kv_headroom: headroom,
+                ..Default::default()
+            };
+            assert!(bad.validate().is_err(), "headroom {headroom} must fail");
+        }
+    }
+
+    #[test]
+    fn effective_kv_blocks_explicit_and_derived() {
+        // explicit capacity wins over the derivation
+        let c = ServingConfig {
+            kv_blocks: Some(7),
+            kv_headroom: 3.0,
+            ..Default::default()
+        };
+        assert_eq!(c.effective_kv_blocks(32, 4), 7);
+        // default headroom 1.0 → exactly one full batch of sequences
+        assert_eq!(ServingConfig::default().effective_kv_blocks(32, 4), 128);
+        // fractional headroom rounds up and never hits zero
+        let tight = ServingConfig {
+            kv_headroom: 0.3,
+            ..Default::default()
+        };
+        assert_eq!(tight.effective_kv_blocks(32, 4), 39); // ceil(128 × 0.3)
+        let tiny = ServingConfig {
+            kv_headroom: 1e-9,
+            ..Default::default()
+        };
+        assert_eq!(tiny.effective_kv_blocks(1, 1), 1);
     }
 
     #[test]

@@ -69,11 +69,14 @@ pub struct Engine<'m> {
     pub metrics: Metrics,
     /// Sampler randomness (unused by greedy).
     pub rng: Rng,
-    /// GPU KV block accounting pool: every sequence created through
-    /// [`Engine::new_sequence`] leases its window blocks here and returns
-    /// them when it drops (normal retire or lifecycle cancellation), so
-    /// reclamation is observable (`kv_blocks_in_use` / `kv_blocks_reclaimed`
-    /// on `/v1/metrics`).
+    /// GPU KV block pool: every sequence leases its window blocks here
+    /// ([`Engine::new_sequence`] force-leases, [`Engine::try_new_sequence`]
+    /// is capacity-gated) and returns them when it drops (normal retire or
+    /// lifecycle cancellation), so reclamation is observable
+    /// (`kv_blocks_in_use` / `kv_blocks_reclaimed` on `/v1/metrics`).
+    /// Unbounded by default; the serving loop bounds it via
+    /// [`Engine::set_kv_block_capacity`] so admission gates on actual KV
+    /// availability.
     pub kv_pool: Arc<GpuBlockPool>,
     /// scratch: batch window staging buffers, reused across steps
     k_win: Vec<f32>,
@@ -119,12 +122,48 @@ impl<'m> Engine<'m> {
             })
     }
 
+    /// GPU KV blocks one sequence of this engine leases
+    /// (`n_layers × blk_num`) — the admission currency when
+    /// [`Engine::kv_pool`] is capacity-bounded.
+    pub fn blocks_per_sequence(&self) -> usize {
+        self.mr.cfg.n_layers * self.cfg.blk_num
+    }
+
+    /// Replace [`Engine::kv_pool`] with a fresh pool of the given hard
+    /// capacity (`None` = unbounded accounting-only pool, the
+    /// [`Engine::new`] default). Call **before** any sequence exists:
+    /// leases already outstanding keep their original pool alive and
+    /// return to it, so they would be invisible to the new pool's
+    /// accounting. The serving loop applies the configured capacity here
+    /// at startup (see [`crate::config::ServingConfig::effective_kv_blocks`]).
+    pub fn set_kv_block_capacity(&mut self, capacity: Option<usize>) {
+        self.kv_pool = Arc::new(match capacity {
+            Some(blocks) => GpuBlockPool::with_capacity(blocks),
+            None => GpuBlockPool::new(),
+        });
+    }
+
     /// A fresh [`Sequence`] sized for this engine's model + config, with
-    /// its GPU window blocks leased from [`Engine::kv_pool`].
+    /// its GPU window blocks force-leased from [`Engine::kv_pool`]
+    /// (bypasses any capacity bound — standalone generation paths).
+    /// Capacity-gated admission uses [`Engine::try_new_sequence`].
     pub fn new_sequence(&self, id: u64, prompt: &[u8]) -> Sequence {
         let mut seq = Sequence::new(id, prompt, &self.mr.cfg, &self.cfg);
         seq.kv.lease_from(&self.kv_pool);
         seq
+    }
+
+    /// [`Engine::new_sequence`] gated on KV availability: the window
+    /// blocks are acquired via [`GpuBlockPool::try_acquire`] *first*, and
+    /// `None` is returned — nothing allocated — when they do not fit under
+    /// the pool's capacity. This is the batcher's admission path: a
+    /// request whose blocks don't fit waits in the queue instead of
+    /// joining the batch.
+    pub fn try_new_sequence(&self, id: u64, prompt: &[u8]) -> Option<Sequence> {
+        let lease = self.kv_pool.try_acquire(self.blocks_per_sequence())?;
+        let mut seq = Sequence::new(id, prompt, &self.mr.cfg, &self.cfg);
+        seq.kv.attach_lease(lease);
+        Some(seq)
     }
 
     // ------------------------------------------------------------------

@@ -115,6 +115,11 @@ pub enum FinishReason {
     /// Shed from the admission queue (max-queue-wait exceeded) — zero
     /// tokens, no KV was ever allocated.
     QueueTimeout,
+    /// The request's KV block requirement exceeds the pool's total
+    /// capacity — it can *never* be admitted, no matter how long it waits
+    /// (distinct from a transient shed: retrying without a bigger
+    /// `--kv-blocks` cannot succeed). Zero tokens, no KV allocated.
+    NoCapacity,
 }
 
 impl FinishReason {
@@ -126,6 +131,7 @@ impl FinishReason {
             FinishReason::Deadline => "deadline",
             FinishReason::Disconnected => "disconnected",
             FinishReason::QueueTimeout => "shed",
+            FinishReason::NoCapacity => "capacity",
         }
     }
 
@@ -199,6 +205,7 @@ mod tests {
     #[test]
     fn wire_names() {
         assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::NoCapacity.as_str(), "capacity");
         assert_eq!(
             FinishReason::from_cancel(CancelReason::QueueTimeout).as_str(),
             "shed"

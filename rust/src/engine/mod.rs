@@ -5,8 +5,10 @@
 //!   artifact ("GPU") in parallel with CPU sparse attention over the
 //!   selected store entries, fused by the LSE merge.
 //! * [`batcher`] schedules sequences over the fixed-batch artifacts:
-//!   FIFO admission, chunked prefill interleaved with fused decode steps,
-//!   per-token events for streaming.
+//!   earliest-deadline-first admission gated on GPU KV block leases
+//!   (FIFO among equal deadlines), chunked prefill interleaved with fused
+//!   decode steps, infeasible-deadline pre-emption, per-token events for
+//!   streaming. Policy walkthrough: docs/SCHEDULING.md.
 //! * [`strategy`] selects which CPU entries are attended and how the step
 //!   is charged on the simulated testbed (HGCA + paper baselines).
 //! * [`lifecycle`] makes request *exit* a first-class scheduler event:

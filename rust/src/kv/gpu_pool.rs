@@ -15,31 +15,83 @@ use std::sync::Arc;
 
 use super::block::KvBlock;
 
-/// Process-wide accounting pool for GPU KV blocks.
+/// Pool of GPU KV blocks with an optional hard capacity.
 ///
 /// Every [`crate::engine::Sequence`] leases its per-layer window blocks
 /// (`n_layers × blk_num`) from its engine's pool at creation and returns
 /// them when it drops — including early retirement (cancel / deadline /
 /// disconnect), which is what makes reclamation *observable*: the
 /// free-count is restored and `reclaimed_blocks` advances the moment a
-/// row is retired mid-batch. The pool is pure accounting (the backing
-/// buffers live in [`GpuLayerCache`]); on real hardware it would own the
-/// device allocator free list.
+/// row is retired mid-batch.
+///
+/// A pool built with [`GpuBlockPool::with_capacity`] is the admission
+/// currency of the scheduler (docs/SCHEDULING.md): [`GpuBlockPool::try_acquire`]
+/// fails once the capacity is exhausted, and the continuous batcher defers
+/// admission until enough blocks are reclaimed. A default pool
+/// ([`GpuBlockPool::new`]) is unbounded and purely accounting, which is
+/// what standalone engines (`hgca generate`, `ppl`, the benches) use. The
+/// backing buffers live in [`GpuLayerCache`]; on real hardware the pool
+/// would own the device allocator free list.
+///
+/// Acquire / fail / release under a capacity-1 pool:
+///
+/// ```
+/// use std::sync::Arc;
+/// use hgca::kv::GpuBlockPool;
+///
+/// let pool = Arc::new(GpuBlockPool::with_capacity(1));
+/// let lease = pool.try_acquire(1).expect("1 of 1 blocks free");
+/// assert!(pool.try_acquire(1).is_none(), "pool exhausted: acquisition fails");
+/// assert_eq!(pool.free_blocks(), Some(0));
+/// drop(lease); // RAII release — retiring a sequence returns its blocks
+/// assert_eq!(pool.free_blocks(), Some(1));
+/// assert!(pool.try_acquire(1).is_some(), "reclaimed blocks admit again");
+/// assert!(pool.try_acquire(2).is_none(), "larger than capacity: can never fit");
+/// ```
 #[derive(Debug, Default)]
 pub struct GpuBlockPool {
+    capacity: Option<usize>,
     in_use: AtomicUsize,
     acquired: AtomicU64,
     reclaimed: AtomicU64,
 }
 
 impl GpuBlockPool {
-    /// An empty pool (no blocks outstanding).
+    /// An empty **unbounded** pool (no blocks outstanding, acquisition
+    /// never fails — pure accounting).
     pub fn new() -> GpuBlockPool {
         GpuBlockPool::default()
     }
 
-    /// Lease `blocks` blocks from the pool. The lease returns them when
-    /// dropped (RAII — retiring a sequence is the release).
+    /// An empty pool with a hard capacity of `blocks`:
+    /// [`GpuBlockPool::try_acquire`] fails once `in_use + requested`
+    /// would exceed it.
+    pub fn with_capacity(blocks: usize) -> GpuBlockPool {
+        GpuBlockPool {
+            capacity: Some(blocks),
+            ..GpuBlockPool::default()
+        }
+    }
+
+    /// The hard capacity, or `None` for an unbounded (accounting-only)
+    /// pool.
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Blocks currently free under the capacity (`None` when unbounded).
+    /// Saturates at 0 if force-[`acquire`](GpuBlockPool::acquire)s
+    /// oversubscribed the pool.
+    pub fn free_blocks(&self) -> Option<usize> {
+        self.capacity.map(|c| c.saturating_sub(self.in_use()))
+    }
+
+    /// Lease `blocks` blocks from the pool **unconditionally**, bypassing
+    /// any capacity bound. The lease returns them when dropped (RAII —
+    /// retiring a sequence is the release). Capacity-gated callers (the
+    /// batcher's admission path) use [`GpuBlockPool::try_acquire`]; this
+    /// force path exists for unbounded pools and for cloning leases
+    /// (`Clone` cannot fail, so it must bypass the bound).
     pub fn acquire(self: &Arc<Self>, blocks: usize) -> BlockLease {
         self.in_use.fetch_add(blocks, Ordering::AcqRel);
         self.acquired.fetch_add(blocks as u64, Ordering::AcqRel);
@@ -47,6 +99,37 @@ impl GpuBlockPool {
             pool: Arc::clone(self),
             blocks,
         }
+    }
+
+    /// Lease `blocks` blocks if they fit under the capacity; `None` when
+    /// they do not (the caller defers — nothing is acquired). On an
+    /// unbounded pool this never fails. The check-and-reserve is a single
+    /// atomic compare-exchange, so concurrent acquirers cannot
+    /// collectively overshoot the capacity.
+    pub fn try_acquire(self: &Arc<Self>, blocks: usize) -> Option<BlockLease> {
+        let Some(cap) = self.capacity else {
+            return Some(self.acquire(blocks));
+        };
+        let mut cur = self.in_use.load(Ordering::Acquire);
+        loop {
+            if cur + blocks > cap {
+                return None;
+            }
+            match self.in_use.compare_exchange(
+                cur,
+                cur + blocks,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => break,
+                Err(observed) => cur = observed,
+            }
+        }
+        self.acquired.fetch_add(blocks as u64, Ordering::AcqRel);
+        Some(BlockLease {
+            pool: Arc::clone(self),
+            blocks,
+        })
     }
 
     /// Blocks currently leased out.
@@ -83,7 +166,10 @@ impl BlockLease {
 
 impl Clone for BlockLease {
     /// Cloning a lease acquires a fresh lease of the same size (the clone
-    /// owns its own share — keeps `KvManager: Clone` honest).
+    /// owns its own share — keeps `KvManager: Clone` honest). The clone is
+    /// a *force* acquire: it may oversubscribe a bounded pool, because
+    /// `Clone` cannot fail. Scheduler admission never clones leases; only
+    /// explicit sequence copies (tests, analysis) do.
     fn clone(&self) -> BlockLease {
         self.pool.acquire(self.blocks)
     }
@@ -270,6 +356,44 @@ mod tests {
         drop(b);
         assert_eq!(pool.in_use(), 0);
         assert_eq!(pool.reclaimed_blocks(), 12);
+    }
+
+    #[test]
+    fn bounded_pool_gates_acquisition() {
+        let pool = Arc::new(GpuBlockPool::with_capacity(8));
+        assert_eq!(pool.capacity(), Some(8));
+        assert_eq!(pool.free_blocks(), Some(8));
+        let a = pool.try_acquire(5).expect("5 of 8 fits");
+        assert_eq!(pool.free_blocks(), Some(3));
+        assert!(pool.try_acquire(4).is_none(), "4 > 3 free must fail");
+        assert_eq!(pool.in_use(), 5, "failed acquire reserves nothing");
+        let b = pool.try_acquire(3).expect("exactly the remaining blocks");
+        assert_eq!(pool.free_blocks(), Some(0));
+        drop(a);
+        assert_eq!(pool.free_blocks(), Some(5));
+        assert!(pool.try_acquire(5).is_some());
+        drop(b);
+    }
+
+    #[test]
+    fn unbounded_pool_never_fails() {
+        let pool = Arc::new(GpuBlockPool::new());
+        assert_eq!(pool.capacity(), None);
+        assert_eq!(pool.free_blocks(), None);
+        let a = pool.try_acquire(1_000_000).expect("unbounded");
+        assert_eq!(pool.in_use(), 1_000_000);
+        drop(a);
+    }
+
+    #[test]
+    fn force_acquire_bypasses_capacity() {
+        let pool = Arc::new(GpuBlockPool::with_capacity(2));
+        let a = pool.acquire(5); // documented escape hatch (lease cloning)
+        assert_eq!(pool.in_use(), 5);
+        assert_eq!(pool.free_blocks(), Some(0), "free saturates at zero");
+        assert!(pool.try_acquire(1).is_none());
+        drop(a);
+        assert_eq!(pool.free_blocks(), Some(2));
     }
 
     #[test]

@@ -58,12 +58,30 @@ impl KvManager {
         }
     }
 
+    /// GPU window blocks this manager needs to lease (`n_layers × blk_num`)
+    /// — the admission currency of a capacity-bounded pool.
+    pub fn blocks_needed(&self) -> usize {
+        self.layers.len() * self.cfg.blk_num
+    }
+
     /// Lease this manager's GPU window blocks (`n_layers × blk_num`) from
-    /// `pool`. The lease is released when the manager drops, so retiring a
-    /// sequence — finished, cancelled, expired, or disconnected — restores
-    /// the pool's free count (observable via [`GpuBlockPool::in_use`]).
+    /// `pool`, bypassing any capacity bound (force acquire — standalone
+    /// engines and tests). The lease is released when the manager drops, so
+    /// retiring a sequence — finished, cancelled, expired, or disconnected
+    /// — restores the pool's free count (observable via
+    /// [`GpuBlockPool::in_use`]). Capacity-gated admission goes through
+    /// [`GpuBlockPool::try_acquire`] + [`KvManager::attach_lease`] instead.
     pub fn lease_from(&mut self, pool: &Arc<GpuBlockPool>) {
-        self.lease = Some(pool.acquire(self.layers.len() * self.cfg.blk_num));
+        self.lease = Some(pool.acquire(self.blocks_needed()));
+    }
+
+    /// Attach a lease acquired up front (capacity-gated admission: the
+    /// scheduler acquires via [`GpuBlockPool::try_acquire`] *before*
+    /// building the sequence, so a failed acquisition allocates nothing).
+    /// Any previously held lease is released.
+    pub fn attach_lease(&mut self, lease: BlockLease) {
+        debug_assert_eq!(lease.blocks(), self.blocks_needed());
+        self.lease = Some(lease);
     }
 
     /// Blocks currently leased from the engine's pool (0 when unleased).
@@ -214,6 +232,20 @@ mod tests {
         let m = mk();
         assert!(m.gpu_bytes() > 0);
         assert_eq!(m.cpu_bytes(), 0);
+    }
+
+    #[test]
+    fn attached_lease_returns_blocks_on_drop() {
+        let pool = Arc::new(crate::kv::GpuBlockPool::with_capacity(4));
+        let mut m = mk(); // 2 layers × blk_num 2 → 4 blocks
+        assert_eq!(m.blocks_needed(), 4);
+        let lease = pool.try_acquire(m.blocks_needed()).expect("fits exactly");
+        m.attach_lease(lease);
+        assert_eq!(m.leased_blocks(), 4);
+        assert!(pool.try_acquire(1).is_none(), "pool exhausted");
+        drop(m);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.free_blocks(), Some(4));
     }
 
     #[test]

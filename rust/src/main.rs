@@ -22,9 +22,14 @@ USAGE:
                 [--deadline-default MS]   # deadline applied when a request has none
                 [--shed-watermark N]      # reject admissions (429) past N pending
                 [--max-queue-ticks N]     # shed queued requests waiting > N ticks
-                # POST /v1/generate accepts "stream": true for chunked-transfer
-                # token streaming, "deadline_ms" per request, and POST
-                # /v1/cancel {"id": N} cancels mid-flight; see docs/API.md
+                [--kv-blocks N]           # hard GPU KV pool capacity (blocks);
+                                          # default: model shape × batch × headroom
+                [--kv-headroom F]         # derived-capacity factor (default 1.0)
+                # admission is earliest-deadline-first, gated on KV block
+                # availability; POST /v1/generate accepts "stream": true for
+                # chunked-transfer token streaming, "deadline_ms" per request,
+                # and POST /v1/cancel {"id": N} cancels mid-flight; see
+                # docs/API.md + docs/SCHEDULING.md
   hgca generate --prompt TEXT [--max-new 64] [--model tiny] [--policy hgca]
   hgca ppl      [--len 512] [--model tiny] [--policy hgca] [--beta 1.0] [--window 256]
   hgca analyze  [--model tiny] [--len 256]      # attention-pattern stats (Figs. 3-5)
@@ -226,8 +231,26 @@ fn run() -> Result<()> {
                     Some(n) => Some(n.parse()?),
                     None => None,
                 },
+                kv_blocks: match args.get("kv-blocks") {
+                    Some(n) => Some(n.parse()?),
+                    None => None,
+                },
+                kv_headroom: args.f64("kv-headroom", 1.0)?,
             };
             serving.validate()?;
+            // resolve the pool capacity once and pin it as the explicit
+            // value, so the line logged here is by construction the one
+            // the engine loop enforces
+            let capacity = serving.effective_kv_blocks(engine.blocks_per_sequence(), batcher.batch);
+            let serving = hgca::config::ServingConfig {
+                kv_blocks: Some(capacity),
+                ..serving
+            };
+            println!(
+                "kv pool: {capacity} blocks capacity ({} per sequence, {} batch rows)",
+                engine.blocks_per_sequence(),
+                batcher.batch,
+            );
             hgca::server::api::engine_loop_with(&mut engine, rx, batcher, serving)?;
         }
         other => {

@@ -44,6 +44,10 @@ pub struct Metrics {
     /// requests rejected by admission control (watermark 429s) or shed
     /// from the queue after exceeding their max-queue-wait bound
     pub requests_shed: u64,
+    /// requests rejected because their KV block requirement exceeds the
+    /// pool's total capacity — unlike a shed, retrying cannot succeed
+    /// without a larger `--kv-blocks` (the "won't-ever-fit" 429)
+    pub requests_rejected_capacity: u64,
 }
 
 impl Metrics {

@@ -11,10 +11,18 @@
 //! Every admitted request carries a lifecycle handle (cancellation token +
 //! optional deadline + max-queue-wait bound); the batcher retires tripped
 //! rows mid-batch and their completion arrives with a `finish_reason`
-//! (`length`/`cancelled`/`deadline`/`disconnected`/`shed`). When batch
+//! (`length`/`cancelled`/`deadline`/`disconnected`/`shed`/`capacity`).
+//! Admission is earliest-deadline-first over a capacity-bounded GPU KV
+//! pool (docs/SCHEDULING.md): the engine loop sizes the pool from
+//! [`crate::config::ServingConfig::effective_kv_blocks`] at startup, a
+//! request whose blocks don't currently fit defers in the queue, and one
+//! that can *never* fit (more blocks than the pool's total capacity) is
+//! rejected up front with a 429 carrying `"never_fits": true`. When batch
 //! occupancy + queue depth exceed the configured watermark
 //! ([`crate::config::ServingConfig::shed_watermark`]), new admissions are
-//! rejected immediately with a 429-style JSON error (load shedding).
+//! rejected immediately with a 429-style JSON error (load shedding —
+//! distinct from the never-fits rejection: a shed request can succeed on
+//! retry once the queue drains).
 //!
 //! The engine loop is a continuous-batching scheduler: every POST is
 //! admitted into the running batch (no serialization of concurrent
@@ -156,6 +164,36 @@ fn queue_timeout_json(id: u64) -> HttpResponse {
     )
 }
 
+/// The 429 body for a request whose KV block requirement exceeds the
+/// pool's **total** capacity — it can never be admitted, so unlike a
+/// watermark shed (`"shed": true`) a plain retry cannot succeed:
+/// `"never_fits": true` tells the client to stop retrying (or the
+/// operator to raise `--kv-blocks` / `--kv-headroom`).
+fn capacity_reject_json(needed: usize, capacity: usize) -> HttpResponse {
+    HttpResponse::json(
+        429,
+        Json::obj(vec![
+            ("error", Json::str("request KV requirement exceeds pool capacity")),
+            ("never_fits", Json::Bool(true)),
+            ("kv_blocks_needed", Json::num(needed as f64)),
+            ("kv_blocks_capacity", Json::num(capacity as f64)),
+            ("finish_reason", Json::str(FinishReason::NoCapacity.as_str())),
+        ])
+        .to_string(),
+    )
+}
+
+/// Up-front never-fits check: `Some(429)` when one sequence's window
+/// blocks exceed the pool's total capacity (admission could defer
+/// forever; reject instead — the batcher applies the same rule to
+/// directly-submitted requests). `None` on unbounded pools or when the
+/// blocks fit.
+fn capacity_check(engine: &Engine<'_>) -> Option<HttpResponse> {
+    let capacity = engine.kv_pool.capacity()?;
+    let needed = engine.blocks_per_sequence();
+    (needed > capacity).then(|| capacity_reject_json(needed, capacity))
+}
+
 /// One streamed token line: `{"byte":B,"id":R,"index":N,"token":"s"}` +
 /// newline. `byte` carries the exact generated byte so clients can
 /// reconstruct the byte-identical sequence even when a byte is not valid
@@ -226,9 +264,12 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         ("requests_deadline_expired", Json::num(m.requests_deadline_expired as f64)),
         ("requests_disconnected", Json::num(m.requests_disconnected as f64)),
         ("requests_shed", Json::num(m.requests_shed as f64)),
-        // GPU KV block accounting: free-count restoration on retirement
+        ("requests_rejected_capacity", Json::num(m.requests_rejected_capacity as f64)),
+        // GPU KV block accounting: free-count restoration on retirement +
+        // the admission currency (0 = unbounded accounting-only pool)
         ("kv_blocks_in_use", Json::num(engine.kv_pool.in_use() as f64)),
         ("kv_blocks_reclaimed", Json::num(engine.kv_pool.reclaimed_blocks() as f64)),
+        ("kv_blocks_capacity", Json::num(engine.kv_pool.capacity().unwrap_or(0) as f64)),
     ];
     if let Some(b) = batcher {
         let s = b.stats();
@@ -244,6 +285,8 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         fields.push(("batch_retired", Json::num(s.retired as f64)));
         fields.push(("batch_prefill_chunks", Json::num(s.prefill_chunks as f64)));
         fields.push(("batch_decode_steps", Json::num(s.decode_steps as f64)));
+        fields.push(("admissions_deferred", Json::num(s.admissions_deferred as f64)));
+        fields.push(("deadline_preempted", Json::num(s.deadline_preempted as f64)));
         fields.push((
             "prefill_decode_interleave",
             Json::num(s.prefill_chunks as f64 / s.decode_steps.max(1) as f64),
@@ -295,6 +338,11 @@ pub fn engine_loop_with(
     mut batcher: Batcher,
     serving: ServingConfig,
 ) -> Result<()> {
+    // size the GPU KV pool before the first admission: explicit
+    // --kv-blocks, or model shape × batch × --kv-headroom (default 1.0 —
+    // exactly one full batch, so gating coincides with row availability)
+    let capacity = serving.effective_kv_blocks(engine.blocks_per_sequence(), batcher.batch);
+    engine.set_kv_block_capacity(Some(capacity));
     let mut next_id = 0u64;
     let mut waiters: HashMap<u64, Waiter> = HashMap::new();
     let mut groups: HashMap<u64, Group> = HashMap::new();
@@ -356,8 +404,12 @@ pub fn engine_loop_with(
                             }
                         }
                     }
+                    let kv = KvSizing {
+                        needed: engine.blocks_per_sequence(),
+                        capacity: engine.kv_pool.capacity().unwrap_or(0),
+                    };
                     for c in finished {
-                        resolve(&mut waiters, &mut groups, &mut engine.metrics, c);
+                        resolve(&mut waiters, &mut groups, &mut engine.metrics, kv, c);
                     }
                 }
                 Err(e) => {
@@ -467,6 +519,11 @@ fn admit(
         }
         ("POST", "/v1/generate") => match parse_generate(&inc.req.body) {
             Ok((prompt, max_new, stream, deadline_ms)) => {
+                if let Some(resp) = capacity_check(engine) {
+                    engine.metrics.requests_rejected_capacity += 1;
+                    let _ = inc.reply.send(ServerReply::Full(resp));
+                    return;
+                }
                 if let Some(resp) = shed_check(batcher, serving, 1) {
                     engine.metrics.requests_shed += 1;
                     let _ = inc.reply.send(ServerReply::Full(resp));
@@ -501,6 +558,14 @@ fn admit(
             // batch probe: {"prompts": [...], "max_new_tokens": n}
             match parse_batch(&inc.req.body) {
                 Ok((prompts, max_new, deadline_ms)) => {
+                    // per member: each sequence leases blocks_per_sequence
+                    // (members need not fit simultaneously — the queue
+                    // defers them — but one that can never fit is rejected)
+                    if let Some(resp) = capacity_check(engine) {
+                        engine.metrics.requests_rejected_capacity += prompts.len() as u64;
+                        let _ = inc.reply.send(ServerReply::Full(resp));
+                        return;
+                    }
                     if let Some(resp) = shed_check(batcher, serving, prompts.len()) {
                         engine.metrics.requests_shed += prompts.len() as u64;
                         let _ = inc.reply.send(ServerReply::Full(resp));
@@ -611,13 +676,23 @@ fn count_exit(metrics: &mut Metrics, reason: FinishReason) {
         FinishReason::Deadline => metrics.requests_deadline_expired += 1,
         FinishReason::Disconnected => metrics.requests_disconnected += 1,
         FinishReason::QueueTimeout => metrics.requests_shed += 1,
+        FinishReason::NoCapacity => metrics.requests_rejected_capacity += 1,
     }
+}
+
+/// KV sizing snapshot threaded into [`resolve`] so a batcher-side
+/// never-fits completion can report the real block numbers.
+#[derive(Clone, Copy)]
+struct KvSizing {
+    needed: usize,
+    capacity: usize,
 }
 
 fn resolve(
     waiters: &mut HashMap<u64, Waiter>,
     groups: &mut HashMap<u64, Group>,
     metrics: &mut Metrics,
+    kv: KvSizing,
     c: Completion,
 ) {
     count_exit(metrics, c.finish_reason);
@@ -632,6 +707,10 @@ fn resolve(
                 // shed from the queue before admission: nothing streamed
                 // yet, so a plain error response is always well-formed
                 let _ = reply.send(ServerReply::Full(queue_timeout_json(c.id)));
+            } else if c.finish_reason == FinishReason::NoCapacity {
+                // rejected by the batcher's never-fits sweep: never
+                // admitted, nothing streamed, plain error is well-formed
+                let _ = reply.send(ServerReply::Full(capacity_reject_json(kv.needed, kv.capacity)));
             } else if stream {
                 let _ = reply.send(ServerReply::Chunk(final_line(&c, &prompt)));
                 let _ = reply.send(ServerReply::End);

@@ -1,0 +1,198 @@
+//! Offline markdown link checker (CI `lint` job — see
+//! .github/workflows/ci.yml).
+//!
+//! Walks README.md plus every `docs/*.md` file, extracts markdown links
+//! `[text](target)`, and fails when a **repo-relative** target does not
+//! exist on disk. External schemes (`http://`, `https://`, `mailto:`) and
+//! pure in-page anchors (`#…`) are skipped — the gate is offline-safe by
+//! construction: it never touches the network, it only keeps the growing
+//! doc set's internal cross-links from rotting.
+//!
+//! Usage: `cargo run --bin link_check` (paths resolve from the crate
+//! manifest, so the working directory does not matter).
+
+use std::path::{Path, PathBuf};
+
+/// One extracted link: the raw target plus its 1-based line number.
+#[derive(Debug, PartialEq, Eq)]
+struct Link {
+    target: String,
+    line: usize,
+}
+
+/// Extract `[text](target)` markdown links. Good enough for this repo's
+/// docs: it keys on the `](` token, which never appears in our prose or
+/// inline code outside a real link.
+fn extract_links(text: &str) -> Vec<Link> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let mut rest = line;
+        while let Some(pos) = rest.find("](") {
+            let after = &rest[pos + 2..];
+            let Some(end) = after.find(')') else {
+                break;
+            };
+            out.push(Link {
+                target: after[..end].to_string(),
+                line: i + 1,
+            });
+            rest = &after[end + 1..];
+        }
+    }
+    out
+}
+
+/// Whether a target is checkable on disk: repo-relative path, not an
+/// external scheme or a pure in-page anchor.
+fn is_local(target: &str) -> bool {
+    !(target.is_empty()
+        || target.starts_with('#')
+        || target.starts_with("http://")
+        || target.starts_with("https://")
+        || target.starts_with("mailto:"))
+}
+
+/// Strip an in-page fragment (`file.md#section` → `file.md`).
+fn strip_fragment(target: &str) -> &str {
+    target.split('#').next().unwrap_or(target)
+}
+
+/// Check every local link of one file; returns human-readable failures.
+fn check_file(md: &Path, repo_root: &Path) -> Vec<String> {
+    let text = match std::fs::read_to_string(md) {
+        Ok(t) => t,
+        Err(e) => return vec![format!("{}: unreadable: {e}", md.display())],
+    };
+    let dir = md.parent().unwrap_or(repo_root);
+    let mut failures = Vec::new();
+    for link in extract_links(&text) {
+        if !is_local(&link.target) {
+            continue;
+        }
+        let path = strip_fragment(&link.target);
+        if path.is_empty() {
+            continue;
+        }
+        let resolved = dir.join(path);
+        if !resolved.exists() {
+            failures.push(format!(
+                "{}:{}: broken link `{}` → {}",
+                md.display(),
+                link.line,
+                link.target,
+                resolved.display()
+            ));
+        }
+    }
+    failures
+}
+
+/// README.md + every markdown file under docs/.
+fn doc_set(repo_root: &Path) -> Vec<PathBuf> {
+    let mut files = vec![repo_root.join("README.md")];
+    if let Ok(entries) = std::fs::read_dir(repo_root.join("docs")) {
+        let mut docs: Vec<PathBuf> = entries
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|e| e == "md"))
+            .collect();
+        docs.sort();
+        files.extend(docs);
+    }
+    files
+}
+
+fn main() {
+    // rust/ is the manifest dir; the repo root (README.md, docs/) is its
+    // parent
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let repo_root = manifest.parent().unwrap_or(manifest);
+    let mut failures = Vec::new();
+    let mut checked = 0usize;
+    for md in doc_set(repo_root) {
+        if !md.exists() {
+            failures.push(format!("{}: missing", md.display()));
+            continue;
+        }
+        checked += 1;
+        failures.extend(check_file(&md, repo_root));
+    }
+    if failures.is_empty() {
+        println!("link_check: {checked} files OK");
+    } else {
+        for f in &failures {
+            eprintln!("link_check: {f}");
+        }
+        eprintln!("link_check: {} broken link(s)", failures.len());
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_links_with_lines() {
+        let md = "# title\nsee [a](docs/A.md) and [b](B.md#frag)\n[c](https://x)\n";
+        let links = extract_links(md);
+        assert_eq!(
+            links,
+            vec![
+                Link {
+                    target: "docs/A.md".into(),
+                    line: 2
+                },
+                Link {
+                    target: "B.md#frag".into(),
+                    line: 2
+                },
+                Link {
+                    target: "https://x".into(),
+                    line: 3
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn locality_filter() {
+        assert!(is_local("docs/API.md"));
+        assert!(is_local("../ROADMAP.md"));
+        assert!(!is_local("https://example.com/x.md"));
+        assert!(!is_local("http://example.com"));
+        assert!(!is_local("mailto:a@b.c"));
+        assert!(!is_local("#section"));
+        assert!(!is_local(""));
+    }
+
+    #[test]
+    fn fragments_are_stripped() {
+        assert_eq!(strip_fragment("API.md#metrics"), "API.md");
+        assert_eq!(strip_fragment("API.md"), "API.md");
+    }
+
+    #[test]
+    fn repo_doc_set_has_no_broken_links() {
+        // the real gate, runnable as a plain unit test too
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let root = manifest.parent().unwrap();
+        let mut failures = Vec::new();
+        for md in doc_set(root) {
+            assert!(md.exists(), "{} missing", md.display());
+            failures.extend(check_file(&md, root));
+        }
+        assert!(failures.is_empty(), "broken links:\n{}", failures.join("\n"));
+    }
+
+    #[test]
+    fn broken_link_is_reported() {
+        let dir = std::env::temp_dir().join("hgca_link_check_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let md = dir.join("page.md");
+        std::fs::write(&md, "[gone](no/such/file.md) [ok](page.md)\n").unwrap();
+        let failures = check_file(&md, &dir);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("no/such/file.md"));
+    }
+}
