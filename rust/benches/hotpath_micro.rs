@@ -11,8 +11,11 @@
 use std::path::Path;
 use std::rc::Rc;
 
-use hgca::attention::{merge_states, sparse_attention, sparse_attention_spawn, HeadJob};
+use hgca::attention::{
+    merge_states, sparse_attention, sparse_attention_spawn, AttnPool, HeadJob, TaskSplit,
+};
 use hgca::bench::bench;
+use hgca::topology::Topology;
 use hgca::util::json::Json;
 use hgca::util::rng::Rng;
 
@@ -69,6 +72,66 @@ fn main() {
             assert_eq!(out.o, reference.o, "pool output drifted at cap {cap}");
             assert_eq!(out.lse, reference.lse, "pool lse drifted at cap {cap}");
         }
+    }
+    println!();
+
+    // ---- sharded (per-NUMA-node queues) vs flat pool ----
+    // the NUMA tentpole's placement path on a decode-shaped submission:
+    // tasks are routed to per-node queues via a shard map instead of one
+    // flat injector. On a single-socket runner the two should be within
+    // noise of each other (the gate's baseline speedup is set low enough
+    // that only a real dispatch regression trips it); on multi-socket
+    // hardware the sharded pool gains local-slab bandwidth.
+    println!("== sharded (4-node synthetic) vs flat pool ==");
+    {
+        let (jobs_n, n, threads) = (32usize, 512usize, 4usize);
+        let kvs: Vec<(Vec<f32>, Vec<f32>)> = (0..jobs_n)
+            .map(|_| {
+                let mut k = vec![0.0f32; n * dh];
+                let mut v = vec![0.0f32; n * dh];
+                rng.fill_normal(&mut k, 1.0);
+                rng.fill_normal(&mut v, 1.0);
+                (k, v)
+            })
+            .collect();
+        let jobs: Vec<HeadJob> = kvs.iter().map(|(k, v)| HeadJob { k, v, n }).collect();
+        let mut q = vec![0.0f32; jobs_n * dh];
+        rng.fill_normal(&mut q, 0.2);
+        // contiguous node runs so each packed task lands wholly on one node
+        let nodes: Vec<usize> = (0..jobs_n).map(|j| j * 4 / jobs_n).collect();
+        let flat = AttnPool::new(threads);
+        let sharded = AttnPool::with_topology(threads, Topology::synthetic(4));
+        let split = TaskSplit::EvenJobs { max_parallel: threads };
+        let s_flat = bench(5, 60, || {
+            let _ = flat.run_masked(&jobs, &q, 1, dh, threads, false, None);
+        });
+        let s_shard = bench(5, 60, || {
+            let _ = sharded.run_placed(&jobs, &q, 1, dh, split, false, None, Some(&nodes));
+        });
+        println!(
+            "jobs={jobs_n:>3} n={n:>5} t={threads}: sharded p50 {:>9.1} µs | flat p50 {:>9.1} µs | ratio {:>5.2}x",
+            s_shard.p50 * 1e6,
+            s_flat.p50 * 1e6,
+            s_flat.p50 / s_shard.p50
+        );
+        gate_cases.push(Json::obj(vec![
+            ("jobs", Json::num(jobs_n as f64)),
+            ("n", Json::num(n as f64)),
+            ("threads", Json::num(threads as f64)),
+            // gated path = the sharded pool; baseline = the flat pool
+            ("pool_p50_us", Json::num(s_shard.p50 * 1e6)),
+            ("spawn_p50_us", Json::num(s_flat.p50 * 1e6)),
+            ("pool_calls_per_sec", Json::num(1.0 / s_shard.p50)),
+            ("speedup", Json::num(s_flat.p50 / s_shard.p50)),
+        ]));
+        // placement is a pure scheduling change: bitwise conformance
+        let reference = flat.run_masked(&jobs, &q, 1, dh, threads, false, None);
+        let placed = sharded.run_placed(&jobs, &q, 1, dh, split, false, None, Some(&nodes));
+        assert_eq!(placed.o, reference.o, "sharded pool output drifted");
+        assert_eq!(placed.lse, reference.lse, "sharded pool lse drifted");
+        let st = sharded.stats();
+        assert_eq!(st.numa_nodes, 4);
+        assert_eq!(st.node_tasks.iter().sum::<u64>(), st.tasks);
     }
     println!();
 

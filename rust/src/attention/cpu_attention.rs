@@ -79,6 +79,35 @@ pub fn sparse_attention_masked(
     AttnPool::global().run_masked(jobs, q, n_query, d_head, threads, want_probs, q_valid)
 }
 
+/// [`sparse_attention_masked`] with an explicit per-job NUMA node map (the
+/// KV shard map — see `kv::CpuLayerStore::node_of`): each packed task is
+/// dispatched to the pool queue owning its first job's slab, so workers
+/// pinned to that node stream local memory. Placement never changes the
+/// task plan or the numerics — output is bitwise identical to the unplaced
+/// call on any topology.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attention_masked_placed(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    threads: usize,
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+    nodes: &[crate::topology::NodeId],
+) -> CpuAttnOutput {
+    AttnPool::global().run_placed(
+        jobs,
+        q,
+        n_query,
+        d_head,
+        TaskSplit::EvenJobs { max_parallel: threads },
+        want_probs,
+        q_valid,
+        Some(nodes),
+    )
+}
+
 /// Append-time sparse attention with a task split sized by store length
 /// (ROADMAP's pool-aware append re-evaluation).
 ///
@@ -112,6 +141,36 @@ pub fn sparse_attention_append(
         },
         want_probs,
         q_valid,
+    )
+}
+
+/// [`sparse_attention_append`] with a per-job NUMA node map (see
+/// [`sparse_attention_masked_placed`]) — the append-time re-evaluation
+/// path with shard-aware dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attention_append_placed(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    entries_per_task: usize,
+    max_tasks: usize,
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+    nodes: &[crate::topology::NodeId],
+) -> CpuAttnOutput {
+    AttnPool::global().run_placed(
+        jobs,
+        q,
+        n_query,
+        d_head,
+        TaskSplit::ByEntries {
+            per_task: entries_per_task,
+            max_tasks,
+        },
+        want_probs,
+        q_valid,
+        Some(nodes),
     )
 }
 

@@ -15,7 +15,8 @@ pub mod merge;
 pub mod pool;
 
 pub use cpu_attention::{
-    sparse_attention, sparse_attention_append, sparse_attention_masked, sparse_attention_spawn,
+    sparse_attention, sparse_attention_append, sparse_attention_append_placed,
+    sparse_attention_masked, sparse_attention_masked_placed, sparse_attention_spawn,
     CpuAttnOutput, HeadJob,
 };
 pub use merge::{merge_head, merge_states, EMPTY_LSE};

@@ -1,26 +1,39 @@
-//! Persistent CPU attention worker pool (paper §3.3, production form).
+//! Persistent CPU attention worker pool (paper §3.3, production form),
+//! sharded into per-NUMA-node queues.
 //!
 //! The seed implementation spawned fresh `std::thread`s on every
 //! `sparse_attention` call — fine for one long prefill, ruinous for decode
 //! serving where each step submits batch×heads tiny jobs and the per-call
 //! spawn/join cost dominates. This pool keeps a fixed set of long-lived
-//! workers behind a shared FIFO injector queue:
+//! workers behind **one FIFO queue per NUMA node**
+//! ([`crate::topology::Topology`]):
 //!
 //! * **submit/wait** — [`AttnPool::run_masked`] packs the (row, head) jobs
 //!   into contiguous ranges ("adjacent head merging"), enqueues one task per
 //!   range, and blocks until the batch completes. Each task writes a
 //!   disjoint slice of the caller's pre-allocated output buffers, exactly as
 //!   the spawn path did.
-//! * **work stealing** — the submitting thread doesn't idle: it pops tasks
-//!   from the same queue until its batch drains (caller-assist), so progress
-//!   is guaranteed even with zero workers and small batches finish at
-//!   near-inline latency.
+//! * **placement** — [`AttnPool::run_placed`] takes a per-job node map (the
+//!   KV shard map, see `kv::CpuLayerStore`): each task lands on the queue
+//!   of its first job's node, so the workers pinned to that node stream
+//!   their local KV slabs. Unplaced submissions round-robin tasks across
+//!   queues. On a single-node topology there is exactly one queue and the
+//!   pool behaves bit-for-bit like the original flat injector.
+//! * **work stealing** — workers drain their own node's queue first and
+//!   steal from other nodes (deterministic wrap order) when idle, so
+//!   placement is an optimization, never a progress hazard. The submitting
+//!   thread doesn't idle either: it pops tasks — its home node first —
+//!   until its batch drains (caller-assist), so progress is guaranteed even
+//!   with zero workers. Cross-node *worker* executions are counted per
+//!   node ([`PoolStats::node_steals`]) so locality regressions are
+//!   visible; the unpinned caller's off-home pops are routine and tracked
+//!   separately ([`PoolStats::caller_assist_cross_node`]).
 //! * **determinism** — task packing ([`TaskSplit`]) depends only on the
-//!   job shapes and the split parameters, never on worker count or
-//!   scheduling, and every job's arithmetic touches only its own
+//!   job shapes and the split parameters, never on worker count, topology,
+//!   or scheduling, and every job's arithmetic touches only its own
 //!   inputs/outputs. Results are therefore **bitwise identical** across
-//!   pool sizes, parallelism caps, split strategies, and repeated runs.
-//!   The conformance suite pins this.
+//!   pool sizes, parallelism caps, split strategies, topologies, and
+//!   repeated runs. The conformance suites pin this.
 //! * **split strategies** — decode packs by job count
 //!   ([`TaskSplit::EvenJobs`], heads have similar working sets); append-time
 //!   full-store re-evaluation packs by KV entries
@@ -28,21 +41,27 @@
 //!   instead of the decode cap.
 //!
 //! Multiple engines (threads) may share one pool; tasks from concurrent
-//! submissions interleave in FIFO order. [`AttnPool::global`] is the
-//! process-wide instance used by `sparse_attention*`; its size comes from
-//! `HGCA_POOL_THREADS` or `available_parallelism`.
+//! submissions interleave in FIFO order per node queue. [`AttnPool::global`]
+//! is the process-wide instance used by `sparse_attention*`; its size comes
+//! from `HGCA_POOL_THREADS` or `available_parallelism`, and its topology
+//! from [`Topology::detect`] (`HGCA_NUMA_NODES` / sysfs) — or from
+//! [`AttnPool::init_global`] when the serving binary passes `--numa-nodes`
+//! before first use.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::topology::{NodeId, Topology};
+
 use super::cpu_attention::{run_job_range, CpuAttnOutput, HeadJob, EMPTY_LSE};
 
 /// How a submission's (row, head) jobs are packed into contiguous pool
 /// tasks. The plan depends only on the job list and the split parameters —
-/// never on worker availability or scheduling — which is what keeps pool
-/// output bitwise identical across pool sizes (see module docs).
+/// never on worker availability, scheduling, or topology (placement assigns
+/// each *planned* task a queue; it never reshapes the plan) — which is what
+/// keeps pool output bitwise identical across pool sizes (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskSplit {
     /// At most `max_parallel` contiguous tasks of (near-)equal *job count* —
@@ -169,24 +188,77 @@ struct Counters {
     jobs: AtomicU64,
     busy_ns: AtomicU64,
     queue_peak: AtomicUsize,
+    pinned_workers: AtomicUsize,
+}
+
+/// One NUMA node's FIFO injector.
+struct NodeQueue {
+    queue: Mutex<VecDeque<Task>>,
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<Task>>,
+    /// One FIFO queue per topology node (always ≥ 1).
+    queues: Vec<NodeQueue>,
+    /// Sleep coordination: producers take this lock while notifying, and
+    /// sleepers re-check the queued count under it before waiting — a push
+    /// between a sleeper's check and its wait can therefore never be
+    /// missed (the producer blocks on this lock until the sleeper waits).
+    idle: Mutex<()>,
     work_cv: Condvar,
     shutdown: AtomicBool,
+    /// Tasks currently queued across every node (depth/peak accounting).
+    queued: AtomicUsize,
     counters: Counters,
+    /// Tasks enqueued per node (placement accounting).
+    node_tasks: Vec<AtomicU64>,
+    /// Tasks a node's **pinned worker** executed from *another* node's
+    /// queue — the cross-node steal count (the locality signal).
+    node_steals: Vec<AtomicU64>,
+    /// Tasks the submitting thread drained from a queue other than its
+    /// batch's home node. Counted separately from worker steals: the
+    /// caller isn't pinned anywhere, so its cross-node pops are routine
+    /// under healthy load and must not pollute the locality signal.
+    caller_steals: AtomicU64,
 }
 
 impl Shared {
-    fn pop_task(&self) -> Option<Task> {
-        self.queue.lock().unwrap().pop_front()
+    fn pop_from(&self, node: usize) -> Option<Task> {
+        let t = self.queues[node].queue.lock().unwrap().pop_front();
+        if t.is_some() {
+            self.queued.fetch_sub(1, Ordering::Relaxed);
+        }
+        t
+    }
+
+    /// Pop preferring `home`'s queue, then the remaining nodes in
+    /// deterministic wrap order. Returns the task and the node whose queue
+    /// held it.
+    fn pop_task_preferring(&self, home: usize) -> Option<(Task, usize)> {
+        let n = self.queues.len();
+        for i in 0..n {
+            let node = (home + i) % n;
+            if let Some(t) = self.pop_from(node) {
+                return Some((t, node));
+            }
+        }
+        None
+    }
+
+    fn any_queued(&self) -> bool {
+        self.queued.load(Ordering::Relaxed) > 0
+    }
+
+    /// Wake sleeping workers after pushing work (see the `idle` field for
+    /// why the lock is held around the notify).
+    fn signal_work(&self) {
+        let _g = self.idle.lock().unwrap();
+        self.work_cv.notify_all();
     }
 
     /// Run one task, catching panics so the batch completion count is
     /// decremented no matter what (a waiter must never hang, and queued
     /// sibling tasks must never outlive their borrowed buffers — see the
-    /// SAFETY notes in `run_masked`). Returns the panic payload, if any.
+    /// SAFETY notes in `run_placed`). Returns the panic payload, if any.
     fn run_task(&self, task: Task) -> Option<Box<dyn std::any::Any + Send>> {
         let Task { run, batch } = task;
         let t0 = Instant::now();
@@ -200,9 +272,38 @@ impl Shared {
         batch.finish_one();
         result.err()
     }
+
+    /// [`Shared::run_task`] on behalf of a **worker** pinned to `home`,
+    /// counting a cross-node steal when the task came from another node.
+    fn run_for_worker(
+        &self,
+        task: Task,
+        from: usize,
+        home: usize,
+    ) -> Option<Box<dyn std::any::Any + Send>> {
+        if from != home {
+            self.node_steals[home].fetch_add(1, Ordering::Relaxed);
+        }
+        self.run_task(task)
+    }
+
+    /// [`Shared::run_task`] on behalf of the submitting thread
+    /// (caller-assist), counting its cross-node pops separately — they
+    /// are routine, not a locality regression.
+    fn run_for_caller(
+        &self,
+        task: Task,
+        from: usize,
+        home: usize,
+    ) -> Option<Box<dyn std::any::Any + Send>> {
+        if from != home {
+            self.caller_steals.fetch_add(1, Ordering::Relaxed);
+        }
+        self.run_task(task)
+    }
 }
 
-/// Unwind guard for a submission: if `run_masked` unwinds (a caller-assist
+/// Unwind guard for a submission: if `run_placed` unwinds (a caller-assist
 /// task re-raised a panic), this drains and waits out the whole batch
 /// before the caller's stack frame — which the queued tasks borrow — is
 /// torn down. On the normal path the batch is already done and this is a
@@ -210,16 +311,17 @@ impl Shared {
 struct BatchGuard<'p> {
     shared: &'p Shared,
     batch: &'p Arc<BatchState>,
+    home: usize,
 }
 
 impl Drop for BatchGuard<'_> {
     fn drop(&mut self) {
         while !self.batch.is_done() {
-            match self.shared.pop_task() {
+            match self.shared.pop_task_preferring(self.home) {
                 // panics here are already being reported by the unwind in
                 // flight; swallow them to avoid a double-panic abort
-                Some(t) => {
-                    let _ = self.shared.run_task(t);
+                Some((t, from)) => {
+                    let _ = self.shared.run_for_caller(t, from, self.home);
                 }
                 None => break,
             }
@@ -232,6 +334,10 @@ impl Drop for BatchGuard<'_> {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct PoolStats {
     pub workers: usize,
+    /// queues (= topology nodes) the pool is sharded into
+    pub numa_nodes: usize,
+    /// workers whose best-effort CPU-affinity pin succeeded
+    pub pinned_workers: usize,
     /// run_masked calls
     pub submissions: u64,
     /// packed tasks executed (≈ submissions × min(parallelism, jobs))
@@ -240,76 +346,164 @@ pub struct PoolStats {
     pub jobs: u64,
     /// summed task execution time across workers + caller-assist
     pub busy_secs: f64,
-    /// tasks currently queued
+    /// tasks currently queued (across every node)
     pub queue_depth: usize,
-    /// high-water mark of the queue depth at enqueue time
+    /// high-water mark of the total queue depth at enqueue time
     pub queue_peak: usize,
+    /// tasks enqueued per node (len = numa_nodes)
+    pub node_tasks: Vec<u64>,
+    /// tasks node i's **pinned workers** ran from *other* nodes' queues
+    pub node_steals: Vec<u64>,
+    /// tasks the submitting thread drained from queues other than its
+    /// batch's home node (caller-assist is unpinned, so these are routine
+    /// and deliberately excluded from the locality signal)
+    pub caller_assist_cross_node: u64,
 }
 
-/// Persistent worker pool for CPU sparse attention.
+impl PoolStats {
+    /// Total cross-node **worker** executions (the locality-regression
+    /// signal — near 0 under balanced, well-placed load; caller-assist
+    /// drains are counted separately).
+    pub fn cross_node_steals(&self) -> u64 {
+        self.node_steals.iter().sum()
+    }
+}
+
+/// Persistent worker pool for CPU sparse attention, one queue per NUMA
+/// node of its [`Topology`].
 pub struct AttnPool {
     shared: Arc<Shared>,
+    topology: Topology,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
+/// The process-wide pool instance (see [`AttnPool::global`] /
+/// [`AttnPool::init_global`]).
+static GLOBAL: OnceLock<AttnPool> = OnceLock::new();
+
+fn global_workers() -> usize {
+    std::env::var("HGCA_POOL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
 impl AttnPool {
-    /// Spawn a pool with `workers` long-lived threads. Zero workers is
-    /// valid: every submission then runs entirely on the calling thread
-    /// (the caller-assist path), which is the deterministic-latency
-    /// configuration some tests use.
+    /// Spawn a flat (single-node) pool with `workers` long-lived threads.
+    /// Zero workers is valid: every submission then runs entirely on the
+    /// calling thread (the caller-assist path), which is the
+    /// deterministic-latency configuration some tests use.
     pub fn new(workers: usize) -> AttnPool {
+        AttnPool::with_topology(workers, Topology::single())
+    }
+
+    /// Spawn a pool sharded across `topology`'s nodes: one FIFO queue per
+    /// node, workers assigned round-robin (worker *i* homes on node
+    /// `i % nodes`) and best-effort pinned to their node's CPU set
+    /// ([`Topology::pin_current_thread`] — a no-op on synthetic
+    /// topologies). A single-node topology reproduces the original flat
+    /// pool exactly.
+    pub fn with_topology(workers: usize, topology: Topology) -> AttnPool {
+        let nodes = topology.nodes();
         let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
+            queues: (0..nodes)
+                .map(|_| NodeQueue {
+                    queue: Mutex::new(VecDeque::new()),
+                })
+                .collect(),
+            idle: Mutex::new(()),
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            queued: AtomicUsize::new(0),
             counters: Counters::default(),
+            node_tasks: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            node_steals: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+            caller_steals: AtomicU64::new(0),
         });
         let handles = (0..workers)
             .map(|i| {
                 let sh = Arc::clone(&shared);
+                let topo = topology.clone();
+                let home = topo.node_of(i);
                 std::thread::Builder::new()
-                    .name(format!("hgca-attn-{i}"))
-                    .spawn(move || worker_loop(&sh))
+                    .name(format!("hgca-attn-{home}-{i}"))
+                    .spawn(move || {
+                        if topo.pin_current_thread(home) {
+                            sh.counters.pinned_workers.fetch_add(1, Ordering::Relaxed);
+                        }
+                        worker_loop(&sh, home);
+                    })
                     .expect("spawn pool worker")
             })
             .collect();
         AttnPool {
             shared,
+            topology,
             workers: handles,
         }
     }
 
     /// The process-wide pool used by `sparse_attention*`. Sized by
-    /// `HGCA_POOL_THREADS` when set, else `available_parallelism`.
+    /// `HGCA_POOL_THREADS` when set, else `available_parallelism`; sharded
+    /// per [`Topology::detect`] (`HGCA_NUMA_NODES` env override, then
+    /// sysfs, else flat) unless [`AttnPool::init_global`] supplied an
+    /// explicit topology first.
     pub fn global() -> &'static AttnPool {
-        static GLOBAL: OnceLock<AttnPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| AttnPool::with_topology(global_workers(), Topology::detect()))
+    }
+
+    /// Initialize the process-wide pool with an explicit topology (the
+    /// serving binary's `--numa-nodes`, parsed *before* anything touches
+    /// the pool). Returns `false` when the pool was already initialized —
+    /// the topology then came from the first caller's [`Topology::detect`]
+    /// and the explicit one is ignored (callers should surface that).
+    pub fn init_global(topology: Topology) -> bool {
+        let mut initialized = false;
         GLOBAL.get_or_init(|| {
-            let n = std::env::var("HGCA_POOL_THREADS")
-                .ok()
-                .and_then(|v| v.parse::<usize>().ok())
-                .unwrap_or_else(|| {
-                    std::thread::available_parallelism()
-                        .map(|n| n.get())
-                        .unwrap_or(4)
-                });
-            AttnPool::new(n)
-        })
+            initialized = true;
+            AttnPool::with_topology(global_workers(), topology)
+        });
+        initialized
     }
 
     pub fn workers(&self) -> usize {
         self.workers.len()
     }
 
+    /// The topology this pool is sharded over.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
     pub fn stats(&self) -> PoolStats {
         let c = &self.shared.counters;
         PoolStats {
             workers: self.workers.len(),
+            numa_nodes: self.shared.queues.len(),
+            pinned_workers: c.pinned_workers.load(Ordering::Relaxed),
             submissions: c.submissions.load(Ordering::Relaxed),
             tasks: c.tasks.load(Ordering::Relaxed),
             jobs: c.jobs.load(Ordering::Relaxed),
             busy_secs: c.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
-            queue_depth: self.shared.queue.lock().unwrap().len(),
+            queue_depth: self.shared.queued.load(Ordering::Relaxed),
             queue_peak: c.queue_peak.load(Ordering::Relaxed),
+            node_tasks: self
+                .shared
+                .node_tasks
+                .iter()
+                .map(|t| t.load(Ordering::Relaxed))
+                .collect(),
+            node_steals: self
+                .shared
+                .node_steals
+                .iter()
+                .map(|s| s.load(Ordering::Relaxed))
+                .collect(),
+            caller_assist_cross_node: self.shared.caller_steals.load(Ordering::Relaxed),
         }
     }
 
@@ -322,7 +516,7 @@ impl AttnPool {
     ///
     /// This is the submit/wait entry point: the call enqueues one task per
     /// packed job range and blocks until every task has completed (workers
-    /// and the calling thread drain the same queue).
+    /// and the calling thread drain the same queues).
     ///
     /// # Example
     ///
@@ -351,7 +545,7 @@ impl AttnPool {
         want_probs: bool,
         q_valid: Option<&[usize]>,
     ) -> CpuAttnOutput {
-        self.run_split(
+        self.run_placed(
             jobs,
             q,
             n_query,
@@ -359,6 +553,7 @@ impl AttnPool {
             TaskSplit::EvenJobs { max_parallel },
             want_probs,
             q_valid,
+            None,
         )
     }
 
@@ -377,8 +572,34 @@ impl AttnPool {
         want_probs: bool,
         q_valid: Option<&[usize]>,
     ) -> CpuAttnOutput {
+        self.run_placed(jobs, q, n_query, d_head, split, want_probs, q_valid, None)
+    }
+
+    /// [`run_split`](AttnPool::run_split) with an explicit per-job node
+    /// map (the KV shard map): each planned task is enqueued on the queue
+    /// of its **first job's** node (`nodes[start] % numa_nodes` — out-of-
+    /// range nodes wrap, so a shard map built for a wider topology still
+    /// routes deterministically). `None` round-robins tasks across queues
+    /// by task index. Placement changes *which queue runs a task*, never
+    /// the task plan or the numerics — outputs stay bitwise identical to
+    /// every other placement (and to the flat pool).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_placed(
+        &self,
+        jobs: &[HeadJob<'_>],
+        q: &[f32],
+        n_query: usize,
+        d_head: usize,
+        split: TaskSplit,
+        want_probs: bool,
+        q_valid: Option<&[usize]>,
+        nodes: Option<&[NodeId]>,
+    ) -> CpuAttnOutput {
         let nj = jobs.len();
         assert_eq!(q.len(), nj * n_query * d_head, "q layout mismatch");
+        if let Some(map) = nodes {
+            assert_eq!(map.len(), nj, "node map must align with jobs");
+        }
         let mut o = vec![0.0f32; nj * n_query * d_head];
         let mut lse = vec![EMPTY_LSE; nj * n_query];
         let mut probs: Vec<Vec<f32>> = if want_probs {
@@ -400,19 +621,21 @@ impl AttnPool {
         let counts = split.plan(jobs);
         let n_tasks = counts.len();
         let batch = BatchState::new(n_tasks);
+        let nqueues = self.shared.queues.len();
 
         let c = &self.shared.counters;
         c.submissions.fetch_add(1, Ordering::Relaxed);
         c.tasks.fetch_add(n_tasks as u64, Ordering::Relaxed);
         c.jobs.fetch_add(nj as u64, Ordering::Relaxed);
 
+        // the caller assists on the node of the batch's first task
+        let mut home = 0usize;
         {
             let mut o_rest: &mut [f32] = &mut o;
             let mut lse_rest: &mut [f32] = &mut lse;
             let mut probs_rest: &mut [Vec<f32>] = &mut probs;
-            let mut queue = self.shared.queue.lock().unwrap();
             let mut start = 0;
-            for &count in &counts {
+            for (ti, &count) in counts.iter().enumerate() {
                 let (o_task, o_next) = o_rest.split_at_mut(count * n_query * d_head);
                 let (lse_task, lse_next) = lse_rest.split_at_mut(count * n_query);
                 let (p_task, p_next) = if want_probs {
@@ -433,38 +656,51 @@ impl AttnPool {
                     )
                 });
                 // SAFETY: every borrow captured by `run` outlives this call —
-                // run_split blocks on batch completion before returning, so
+                // run_placed blocks on batch completion before returning, so
                 // the 'static promotion never outlives the borrowed data.
                 // Output slices are pairwise disjoint by construction
                 // (split_at_mut), so concurrent tasks never alias.
                 let run: Box<dyn FnOnce() + Send + 'static> =
                     unsafe { std::mem::transmute(run) };
-                queue.push_back(Task {
+                // placement: the first job's node owns the task's slabs;
+                // unplaced submissions spread round-robin by task index
+                let node = match nodes {
+                    Some(map) => map[start] % nqueues,
+                    None => ti % nqueues,
+                };
+                if ti == 0 {
+                    home = node;
+                }
+                // count BEFORE publishing the task: a racing worker's pop
+                // (and its decrement) must never observe a task the counter
+                // hasn't seen, or `queued` wraps below zero
+                let depth = self.shared.queued.fetch_add(1, Ordering::Relaxed) + 1;
+                c.queue_peak.fetch_max(depth, Ordering::Relaxed);
+                self.shared.node_tasks[node].fetch_add(1, Ordering::Relaxed);
+                self.shared.queues[node].queue.lock().unwrap().push_back(Task {
                     run,
                     batch: Arc::clone(&batch),
                 });
                 start += count;
             }
-            let depth = queue.len();
-            c.queue_peak.fetch_max(depth, Ordering::Relaxed);
-            drop(queue);
-            self.shared.work_cv.notify_all();
+            self.shared.signal_work();
         }
 
-        // caller-assist: steal tasks (FIFO, possibly from other concurrent
-        // submissions) until this batch completes, then wait out stragglers.
-        // The guard keeps the unwind path sound: should a re-raised task
-        // panic unwind this frame, it drains + waits the batch before the
-        // borrowed buffers drop.
+        // caller-assist: steal tasks (FIFO per node, own node first,
+        // possibly from other concurrent submissions) until this batch
+        // completes, then wait out stragglers. The guard keeps the unwind
+        // path sound: should a re-raised task panic unwind this frame, it
+        // drains + waits the batch before the borrowed buffers drop.
         let guard = BatchGuard {
             shared: &self.shared,
             batch: &batch,
+            home,
         };
         while !batch.is_done() {
-            let Some(task) = self.shared.pop_task() else {
+            let Some((task, from)) = self.shared.pop_task_preferring(home) else {
                 break;
             };
-            if let Some(payload) = self.shared.run_task(task) {
+            if let Some(payload) = self.shared.run_for_caller(task, from, home) {
                 // a task the *caller* ran panicked: propagate to the caller
                 // (the guard settles the rest of the batch first)
                 std::panic::resume_unwind(payload);
@@ -492,33 +728,39 @@ impl AttnPool {
 impl Drop for AttnPool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.work_cv.notify_all();
+        self.shared.signal_work();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker_loop(sh: &Shared) {
+fn worker_loop(sh: &Shared, home: usize) {
     loop {
-        let task = {
-            let mut queue = sh.queue.lock().unwrap();
-            loop {
-                if sh.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                if let Some(t) = queue.pop_front() {
-                    break t;
-                }
-                queue = sh.work_cv.wait(queue).unwrap();
-            }
-        };
-        // a panicking task must not kill the worker or strand its batch;
-        // run_task catches, completes the batch slot, and hands back the
-        // payload — report it and keep serving
-        if sh.run_task(task).is_some() {
-            eprintln!("hgca attention pool: task panicked (batch slot completed, worker continues)");
+        if sh.shutdown.load(Ordering::SeqCst) {
+            return;
         }
+        if let Some((task, from)) = sh.pop_task_preferring(home) {
+            // a panicking task must not kill the worker or strand its
+            // batch; run_task catches, completes the batch slot, and hands
+            // back the payload — report it and keep serving
+            if sh.run_for_worker(task, from, home).is_some() {
+                eprintln!(
+                    "hgca attention pool: task panicked (batch slot completed, worker continues)"
+                );
+            }
+            continue;
+        }
+        // sleep path: re-check the queued count under the idle lock so a
+        // producer's push + notify cannot slip between check and wait
+        let guard = sh.idle.lock().unwrap();
+        if sh.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if sh.any_queued() {
+            continue; // guard drops; rescan the queues
+        }
+        drop(sh.work_cv.wait(guard).unwrap());
     }
 }
 
@@ -578,6 +820,100 @@ mod tests {
     }
 
     #[test]
+    fn sharded_pool_bitwise_matches_flat_for_every_topology() {
+        // the tentpole conformance: topology is a pure placement change —
+        // same tasks, same disjoint writes, bitwise-identical output
+        let mut rng = Rng::new(0xD44);
+        let dh = 16;
+        let kvs = rand_jobs(&mut rng, 12, dh, 40);
+        let jobs = as_jobs(&kvs);
+        let mut q = vec![0.0; jobs.len() * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let flat = AttnPool::new(2).run_masked(&jobs, &q, 1, dh, 4, true, None);
+        for nodes in [1usize, 2, 4] {
+            for workers in [0usize, 3] {
+                let pool = AttnPool::with_topology(workers, Topology::synthetic(nodes));
+                // shard map like the KV store's: head h → (h % nodes)
+                let map: Vec<usize> = (0..jobs.len()).map(|j| j % nodes).collect();
+                let out = pool.run_placed(
+                    &jobs,
+                    &q,
+                    1,
+                    dh,
+                    TaskSplit::EvenJobs { max_parallel: 4 },
+                    true,
+                    None,
+                    Some(&map),
+                );
+                assert_eq!(out.o, flat.o, "nodes={nodes} workers={workers}");
+                assert_eq!(out.lse, flat.lse, "nodes={nodes} workers={workers}");
+                assert_eq!(out.probs, flat.probs, "nodes={nodes} workers={workers}");
+                assert_eq!(out.tasks, flat.tasks, "plan must not depend on topology");
+            }
+        }
+    }
+
+    #[test]
+    fn placed_tasks_land_on_their_nodes_and_caller_drains_count_separately() {
+        // zero workers: the caller (homed on the first task's node, 0)
+        // drains everything — node 1's tasks are deterministic cross-node
+        // caller-assist pops, which must NOT register as worker steals
+        // (the locality signal stays 0 for a healthy submit/assist cycle)
+        let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..4)
+            .map(|_| (vec![0.0; 8 * 4], vec![0.0; 8 * 4], 8))
+            .collect();
+        let jobs = as_jobs(&kvs);
+        let q = vec![0.0; jobs.len() * 4];
+        let pool = AttnPool::with_topology(0, Topology::synthetic(2));
+        let map = [0usize, 0, 1, 1];
+        let out = pool.run_placed(
+            &jobs,
+            &q,
+            1,
+            4,
+            TaskSplit::EvenJobs { max_parallel: 4 },
+            false,
+            None,
+            Some(&map),
+        );
+        assert_eq!(out.tasks, 4);
+        let s = pool.stats();
+        assert_eq!(s.numa_nodes, 2);
+        assert_eq!(s.node_tasks, vec![2, 2], "tasks routed per the shard map");
+        assert_eq!(s.node_steals, vec![0, 0], "no pinned worker stole anything");
+        assert_eq!(s.cross_node_steals(), 0, "locality signal clean under caller-assist");
+        assert_eq!(s.caller_assist_cross_node, 2, "caller's off-home pops counted apart");
+        assert_eq!(s.queue_depth, 0);
+    }
+
+    #[test]
+    fn out_of_range_nodes_wrap_and_unplaced_tasks_round_robin() {
+        let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..4)
+            .map(|_| (vec![0.0; 4 * 4], vec![0.0; 4 * 4], 4))
+            .collect();
+        let jobs = as_jobs(&kvs);
+        let q = vec![0.0; jobs.len() * 4];
+        // a shard map built for a 4-node topology routed into a 2-node pool
+        let pool = AttnPool::with_topology(0, Topology::synthetic(2));
+        let map = [2usize, 2, 7, 7]; // wraps to nodes 0, 0, 1, 1
+        pool.run_placed(
+            &jobs,
+            &q,
+            1,
+            4,
+            TaskSplit::EvenJobs { max_parallel: 4 },
+            false,
+            None,
+            Some(&map),
+        );
+        assert_eq!(pool.stats().node_tasks, vec![2, 2]);
+        // unplaced submissions spread across queues by task index
+        let pool2 = AttnPool::with_topology(0, Topology::synthetic(2));
+        pool2.run_masked(&jobs, &q, 1, 4, 4, false, None);
+        assert_eq!(pool2.stats().node_tasks, vec![2, 2]);
+    }
+
+    #[test]
     fn pool_matches_spawn_path_bitwise() {
         let mut rng = Rng::new(0xB22);
         let dh = 8;
@@ -617,9 +953,12 @@ mod tests {
         pool.run_masked(&jobs, &q, 1, dh, 6, false, None);
         let s = pool.stats();
         assert_eq!(s.workers, 2);
+        assert_eq!(s.numa_nodes, 1);
         assert_eq!(s.submissions, 2);
         assert_eq!(s.jobs, 12);
         assert_eq!(s.tasks, 3 + 6);
+        assert_eq!(s.node_tasks, vec![3 + 6], "single node owns every task");
+        assert_eq!(s.node_steals, vec![0], "nothing to steal across one node");
         assert_eq!(s.queue_depth, 0, "queue drains after completion");
         assert!(s.queue_peak >= 1);
     }
@@ -628,7 +967,7 @@ mod tests {
     fn shared_pool_across_threads() {
         // concurrent submissions from several engine threads interleave
         // safely and each caller gets its own correct outputs
-        let pool = std::sync::Arc::new(AttnPool::new(3));
+        let pool = std::sync::Arc::new(AttnPool::with_topology(3, Topology::synthetic(2)));
         let mut handles = Vec::new();
         for seed in 0..4u64 {
             let pool = std::sync::Arc::clone(&pool);
@@ -651,9 +990,19 @@ mod tests {
                     .collect();
                 let mut q = vec![0.0; jobs.len() * dh];
                 rng.fill_normal(&mut q, 1.0);
+                let nodes: Vec<usize> = (0..jobs.len()).map(|j| j % 2).collect();
                 let single = sparse_attention_spawn_masked(&jobs, &q, 1, dh, 1, false, None);
                 for _ in 0..16 {
-                    let out = pool.run_masked(&jobs, &q, 1, dh, 4, false, None);
+                    let out = pool.run_placed(
+                        &jobs,
+                        &q,
+                        1,
+                        dh,
+                        TaskSplit::EvenJobs { max_parallel: 4 },
+                        false,
+                        None,
+                        Some(&nodes),
+                    );
                     assert_eq!(out.o, single.o);
                     assert_eq!(out.lse, single.lse);
                 }
@@ -765,6 +1114,42 @@ mod tests {
                 ensure(
                     out.o == reference.o && out.lse == reference.lse,
                     "pool output must be bitwise identical to the reference",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sharded_pool_matches_reference_across_topologies() {
+        // random shapes × random shard maps: placement never touches bits
+        let pools: Vec<AttnPool> = [1usize, 2, 4]
+            .iter()
+            .map(|&n| AttnPool::with_topology(2, Topology::synthetic(n)))
+            .collect();
+        check("sharded_pool_vs_reference", 12, |rng: &mut Rng| {
+            let dh = *rng.choice(&[4usize, 8]);
+            let nj = rng.range(1, 16);
+            let kvs = rand_jobs(rng, nj, dh, 24);
+            let jobs = as_jobs(&kvs);
+            let mut q = vec![0.0; nj * dh];
+            rng.fill_normal(&mut q, 1.0);
+            let map: Vec<usize> = (0..nj).map(|_| rng.range(0, 4)).collect();
+            let reference = sparse_attention_spawn_masked(&jobs, &q, 1, dh, 1, false, None);
+            for pool in &pools {
+                let out = pool.run_placed(
+                    &jobs,
+                    &q,
+                    1,
+                    dh,
+                    TaskSplit::EvenJobs { max_parallel: 3 },
+                    false,
+                    None,
+                    Some(&map),
+                );
+                ensure(
+                    out.o == reference.o && out.lse == reference.lse,
+                    "sharded pool output must be bitwise identical to the reference",
                 )?;
             }
             Ok(())

@@ -137,6 +137,44 @@ impl ServingConfig {
         })
     }
 
+    /// Split [`ServingConfig::effective_kv_blocks`] into one hard budget
+    /// per NUMA node, in **whole-sequence units**: the capacity's
+    /// `total / blocks_per_seq` lease slots are dealt round-robin to the
+    /// lowest node ids first, then any sub-lease remainder blocks are
+    /// spread evenly (deterministic; the budgets sum exactly to the
+    /// total). Distributing raw blocks instead would strand a sub-lease
+    /// remainder on *every* node whenever `nodes` does not divide the slot
+    /// count — e.g. 192 blocks (6 × 32-block sequences) over 4 nodes as
+    /// `[48, 48, 48, 48]` admits only 4 sequences; the slot-wise split
+    /// `[64, 64, 32, 32]` admits all 6, keeping the documented
+    /// "headroom 1.0 = exactly one full batch" guarantee on every
+    /// topology. A one-node topology yields `[total]` — the pre-NUMA
+    /// single-capacity pool, bit for bit. With fewer slots than nodes,
+    /// the tail nodes hold only remainder blocks and never receive a
+    /// lease; if *no* node can hold one, requests are rejected as
+    /// never-fitting (leases never span nodes).
+    pub fn effective_node_budgets(
+        &self,
+        blocks_per_seq: usize,
+        batch_rows: usize,
+        nodes: usize,
+    ) -> Vec<usize> {
+        let nodes = nodes.max(1);
+        let total = self.effective_kv_blocks(blocks_per_seq, batch_rows);
+        let bps = blocks_per_seq.max(1);
+        let slots = total / bps;
+        let leftover = total - slots * bps;
+        let (slot_base, slot_rem) = (slots / nodes, slots % nodes);
+        let (left_base, left_rem) = (leftover / nodes, leftover % nodes);
+        (0..nodes)
+            .map(|i| {
+                (slot_base + usize::from(i < slot_rem)) * bps
+                    + left_base
+                    + usize::from(i < left_rem)
+            })
+            .collect()
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         if let Some(w) = self.shed_watermark {
             anyhow::ensure!(w > 0, "shed watermark must be positive");
@@ -216,6 +254,48 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(tiny.effective_kv_blocks(1, 1), 1);
+    }
+
+    #[test]
+    fn node_budgets_split_the_effective_capacity() {
+        let c = ServingConfig::default();
+        // one node: the single-capacity pool, exactly
+        assert_eq!(c.effective_node_budgets(32, 4, 1), vec![128]);
+        // even split
+        assert_eq!(c.effective_node_budgets(32, 4, 2), vec![64, 64]);
+        assert_eq!(c.effective_node_budgets(32, 4, 4), vec![32; 4]);
+        // slot remainders go to the lowest node ids, sum is exact
+        let c = ServingConfig {
+            kv_blocks: Some(10),
+            ..Default::default()
+        };
+        assert_eq!(c.effective_node_budgets(1, 1, 4), vec![3, 3, 2, 2]);
+        assert_eq!(c.effective_node_budgets(1, 1, 4).iter().sum::<usize>(), 10);
+        // zero-node input is clamped to one
+        assert_eq!(c.effective_node_budgets(1, 1, 0), vec![10]);
+    }
+
+    #[test]
+    fn node_budgets_deal_whole_sequence_slots_not_raw_blocks() {
+        // batch 6 × 32 blocks over 4 nodes: a raw even split ([48; 4])
+        // would fit only one lease per node (4 of 6 rows admissible, 64
+        // blocks stranded); dealing slots keeps the full batch admissible
+        let c = ServingConfig::default();
+        let budgets = c.effective_node_budgets(32, 6, 4);
+        assert_eq!(budgets, vec![64, 64, 32, 32]);
+        assert_eq!(budgets.iter().sum::<usize>(), 192);
+        assert_eq!(
+            budgets.iter().map(|b| b / 32).sum::<usize>(),
+            6,
+            "every slot of the full batch must be admissible somewhere"
+        );
+        // capacity below one lease: nothing fits anywhere (never-fits),
+        // but the accounting still sums to the configured total
+        let tiny = ServingConfig {
+            kv_blocks: Some(10),
+            ..Default::default()
+        };
+        assert_eq!(tiny.effective_node_budgets(32, 1, 2), vec![5, 5]);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::metrics::{Metrics, Timer};
 use crate::model::Sampler;
 use crate::runtime::{Executor, ModelRuntime};
 use crate::simulator::Testbed;
+use crate::topology::{NodeId, Topology};
 use crate::util::rng::Rng;
 
 use super::strategy::Policy;
@@ -34,12 +35,28 @@ pub struct Sequence {
 }
 
 impl Sequence {
-    /// A fresh sequence holding `prompt` as pending tokens.
+    /// A fresh sequence holding `prompt` as pending tokens (flat
+    /// single-node placement).
     pub fn new(id: u64, prompt: &[u8], model: &ModelConfig, cfg: &HgcaConfig) -> Sequence {
+        Sequence::new_on(id, prompt, model, cfg, &Topology::single(), 0)
+    }
+
+    /// [`Sequence::new`] **placed on `node`** of `topo`: the KV manager
+    /// anchors its head shard map there and the scheduler leases the GPU
+    /// window blocks from that node's budget, so the sequence's CPU jobs
+    /// and GPU lease share a memory domain end to end.
+    pub fn new_on(
+        id: u64,
+        prompt: &[u8],
+        model: &ModelConfig,
+        cfg: &HgcaConfig,
+        topo: &Topology,
+        node: NodeId,
+    ) -> Sequence {
         Sequence {
             id,
             tokens: prompt.to_vec(),
-            kv: KvManager::new(model, cfg),
+            kv: KvManager::new_on(model, cfg, topo, node),
             processed: 0,
         }
     }
@@ -75,9 +92,16 @@ pub struct Engine<'m> {
     /// lifecycle cancellation), so reclamation is observable
     /// (`kv_blocks_in_use` / `kv_blocks_reclaimed` on `/v1/metrics`).
     /// Unbounded by default; the serving loop bounds it via
-    /// [`Engine::set_kv_block_capacity`] so admission gates on actual KV
-    /// availability.
+    /// [`Engine::set_kv_block_capacity`] / [`Engine::set_kv_node_budgets`]
+    /// so admission gates on actual KV availability.
     pub kv_pool: Arc<GpuBlockPool>,
+    /// NUMA execution domains this engine places sequences over: the
+    /// home-node choice at admission, the per-head shard maps, and the
+    /// per-node KV budgets all derive from it. Defaults to the flat
+    /// single-node topology (standalone engines behave exactly as before
+    /// the NUMA refactor); `hgca serve` sets it from `--numa-nodes` /
+    /// detection via [`Engine::set_topology`].
+    pub topology: Topology,
     /// scratch: batch window staging buffers, reused across steps
     k_win: Vec<f32>,
     v_win: Vec<f32>,
@@ -96,6 +120,7 @@ impl<'m> Engine<'m> {
             metrics: Metrics::new(),
             rng: Rng::new(0x48474341),
             kv_pool: Arc::new(GpuBlockPool::new()),
+            topology: Topology::single(),
             k_win: Vec::new(),
             v_win: Vec::new(),
         }
@@ -143,25 +168,52 @@ impl<'m> Engine<'m> {
         });
     }
 
+    /// Replace [`Engine::kv_pool`] with a fresh pool whose capacity is
+    /// split into **per-node budgets** (`budgets[i]` blocks on node `i` —
+    /// normally [`crate::config::ServingConfig::effective_node_budgets`]
+    /// over [`Engine::topology`]). Same before-any-sequence caveat as
+    /// [`Engine::set_kv_block_capacity`]; a one-element budget list is
+    /// exactly that method.
+    pub fn set_kv_node_budgets(&mut self, budgets: Vec<usize>) {
+        self.kv_pool = Arc::new(GpuBlockPool::with_node_budgets(budgets));
+    }
+
+    /// Set the NUMA topology sequences are placed over. Call **before**
+    /// any sequence exists (placement is recorded per sequence at
+    /// construction) and pair with matching pool budgets
+    /// ([`Engine::set_kv_node_budgets`]).
+    pub fn set_topology(&mut self, topology: Topology) {
+        self.topology = topology;
+    }
+
     /// A fresh [`Sequence`] sized for this engine's model + config, with
     /// its GPU window blocks force-leased from [`Engine::kv_pool`]
-    /// (bypasses any capacity bound — standalone generation paths).
-    /// Capacity-gated admission uses [`Engine::try_new_sequence`].
+    /// (bypasses any capacity bound — standalone generation paths; placed
+    /// on node 0). Capacity-gated, placement-aware admission uses
+    /// [`Engine::try_new_sequence`].
     pub fn new_sequence(&self, id: u64, prompt: &[u8]) -> Sequence {
-        let mut seq = Sequence::new(id, prompt, &self.mr.cfg, &self.cfg);
+        let mut seq = Sequence::new_on(id, prompt, &self.mr.cfg, &self.cfg, &self.topology, 0);
         seq.kv.lease_from(&self.kv_pool);
         seq
     }
 
-    /// [`Engine::new_sequence`] gated on KV availability: the window
-    /// blocks are acquired via [`GpuBlockPool::try_acquire`] *first*, and
-    /// `None` is returned — nothing allocated — when they do not fit under
-    /// the pool's capacity. This is the batcher's admission path: a
-    /// request whose blocks don't fit waits in the queue instead of
-    /// joining the batch.
+    /// [`Engine::new_sequence`] gated on KV availability and
+    /// **placement-aware**: the blocks are acquired *first* via the
+    /// pool's placement-resolving [`GpuBlockPool::try_acquire`] (the
+    /// least-loaded node whose budget holds the whole lease, deterministic
+    /// tie-break by node id), and `None` is returned — nothing allocated —
+    /// when no node currently fits them. The sequence is then built **on
+    /// the lease's node**: its head shard map and its GPU lease share the
+    /// memory domain end to end. This is the batcher's admission path: a
+    /// request whose blocks don't fit anywhere waits in the queue instead
+    /// of joining the batch.
     pub fn try_new_sequence(&self, id: u64, prompt: &[u8]) -> Option<Sequence> {
+        // the pool's placement-resolving acquire retries internally, so a
+        // concurrent acquirer racing the picked node away cannot turn a
+        // still-placeable request into a spurious deferral
         let lease = self.kv_pool.try_acquire(self.blocks_per_sequence())?;
-        let mut seq = Sequence::new(id, prompt, &self.mr.cfg, &self.cfg);
+        let node = lease.node();
+        let mut seq = Sequence::new_on(id, prompt, &self.mr.cfg, &self.cfg, &self.topology, node);
         seq.kv.attach_lease(lease);
         Some(seq)
     }
@@ -223,6 +275,19 @@ impl<'m> Engine<'m> {
         let s_total = w + n;
         self.k_win.resize(batch * h_n * w * dh, 0.0);
         self.v_win.resize(batch * h_n * w * dh, 0.0);
+        // per-job NUMA node map for the CPU-side dispatch (the sequences'
+        // head shard maps + node-0 padding rows): layer-invariant, so build
+        // it once for the whole step instead of once per layer
+        let job_nodes: Vec<NodeId> = if self.policy.uses_cpu_side() {
+            let mut map = Vec::with_capacity(batch * h_n);
+            for seq in seqs.iter() {
+                map.extend_from_slice(seq.kv.shard());
+            }
+            map.resize(batch * h_n, 0);
+            map
+        } else {
+            Vec::new()
+        };
         for li in 0..model.n_layers {
             // eviction (Algorithm 1 lines 10–14) + window staging
             let mut win_len = vec![0i32; batch];
@@ -358,7 +423,10 @@ impl<'m> Engine<'m> {
             let mut lse_gpu = out.lse;
             if self.policy.uses_cpu_side() {
                 // gather per-(row, head) jobs; on append attend the FULL
-                // store so re-evaluation sees complete scores (§3.2.2)
+                // store so re-evaluation sees complete scores (§3.2.2).
+                // `job_nodes` (built once above) aligns with this gather:
+                // the pool dispatches each packed task to the queue owning
+                // its slabs — placement only, never numerics
                 let mut gathered: Vec<(Vec<f32>, Vec<f32>, usize)> = Vec::with_capacity(batch * h_n);
                 for (b, seq) in seqs.iter().enumerate() {
                     let store = &seq.kv.layers[li].cpu;
@@ -397,7 +465,7 @@ impl<'m> Engine<'m> {
                     // re-evaluation, or a full-offload-style policy): size
                     // the task split by store length, not the decode
                     // parallelism cap (pool-aware split)
-                    crate::attention::cpu_attention::sparse_attention_append(
+                    crate::attention::cpu_attention::sparse_attention_append_placed(
                         &jobs,
                         &out.q,
                         n,
@@ -406,10 +474,18 @@ impl<'m> Engine<'m> {
                         self.cfg.cpu_threads.saturating_mul(4).max(1),
                         is_append,
                         Some(&q_valid),
+                        &job_nodes,
                     )
                 } else {
-                    crate::attention::cpu_attention::sparse_attention_masked(
-                        &jobs, &out.q, n, dh, self.cfg.cpu_threads, is_append, Some(&q_valid),
+                    crate::attention::cpu_attention::sparse_attention_masked_placed(
+                        &jobs,
+                        &out.q,
+                        n,
+                        dh,
+                        self.cfg.cpu_threads,
+                        is_append,
+                        Some(&q_valid),
+                        &job_nodes,
                     )
                 };
                 self.metrics

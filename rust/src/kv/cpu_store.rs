@@ -14,6 +14,8 @@
 //! arrangement enables efficient parallel CPU attention), with MAW
 //! re-normalized to sum to 1 per head.
 
+use crate::topology::NodeId;
+
 use super::block::KvBlock;
 
 /// Per-head growable KV arrays.
@@ -61,6 +63,14 @@ impl HeadCtx {
 /// The CPU half of one layer's KV state: every evicted entry per head
 /// (`full`) plus the contiguous selected subset (`ctx`) the sparse
 /// attention actually reads.
+///
+/// Head slabs are **sharded across NUMA nodes**: `node_of[h]` names the
+/// node that owns head `h`'s slabs (round-robined by the topology's shard
+/// map — see [`crate::topology::Topology::shard_heads`]), so the engine
+/// can dispatch each head's `sparse_attention*` job to the worker queue
+/// whose pinned workers read the slab from local memory. The map is
+/// placement metadata: slab *contents* and selection numerics are
+/// identical on every topology (a flat store maps every head to node 0).
 #[derive(Debug, Clone)]
 pub struct CpuLayerStore {
     /// Attention heads.
@@ -71,17 +81,34 @@ pub struct CpuLayerStore {
     pub full: Vec<HeadStore>,
     /// Per-head contextual cache (the β-selected working set).
     pub ctx: Vec<HeadCtx>,
+    /// Per-head owning NUMA node (len == `heads`; all 0 when flat).
+    pub node_of: Vec<NodeId>,
 }
 
 impl CpuLayerStore {
-    /// An empty store for `heads` heads.
+    /// An empty flat store for `heads` heads (every slab on node 0 — the
+    /// single-domain layout every pre-NUMA caller gets).
     pub fn new(heads: usize, d_head: usize) -> Self {
+        CpuLayerStore::new_sharded(heads, d_head, vec![0; heads])
+    }
+
+    /// An empty store whose head slabs are sharded per `node_of`
+    /// (`node_of[h]` = the NUMA node owning head `h`'s slabs). Panics when
+    /// the map length does not match `heads`.
+    pub fn new_sharded(heads: usize, d_head: usize, node_of: Vec<NodeId>) -> Self {
+        assert_eq!(node_of.len(), heads, "shard map must cover every head");
         CpuLayerStore {
             heads,
             d_head,
             full: (0..heads).map(|_| HeadStore::default()).collect(),
             ctx: (0..heads).map(|_| HeadCtx::default()).collect(),
+            node_of,
         }
+    }
+
+    /// The NUMA node owning head `h`'s slabs.
+    pub fn node_of_head(&self, h: usize) -> NodeId {
+        self.node_of[h]
     }
 
     /// Entries per head (identical across heads — eviction is whole-block).
@@ -291,6 +318,28 @@ mod tests {
         assert!(s.ctx[0].is_empty());
         s.reevaluate(&vec![0.0, 0.0], 1.0);
         assert_eq!(s.len(), 2); // still retrievable later
+    }
+
+    #[test]
+    fn sharded_store_records_head_placement_without_changing_selection() {
+        let blk = blk_with_maw(2, 2, &[&[0.3, 0.1, 0.5], &[0.01, 0.02, 0.03]]);
+        let mut flat = CpuLayerStore::new(2, 2);
+        let mut sharded = CpuLayerStore::new_sharded(2, 2, vec![1, 0]);
+        flat.add_evicted(&blk, 1.0, 4);
+        sharded.add_evicted(&blk, 1.0, 4);
+        assert_eq!(flat.node_of, vec![0, 0]);
+        assert_eq!(sharded.node_of_head(0), 1);
+        assert_eq!(sharded.node_of_head(1), 0);
+        // placement metadata only: selection + slab contents identical
+        assert_eq!(flat.ctx[0].idx, sharded.ctx[0].idx);
+        assert_eq!(flat.ctx[0].k, sharded.ctx[0].k);
+        assert_eq!(flat.full[1].maw, sharded.full[1].maw);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shard_map_must_cover_every_head() {
+        CpuLayerStore::new_sharded(4, 2, vec![0, 1]);
     }
 
     #[test]

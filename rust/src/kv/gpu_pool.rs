@@ -13,9 +13,11 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
+use crate::topology::NodeId;
+
 use super::block::KvBlock;
 
-/// Pool of GPU KV blocks with an optional hard capacity.
+/// Pool of GPU KV blocks with optional **per-NUMA-node** hard budgets.
 ///
 /// Every [`crate::engine::Sequence`] leases its per-layer window blocks
 /// (`n_layers × blk_num`) from its engine's pool at creation and returns
@@ -24,14 +26,19 @@ use super::block::KvBlock;
 /// free-count is restored and `reclaimed_blocks` advances the moment a
 /// row is retired mid-batch.
 ///
-/// A pool built with [`GpuBlockPool::with_capacity`] is the admission
-/// currency of the scheduler (docs/SCHEDULING.md): [`GpuBlockPool::try_acquire`]
-/// fails once the capacity is exhausted, and the continuous batcher defers
-/// admission until enough blocks are reclaimed. A default pool
-/// ([`GpuBlockPool::new`]) is unbounded and purely accounting, which is
-/// what standalone engines (`hgca generate`, `ppl`, the benches) use. The
-/// backing buffers live in [`GpuLayerCache`]; on real hardware the pool
-/// would own the device allocator free list.
+/// A pool built with [`GpuBlockPool::with_capacity`] (one budget) or
+/// [`GpuBlockPool::with_node_budgets`] (one budget per topology node) is
+/// the admission currency of the scheduler (docs/SCHEDULING.md):
+/// [`GpuBlockPool::try_acquire_on`] fails once its node's budget is
+/// exhausted, and the continuous batcher defers admission until enough
+/// blocks are reclaimed — placement picks the least-loaded node that can
+/// hold the lease ([`GpuBlockPool::pick_node`], deterministic tie-break by
+/// node id). A default pool ([`GpuBlockPool::new`]) is unbounded and
+/// purely accounting (one implicit node), which is what standalone
+/// engines (`hgca generate`, `ppl`, the benches) use. A single-budget pool
+/// behaves exactly like the pre-NUMA capacity pool. The backing buffers
+/// live in [`GpuLayerCache`]; on real hardware each budget would own one
+/// NUMA node's share of the device allocator free list.
 ///
 /// Acquire / fail / release under a capacity-1 pool:
 ///
@@ -48,79 +55,177 @@ use super::block::KvBlock;
 /// assert!(pool.try_acquire(1).is_some(), "reclaimed blocks admit again");
 /// assert!(pool.try_acquire(2).is_none(), "larger than capacity: can never fit");
 /// ```
-#[derive(Debug, Default)]
+///
+/// Placement across two node budgets:
+///
+/// ```
+/// use std::sync::Arc;
+/// use hgca::kv::GpuBlockPool;
+///
+/// let pool = Arc::new(GpuBlockPool::with_node_budgets(vec![4, 4]));
+/// assert_eq!(pool.pick_node(4), Some(0), "equal free → lowest node id");
+/// let a = pool.try_acquire_on(0, 4).expect("node 0 fits");
+/// assert_eq!(pool.pick_node(4), Some(1), "node 0 full → node 1");
+/// assert_eq!(pool.pick_node(5), None, "no node can hold 5 — defer");
+/// assert_eq!(a.node(), 0);
+/// drop(a);
+/// assert_eq!(pool.free_blocks_on(0), Some(4));
+/// ```
+#[derive(Debug)]
 pub struct GpuBlockPool {
-    capacity: Option<usize>,
-    in_use: AtomicUsize,
+    /// Per-node hard budgets; empty = unbounded single-domain pool.
+    budgets: Vec<usize>,
+    /// Per-node blocks leased (always ≥ 1 entry; unbounded pools use one).
+    in_use: Vec<AtomicUsize>,
     acquired: AtomicU64,
     reclaimed: AtomicU64,
 }
 
+impl Default for GpuBlockPool {
+    fn default() -> Self {
+        GpuBlockPool::new()
+    }
+}
+
 impl GpuBlockPool {
     /// An empty **unbounded** pool (no blocks outstanding, acquisition
-    /// never fails — pure accounting).
+    /// never fails — pure accounting, one implicit node).
     pub fn new() -> GpuBlockPool {
-        GpuBlockPool::default()
-    }
-
-    /// An empty pool with a hard capacity of `blocks`:
-    /// [`GpuBlockPool::try_acquire`] fails once `in_use + requested`
-    /// would exceed it.
-    pub fn with_capacity(blocks: usize) -> GpuBlockPool {
         GpuBlockPool {
-            capacity: Some(blocks),
-            ..GpuBlockPool::default()
+            budgets: Vec::new(),
+            in_use: vec![AtomicUsize::new(0)],
+            acquired: AtomicU64::new(0),
+            reclaimed: AtomicU64::new(0),
         }
     }
 
-    /// The hard capacity, or `None` for an unbounded (accounting-only)
-    /// pool.
-    pub fn capacity(&self) -> Option<usize> {
-        self.capacity
+    /// An empty single-node pool with a hard capacity of `blocks`:
+    /// [`GpuBlockPool::try_acquire`] fails once `in_use + requested`
+    /// would exceed it. Identical to `with_node_budgets(vec![blocks])`.
+    pub fn with_capacity(blocks: usize) -> GpuBlockPool {
+        GpuBlockPool::with_node_budgets(vec![blocks])
     }
 
-    /// Blocks currently free under the capacity (`None` when unbounded).
+    /// An empty pool whose capacity is split into one hard budget per
+    /// NUMA node: node `i` owns `budgets[i]` blocks and leases placed on
+    /// it never spill into another node's budget. Panics on an empty
+    /// budget list (an unbounded pool is [`GpuBlockPool::new`]).
+    pub fn with_node_budgets(budgets: Vec<usize>) -> GpuBlockPool {
+        assert!(!budgets.is_empty(), "a bounded pool needs ≥ 1 node budget");
+        let in_use = budgets.iter().map(|_| AtomicUsize::new(0)).collect();
+        GpuBlockPool {
+            budgets,
+            in_use,
+            acquired: AtomicU64::new(0),
+            reclaimed: AtomicU64::new(0),
+        }
+    }
+
+    /// Memory domains this pool is split into (1 for unbounded and
+    /// single-capacity pools).
+    pub fn nodes(&self) -> usize {
+        self.in_use.len()
+    }
+
+    /// The total hard capacity (sum of node budgets), or `None` for an
+    /// unbounded (accounting-only) pool.
+    pub fn capacity(&self) -> Option<usize> {
+        (!self.budgets.is_empty()).then(|| self.budgets.iter().sum())
+    }
+
+    /// Node `node`'s hard budget (`None` when unbounded or out of range).
+    pub fn capacity_on(&self, node: NodeId) -> Option<usize> {
+        self.budgets.get(node).copied()
+    }
+
+    /// The largest single-node budget — the biggest lease any request can
+    /// ever hold, since a lease never spans nodes. This (not the total
+    /// capacity) is what a never-fits check must key on. `None` when
+    /// unbounded.
+    pub fn max_node_capacity(&self) -> Option<usize> {
+        self.budgets.iter().copied().max()
+    }
+
+    /// Blocks currently free across all budgets (`None` when unbounded).
     /// Saturates at 0 if force-[`acquire`](GpuBlockPool::acquire)s
     /// oversubscribed the pool.
     pub fn free_blocks(&self) -> Option<usize> {
-        self.capacity.map(|c| c.saturating_sub(self.in_use()))
+        self.capacity().map(|c| c.saturating_sub(self.in_use()))
     }
 
-    /// Lease `blocks` blocks from the pool **unconditionally**, bypassing
-    /// any capacity bound. The lease returns them when dropped (RAII —
+    /// Blocks currently free under node `node`'s budget (`None` when
+    /// unbounded or out of range). Saturates at 0 under force-acquires.
+    pub fn free_blocks_on(&self, node: NodeId) -> Option<usize> {
+        self.budgets
+            .get(node)
+            .map(|&c| c.saturating_sub(self.in_use_on(node)))
+    }
+
+    /// The node a new lease of `blocks` should draw from: the node with
+    /// the **most free blocks** that can hold the whole lease, ties broken
+    /// by the lowest node id (deterministic — the conformance suite pins
+    /// this). `None` when no node currently fits (the caller defers).
+    /// Unbounded pools always place on node 0.
+    pub fn pick_node(&self, blocks: usize) -> Option<NodeId> {
+        if self.budgets.is_empty() {
+            return Some(0);
+        }
+        let mut best: Option<(usize, NodeId)> = None;
+        for node in 0..self.budgets.len() {
+            let free = self.free_blocks_on(node).unwrap_or(0);
+            let improves = match best {
+                None => true,
+                // strict '>' keeps the lowest node id on equal free counts
+                Some((best_free, _)) => free > best_free,
+            };
+            if free >= blocks && improves {
+                best = Some((free, node));
+            }
+        }
+        best.map(|(_, node)| node)
+    }
+
+    /// Lease `blocks` blocks from node `node` **unconditionally**,
+    /// bypassing the budget. The lease returns them when dropped (RAII —
     /// retiring a sequence is the release). Capacity-gated callers (the
-    /// batcher's admission path) use [`GpuBlockPool::try_acquire`]; this
-    /// force path exists for unbounded pools and for cloning leases
+    /// batcher's admission path) use [`GpuBlockPool::try_acquire_on`];
+    /// this force path exists for unbounded pools and for cloning leases
     /// (`Clone` cannot fail, so it must bypass the bound).
-    pub fn acquire(self: &Arc<Self>, blocks: usize) -> BlockLease {
-        self.in_use.fetch_add(blocks, Ordering::AcqRel);
+    pub fn acquire_on(self: &Arc<Self>, node: NodeId, blocks: usize) -> BlockLease {
+        let node = node % self.nodes();
+        self.in_use[node].fetch_add(blocks, Ordering::AcqRel);
         self.acquired.fetch_add(blocks as u64, Ordering::AcqRel);
         BlockLease {
             pool: Arc::clone(self),
             blocks,
+            node,
         }
     }
 
-    /// Lease `blocks` blocks if they fit under the capacity; `None` when
-    /// they do not (the caller defers — nothing is acquired). On an
-    /// unbounded pool this never fails. The check-and-reserve is a single
-    /// atomic compare-exchange, so concurrent acquirers cannot
-    /// collectively overshoot the capacity.
-    pub fn try_acquire(self: &Arc<Self>, blocks: usize) -> Option<BlockLease> {
-        let Some(cap) = self.capacity else {
-            return Some(self.acquire(blocks));
-        };
-        let mut cur = self.in_use.load(Ordering::Acquire);
+    /// [`GpuBlockPool::acquire_on`] node 0 — the pre-NUMA force path
+    /// (unbounded standalone engines, lease cloning).
+    pub fn acquire(self: &Arc<Self>, blocks: usize) -> BlockLease {
+        self.acquire_on(0, blocks)
+    }
+
+    /// Lease `blocks` blocks from node `node`'s budget if they fit; `None`
+    /// when they do not (the caller defers — nothing is acquired) or the
+    /// node does not exist. On an unbounded pool this never fails (the
+    /// single implicit node absorbs everything). The check-and-reserve is
+    /// a single atomic compare-exchange per node, so concurrent acquirers
+    /// cannot collectively overshoot a budget.
+    pub fn try_acquire_on(self: &Arc<Self>, node: NodeId, blocks: usize) -> Option<BlockLease> {
+        if self.budgets.is_empty() {
+            return Some(self.acquire_on(node, blocks));
+        }
+        let &cap = self.budgets.get(node)?;
+        let slot = &self.in_use[node];
+        let mut cur = slot.load(Ordering::Acquire);
         loop {
             if cur + blocks > cap {
                 return None;
             }
-            match self.in_use.compare_exchange(
-                cur,
-                cur + blocks,
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
+            match slot.compare_exchange(cur, cur + blocks, Ordering::AcqRel, Ordering::Acquire) {
                 Ok(_) => break,
                 Err(observed) => cur = observed,
             }
@@ -129,12 +234,31 @@ impl GpuBlockPool {
         Some(BlockLease {
             pool: Arc::clone(self),
             blocks,
+            node,
         })
     }
 
-    /// Blocks currently leased out.
+    /// Placement-resolving acquire: lease `blocks` from the least-loaded
+    /// node that fits them ([`GpuBlockPool::pick_node`]); `None` when no
+    /// node currently can. Retries if a concurrent acquirer races the
+    /// chosen node away.
+    pub fn try_acquire(self: &Arc<Self>, blocks: usize) -> Option<BlockLease> {
+        loop {
+            let node = self.pick_node(blocks)?;
+            if let Some(lease) = self.try_acquire_on(node, blocks) {
+                return Some(lease);
+            }
+        }
+    }
+
+    /// Blocks currently leased out across all nodes.
     pub fn in_use(&self) -> usize {
-        self.in_use.load(Ordering::Acquire)
+        self.in_use.iter().map(|n| n.load(Ordering::Acquire)).sum()
+    }
+
+    /// Blocks currently leased from node `node` (0 when out of range).
+    pub fn in_use_on(&self, node: NodeId) -> usize {
+        self.in_use.get(node).map_or(0, |n| n.load(Ordering::Acquire))
     }
 
     /// Cumulative blocks ever leased.
@@ -150,11 +274,12 @@ impl GpuBlockPool {
 }
 
 /// An RAII lease of GPU KV blocks; dropping it returns the blocks to the
-/// pool and advances the reclaim counter.
+/// node budget it was drawn from and advances the reclaim counter.
 #[derive(Debug)]
 pub struct BlockLease {
     pool: Arc<GpuBlockPool>,
     blocks: usize,
+    node: NodeId,
 }
 
 impl BlockLease {
@@ -162,22 +287,29 @@ impl BlockLease {
     pub fn blocks(&self) -> usize {
         self.blocks
     }
+
+    /// The NUMA node whose budget this lease draws from (0 on unbounded
+    /// and single-capacity pools).
+    pub fn node(&self) -> NodeId {
+        self.node
+    }
 }
 
 impl Clone for BlockLease {
-    /// Cloning a lease acquires a fresh lease of the same size (the clone
-    /// owns its own share — keeps `KvManager: Clone` honest). The clone is
-    /// a *force* acquire: it may oversubscribe a bounded pool, because
-    /// `Clone` cannot fail. Scheduler admission never clones leases; only
-    /// explicit sequence copies (tests, analysis) do.
+    /// Cloning a lease acquires a fresh lease of the same size **on the
+    /// same node** (the clone owns its own share — keeps
+    /// `KvManager: Clone` honest). The clone is a *force* acquire: it may
+    /// oversubscribe a bounded budget, because `Clone` cannot fail.
+    /// Scheduler admission never clones leases; only explicit sequence
+    /// copies (tests, analysis) do.
     fn clone(&self) -> BlockLease {
-        self.pool.acquire(self.blocks)
+        self.pool.acquire_on(self.node, self.blocks)
     }
 }
 
 impl Drop for BlockLease {
     fn drop(&mut self) {
-        self.pool.in_use.fetch_sub(self.blocks, Ordering::AcqRel);
+        self.pool.in_use[self.node].fetch_sub(self.blocks, Ordering::AcqRel);
         self.pool
             .reclaimed
             .fetch_add(self.blocks as u64, Ordering::AcqRel);
@@ -394,6 +526,94 @@ mod tests {
         assert!(pool.try_acquire(1).is_none());
         drop(a);
         assert_eq!(pool.free_blocks(), Some(2));
+    }
+
+    #[test]
+    fn node_budgets_gate_independently() {
+        let pool = Arc::new(GpuBlockPool::with_node_budgets(vec![4, 2]));
+        assert_eq!(pool.nodes(), 2);
+        assert_eq!(pool.capacity(), Some(6));
+        assert_eq!(pool.capacity_on(0), Some(4));
+        assert_eq!(pool.capacity_on(1), Some(2));
+        assert_eq!(pool.capacity_on(2), None);
+        assert_eq!(pool.max_node_capacity(), Some(4));
+        let a = pool.try_acquire_on(0, 3).expect("3 of 4 on node 0");
+        assert_eq!(a.node(), 0);
+        assert_eq!(pool.free_blocks_on(0), Some(1));
+        assert_eq!(pool.free_blocks_on(1), Some(2));
+        // node 0 exhausted for 2 blocks, but node 1 still fits them
+        assert!(pool.try_acquire_on(0, 2).is_none(), "budgets never spill");
+        let b = pool.try_acquire_on(1, 2).expect("node 1's own budget");
+        assert_eq!(b.node(), 1);
+        assert_eq!(pool.in_use(), 5);
+        assert_eq!(pool.in_use_on(0), 3);
+        assert_eq!(pool.in_use_on(1), 2);
+        drop(a);
+        assert_eq!(pool.in_use_on(0), 0, "lease returns to its own node");
+        assert_eq!(pool.in_use_on(1), 2);
+        drop(b);
+        assert_eq!(pool.reclaimed_blocks(), 5);
+    }
+
+    #[test]
+    fn pick_node_prefers_most_free_with_id_tiebreak() {
+        let pool = Arc::new(GpuBlockPool::with_node_budgets(vec![4, 4, 4]));
+        // all equal → lowest id
+        assert_eq!(pool.pick_node(2), Some(0));
+        let _a = pool.try_acquire_on(0, 2).unwrap();
+        // node 0 has 2 free, nodes 1/2 have 4 → node 1 (ties to lowest id)
+        assert_eq!(pool.pick_node(2), Some(1));
+        let _b = pool.try_acquire_on(1, 3).unwrap();
+        // free: [2, 1, 4] → node 2
+        assert_eq!(pool.pick_node(2), Some(2));
+        // a lease larger than every node's remaining free → defer
+        assert_eq!(pool.pick_node(5), None);
+        // larger than any node's TOTAL budget: never placeable
+        assert_eq!(pool.pick_node(9), None);
+        assert!(pool.max_node_capacity().unwrap() < 9);
+    }
+
+    #[test]
+    fn placement_resolving_try_acquire_spreads_leases() {
+        let pool = Arc::new(GpuBlockPool::with_node_budgets(vec![4, 4]));
+        let a = pool.try_acquire(4).expect("node 0");
+        assert_eq!(a.node(), 0);
+        let b = pool.try_acquire(4).expect("node 1");
+        assert_eq!(b.node(), 1);
+        assert!(pool.try_acquire(1).is_none(), "both budgets exhausted");
+        drop(a);
+        let c = pool.try_acquire(4).expect("reclaimed node 0");
+        assert_eq!(c.node(), 0);
+        drop(b);
+        drop(c);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn single_budget_pool_equals_pre_numa_capacity_pool() {
+        // with_capacity must stay bit-for-bit the old admission behaviour
+        let pool = Arc::new(GpuBlockPool::with_capacity(8));
+        assert_eq!(pool.nodes(), 1);
+        assert_eq!(pool.max_node_capacity(), Some(8));
+        assert_eq!(pool.pick_node(8), Some(0));
+        assert_eq!(pool.pick_node(9), None);
+        let a = pool.try_acquire(5).unwrap();
+        assert_eq!(a.node(), 0);
+        assert_eq!(pool.free_blocks_on(0), Some(3));
+        drop(a);
+    }
+
+    #[test]
+    fn clone_stays_on_its_node() {
+        let pool = Arc::new(GpuBlockPool::with_node_budgets(vec![4, 4]));
+        let a = pool.try_acquire_on(1, 3).unwrap();
+        let b = a.clone();
+        assert_eq!(b.node(), 1);
+        assert_eq!(pool.in_use_on(1), 6, "force clone oversubscribes its node");
+        assert_eq!(pool.in_use_on(0), 0);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.in_use(), 0);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 use std::sync::Arc;
 
 use crate::config::{HgcaConfig, ModelConfig};
+use crate::topology::{NodeId, Topology};
 
 use super::cpu_store::CpuLayerStore;
 use super::gpu_pool::{BlockLease, GpuBlockPool, GpuLayerCache};
@@ -28,6 +29,15 @@ pub struct KvManager {
     pub seq_len: usize,
     /// cumulative bytes moved over the (simulated) PCIe link by evictions
     pub evict_bytes: u64,
+    /// The NUMA node this sequence was placed on: its GPU block lease
+    /// draws from this node's budget, and its head shard map is anchored
+    /// here (0 on flat topologies).
+    pub node: NodeId,
+    /// Per-head NUMA shard map, identical across layers
+    /// ([`Topology::shard_heads`] anchored at [`KvManager::node`]) — the
+    /// engine dispatches head `h`'s CPU attention job to `shard[h]`'s
+    /// queue.
+    shard: Vec<NodeId>,
     /// GPU block lease held against the engine's [`GpuBlockPool`];
     /// dropping the manager (sequence retirement — normal or early)
     /// returns the blocks to the pool
@@ -35,8 +45,27 @@ pub struct KvManager {
 }
 
 impl KvManager {
-    /// Empty KV state for one sequence of `model` under `cfg`.
+    /// Empty KV state for one sequence of `model` under `cfg` on a flat
+    /// single-node topology (every pre-NUMA caller's layout, bit for bit).
     pub fn new(model: &ModelConfig, cfg: &HgcaConfig) -> KvManager {
+        KvManager::new_on(model, cfg, &Topology::single(), 0)
+    }
+
+    /// Empty KV state for one sequence **placed on `node`** of `topo`: the
+    /// per-head shard map round-robins head slabs across nodes starting at
+    /// the home node (`(node + h) % nodes`), and every layer's
+    /// [`CpuLayerStore`] records it, so CPU attention jobs can be
+    /// dispatched to the queues owning their slabs. On a single-node
+    /// topology this is exactly [`KvManager::new`]. Placement changes
+    /// where work runs and which budget the lease draws from — never the
+    /// stored bytes or selection numerics.
+    pub fn new_on(
+        model: &ModelConfig,
+        cfg: &HgcaConfig,
+        topo: &Topology,
+        node: NodeId,
+    ) -> KvManager {
+        let shard = topo.shard_heads(model.n_heads, node);
         let layers = (0..model.n_layers)
             .map(|_| LayerKv {
                 gpu: GpuLayerCache::new(
@@ -46,7 +75,7 @@ impl KvManager {
                     cfg.blk_num,
                     cfg.alpha,
                 ),
-                cpu: CpuLayerStore::new(model.n_heads, model.d_head()),
+                cpu: CpuLayerStore::new_sharded(model.n_heads, model.d_head(), shard.clone()),
             })
             .collect();
         KvManager {
@@ -54,8 +83,20 @@ impl KvManager {
             cfg: cfg.clone(),
             seq_len: 0,
             evict_bytes: 0,
+            node,
+            shard,
             lease: None,
         }
+    }
+
+    /// The per-head NUMA shard map (len == heads; all 0 when flat).
+    pub fn shard(&self) -> &[NodeId] {
+        &self.shard
+    }
+
+    /// The NUMA node owning head `h`'s CPU slabs.
+    pub fn node_of_head(&self, h: usize) -> NodeId {
+        self.shard[h]
     }
 
     /// GPU window blocks this manager needs to lease (`n_layers × blk_num`)
@@ -76,11 +117,14 @@ impl KvManager {
     }
 
     /// Attach a lease acquired up front (capacity-gated admission: the
-    /// scheduler acquires via [`GpuBlockPool::try_acquire`] *before*
+    /// scheduler acquires via [`GpuBlockPool::try_acquire_on`] *before*
     /// building the sequence, so a failed acquisition allocates nothing).
-    /// Any previously held lease is released.
+    /// The lease's node should match this manager's placement — the
+    /// "same node end to end" invariant. Any previously held lease is
+    /// released.
     pub fn attach_lease(&mut self, lease: BlockLease) {
         debug_assert_eq!(lease.blocks(), self.blocks_needed());
+        debug_assert_eq!(lease.node(), self.node, "lease and KV placement diverge");
         self.lease = Some(lease);
     }
 
@@ -246,6 +290,43 @@ mod tests {
         drop(m);
         assert_eq!(pool.in_use(), 0);
         assert_eq!(pool.free_blocks(), Some(4));
+    }
+
+    #[test]
+    fn placed_manager_shards_heads_from_its_home_node() {
+        let model = trained("tiny-small").unwrap(); // 2 layers, 2 heads
+        let cfg = HgcaConfig::default();
+        let topo = Topology::synthetic(4);
+        let m = KvManager::new_on(&model, &cfg, &topo, 2);
+        assert_eq!(m.node, 2);
+        assert_eq!(m.shard(), &[2, 3], "round-robin anchored at the home node");
+        assert_eq!(m.node_of_head(1), 3);
+        for l in &m.layers {
+            assert_eq!(l.cpu.node_of, vec![2, 3], "every layer records the map");
+        }
+        // flat construction is the single-node special case
+        let flat = KvManager::new(&model, &cfg);
+        assert_eq!(flat.node, 0);
+        assert_eq!(flat.shard(), &[0, 0]);
+    }
+
+    #[test]
+    fn node_placed_lease_accounts_on_its_budget() {
+        let model = trained("tiny-small").unwrap();
+        let cfg = HgcaConfig {
+            blk_size: 2,
+            blk_num: 2,
+            ..Default::default()
+        };
+        let topo = Topology::synthetic(2);
+        let pool = Arc::new(crate::kv::GpuBlockPool::with_node_budgets(vec![4, 4]));
+        let mut m = KvManager::new_on(&model, &cfg, &topo, 1);
+        let lease = pool.try_acquire_on(1, m.blocks_needed()).expect("node 1 fits");
+        m.attach_lease(lease);
+        assert_eq!(pool.in_use_on(1), 4);
+        assert_eq!(pool.in_use_on(0), 0);
+        drop(m);
+        assert_eq!(pool.in_use_on(1), 0, "retirement restores the home budget");
     }
 
     #[test]

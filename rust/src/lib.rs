@@ -31,4 +31,5 @@ pub mod server;
 pub mod simulator;
 pub mod sparse;
 pub mod tensor;
+pub mod topology;
 pub mod util;

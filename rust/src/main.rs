@@ -25,6 +25,10 @@ USAGE:
                 [--kv-blocks N]           # hard GPU KV pool capacity (blocks);
                                           # default: model shape × batch × headroom
                 [--kv-headroom F]         # derived-capacity factor (default 1.0)
+                [--numa-nodes N]          # NUMA execution domains (default: detect
+                                          # from HGCA_NUMA_NODES / sysfs; 1 = flat).
+                                          # Shards the attention pool, KV stores,
+                                          # and block budgets per node
                 # admission is earliest-deadline-first, gated on KV block
                 # availability; POST /v1/generate accepts "stream": true for
                 # chunked-transfer token streaming, "deadline_ms" per request,
@@ -204,12 +208,33 @@ fn run() -> Result<()> {
             }
         }
         "serve" => {
+            // resolve the NUMA topology FIRST: the global attention pool
+            // freezes its topology at first use, and model warmup below
+            // already submits to it — parsing --numa-nodes any later
+            // would silently hand global-pool callers a flat pool
+            let topology = match args.get("numa-nodes") {
+                Some(n) => {
+                    let n: usize = n
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--numa-nodes: expected integer"))?;
+                    anyhow::ensure!(n >= 1, "--numa-nodes must be ≥ 1");
+                    hgca::topology::Topology::synthetic(n)
+                }
+                None => hgca::topology::Topology::detect(),
+            };
+            if !hgca::attention::AttnPool::init_global(topology.clone()) {
+                eprintln!(
+                    "warning: attention pool was initialized before serve parsed its flags; \
+                     --numa-nodes applies to KV budgets and placement only"
+                );
+            }
             let rt = Rc::new(PjrtRuntime::new(&dir)?);
             let mr = rt.load_model(args.get_or("model", "tiny"))?;
             mr.warmup()?;
             let cfg = engine_config(&args)?;
             let policy = parse_policy(&args)?;
             let mut engine = Engine::new(&mr, cfg, policy);
+            engine.set_topology(topology.clone());
             let addr = args.get_or("addr", "127.0.0.1:8471").to_string();
             let (tx, rx) = std::sync::mpsc::channel();
             let (local, _handle) = hgca::server::serve(&addr, tx)?;
@@ -240,14 +265,21 @@ fn run() -> Result<()> {
             serving.validate()?;
             // resolve the pool capacity once and pin it as the explicit
             // value, so the line logged here is by construction the one
-            // the engine loop enforces
+            // the engine loop enforces (the loop splits it across the
+            // topology's nodes)
             let capacity = serving.effective_kv_blocks(engine.blocks_per_sequence(), batcher.batch);
             let serving = hgca::config::ServingConfig {
                 kv_blocks: Some(capacity),
                 ..serving
             };
+            let budgets = serving.effective_node_budgets(
+                engine.blocks_per_sequence(),
+                batcher.batch,
+                topology.nodes(),
+            );
             println!(
-                "kv pool: {capacity} blocks capacity ({} per sequence, {} batch rows)",
+                "kv pool: {capacity} blocks capacity ({} per sequence, {} batch rows); \
+                 numa: {topology}, node budgets {budgets:?}",
                 engine.blocks_per_sequence(),
                 batcher.batch,
             );

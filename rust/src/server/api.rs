@@ -184,12 +184,13 @@ fn capacity_reject_json(needed: usize, capacity: usize) -> HttpResponse {
 }
 
 /// Up-front never-fits check: `Some(429)` when one sequence's window
-/// blocks exceed the pool's total capacity (admission could defer
-/// forever; reject instead — the batcher applies the same rule to
+/// blocks exceed the pool's **largest node budget** — a lease never spans
+/// nodes, so summed capacity across nodes is irrelevant (admission could
+/// defer forever; reject instead — the batcher applies the same rule to
 /// directly-submitted requests). `None` on unbounded pools or when the
-/// blocks fit.
+/// blocks fit on some node.
 fn capacity_check(engine: &Engine<'_>) -> Option<HttpResponse> {
-    let capacity = engine.kv_pool.capacity()?;
+    let capacity = engine.kv_pool.max_node_capacity()?;
     let needed = engine.blocks_per_sequence();
     (needed > capacity).then(|| capacity_reject_json(needed, capacity))
 }
@@ -259,6 +260,17 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         ("pool_busy_secs", Json::num(pool.busy_secs)),
         ("pool_queue_depth", Json::num(pool.queue_depth as f64)),
         ("pool_queue_peak", Json::num(pool.queue_peak as f64)),
+        // NUMA execution domains (numa_nodes = the serving topology; the
+        // per-node pool/kv counters below make locality regressions —
+        // cross-node steals, lopsided budgets — visible)
+        ("numa_nodes", Json::num(engine.topology.nodes() as f64)),
+        ("pool_numa_nodes", Json::num(pool.numa_nodes as f64)),
+        ("pool_pinned_workers", Json::num(pool.pinned_workers as f64)),
+        ("pool_steals_cross_node", Json::num(pool.cross_node_steals() as f64)),
+        (
+            "pool_caller_assist_cross_node",
+            Json::num(pool.caller_assist_cross_node as f64),
+        ),
         // request lifecycle (exit is a first-class scheduler event)
         ("requests_cancelled", Json::num(m.requests_cancelled as f64)),
         ("requests_deadline_expired", Json::num(m.requests_deadline_expired as f64)),
@@ -288,11 +300,30 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         fields.push(("admissions_deferred", Json::num(s.admissions_deferred as f64)));
         fields.push(("deadline_preempted", Json::num(s.deadline_preempted as f64)));
         fields.push((
+            "deadline_preempted_prefill",
+            Json::num(s.deadline_preempted_prefill as f64),
+        ));
+        fields.push((
             "prefill_decode_interleave",
             Json::num(s.prefill_chunks as f64 / s.decode_steps.max(1) as f64),
         ));
     }
-    HttpResponse::json(200, Json::obj(fields).to_string())
+    // per-node counters carry their node id in the key, so the field set
+    // is dynamic — build the object map directly
+    let mut obj: std::collections::BTreeMap<String, Json> =
+        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    for (i, t) in pool.node_tasks.iter().enumerate() {
+        obj.insert(format!("pool_node{i}_tasks"), Json::num(*t as f64));
+    }
+    for (i, s) in pool.node_steals.iter().enumerate() {
+        obj.insert(format!("pool_node{i}_steals"), Json::num(*s as f64));
+    }
+    for node in 0..engine.kv_pool.nodes() {
+        if let Some(free) = engine.kv_pool.free_blocks_on(node) {
+            obj.insert(format!("kv_blocks_free_node{node}"), Json::num(free as f64));
+        }
+    }
+    HttpResponse::json(200, Json::Obj(obj).to_string())
 }
 
 /// Where a completion's response goes.
@@ -340,9 +371,15 @@ pub fn engine_loop_with(
 ) -> Result<()> {
     // size the GPU KV pool before the first admission: explicit
     // --kv-blocks, or model shape × batch × --kv-headroom (default 1.0 —
-    // exactly one full batch, so gating coincides with row availability)
-    let capacity = serving.effective_kv_blocks(engine.blocks_per_sequence(), batcher.batch);
-    engine.set_kv_block_capacity(Some(capacity));
+    // exactly one full batch, so gating coincides with row availability),
+    // split into one budget per NUMA node of the engine's topology (a
+    // single-node topology yields the pre-NUMA single-capacity pool)
+    let budgets = serving.effective_node_budgets(
+        engine.blocks_per_sequence(),
+        batcher.batch,
+        engine.topology.nodes(),
+    );
+    engine.set_kv_node_budgets(budgets);
     let mut next_id = 0u64;
     let mut waiters: HashMap<u64, Waiter> = HashMap::new();
     let mut groups: HashMap<u64, Group> = HashMap::new();
@@ -406,7 +443,9 @@ pub fn engine_loop_with(
                     }
                     let kv = KvSizing {
                         needed: engine.blocks_per_sequence(),
-                        capacity: engine.kv_pool.capacity().unwrap_or(0),
+                        // the binding bound is the largest node budget —
+                        // leases never span nodes
+                        capacity: engine.kv_pool.max_node_capacity().unwrap_or(0),
                     };
                     for c in finished {
                         resolve(&mut waiters, &mut groups, &mut engine.metrics, kv, c);

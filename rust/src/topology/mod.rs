@@ -1,0 +1,326 @@
+//! NUMA execution domains (ROADMAP: NUMA pinning + pool sharding).
+//!
+//! HGCA's CPU-side sparse attention streams KV slabs from RAM; on
+//! multi-socket hosts that bandwidth halves the moment a worker reads a
+//! slab homed on the other socket. This module gives every layer of the
+//! stack a shared notion of *where* memory and workers live:
+//!
+//! * [`Topology`] — the node count plus (when known) each node's CPU set,
+//!   detected from `/sys/devices/system/node` on Linux. A deterministic
+//!   **synthetic** topology (`--numa-nodes N` / `HGCA_NUMA_NODES`) exists
+//!   for tests and single-socket development: it has the same sharding
+//!   behaviour with no affinity information.
+//! * [`NodeId`] — a dense 0-based node index. Every placement decision in
+//!   the stack (worker queues, head shard maps, GPU block budgets, EDF
+//!   admission) speaks this index.
+//! * [`Topology::pin_current_thread`] — best-effort affinity pinning via
+//!   `sched_setaffinity`, behind a no-op fallback (synthetic topologies,
+//!   non-Linux hosts, or a denied syscall simply leave the thread
+//!   unpinned) so sandboxes and CI stay green.
+//!
+//! Placement never changes numerics: sharding decides *which queue runs a
+//! task* and *which budget a lease draws from*, while task packing and
+//! per-job arithmetic stay bitwise-identical across topologies. The
+//! conformance suite (`tests/integration_numa.rs`) pins this.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// Index of a NUMA node within a [`Topology`] (dense, 0-based).
+pub type NodeId = usize;
+
+/// Where a topology's node count came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologySource {
+    /// Default single flat memory domain (no detection ran or found one
+    /// node).
+    Single,
+    /// Detected from `/sys/devices/system/node` (CPU sets known —
+    /// pinning is possible).
+    Sysfs,
+    /// Forced via `--numa-nodes` / `HGCA_NUMA_NODES` (no CPU sets —
+    /// pinning is a no-op).
+    Synthetic,
+}
+
+/// The machine's (or a synthetic) NUMA layout: how many memory domains
+/// exist and, when detected from sysfs, which CPUs belong to each.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Per node: the CPU ids it owns (empty when unknown — synthetic or
+    /// fallback topologies).
+    cpus: Vec<Vec<usize>>,
+    source: TopologySource,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::single()
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} node(s) [{:?}]", self.nodes(), self.source)
+    }
+}
+
+impl Topology {
+    /// The flat single-domain topology — every pre-NUMA behaviour of the
+    /// stack is exactly "this topology everywhere".
+    pub fn single() -> Topology {
+        Topology {
+            cpus: vec![Vec::new()],
+            source: TopologySource::Single,
+        }
+    }
+
+    /// A synthetic `n`-node topology (deterministic, no affinity
+    /// information). Panics when `n == 0`.
+    pub fn synthetic(n: usize) -> Topology {
+        assert!(n >= 1, "a topology needs at least one node");
+        if n == 1 {
+            return Topology::single();
+        }
+        Topology {
+            cpus: vec![Vec::new(); n],
+            source: TopologySource::Synthetic,
+        }
+    }
+
+    /// Detect the topology: `HGCA_NUMA_NODES` (synthetic override) wins,
+    /// then `/sys/devices/system/node`, else a single flat domain.
+    pub fn detect() -> Topology {
+        if let Some(t) = std::env::var("HGCA_NUMA_NODES")
+            .ok()
+            .and_then(|v| Self::synthetic_from_env(&v))
+        {
+            return t;
+        }
+        Self::from_sysfs(Path::new("/sys/devices/system/node")).unwrap_or_else(Topology::single)
+    }
+
+    /// Parse an `HGCA_NUMA_NODES` value; `None` when unparsable or zero
+    /// (detection then falls through to sysfs).
+    pub fn synthetic_from_env(v: &str) -> Option<Topology> {
+        v.trim()
+            .parse::<usize>()
+            .ok()
+            .filter(|n| *n >= 1)
+            .map(Topology::synthetic)
+    }
+
+    /// Scan a sysfs node directory (`nodeN` subdirs + their `cpulist`).
+    /// `None` when the directory is missing/empty or holds a single node.
+    /// Best-effort throughout: an unreadable or non-UTF-8 entry is
+    /// skipped, never allowed to degrade a multi-socket host to a flat
+    /// topology (matching `parse_cpulist`'s skip-malformed contract).
+    fn from_sysfs(base: &Path) -> Option<Topology> {
+        let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+        for entry in fs::read_dir(base).ok()? {
+            let Ok(entry) = entry else { continue };
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(id) = name.strip_prefix("node").and_then(|r| r.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let cpulist = fs::read_to_string(entry.path().join("cpulist")).unwrap_or_default();
+            nodes.push((id, parse_cpulist(&cpulist)));
+        }
+        if nodes.len() < 2 {
+            return None; // zero or one node: the flat default is exact
+        }
+        // dense 0-based indices in sysfs id order (ids are positionally
+        // remapped if sparse, keeping the layout deterministic)
+        nodes.sort_by_key(|(id, _)| *id);
+        Some(Topology {
+            cpus: nodes.into_iter().map(|(_, c)| c).collect(),
+            source: TopologySource::Sysfs,
+        })
+    }
+
+    /// Number of memory domains (≥ 1).
+    pub fn nodes(&self) -> usize {
+        self.cpus.len()
+    }
+
+    /// True for the flat single-domain topology.
+    pub fn is_single(&self) -> bool {
+        self.nodes() == 1
+    }
+
+    pub fn source(&self) -> TopologySource {
+        self.source
+    }
+
+    /// The CPUs owned by `node` (empty when unknown).
+    pub fn cpus_of(&self, node: NodeId) -> &[usize] {
+        &self.cpus[node % self.nodes()]
+    }
+
+    /// Deterministic round-robin placement of a dense index space (worker
+    /// ids, head ids) onto nodes.
+    pub fn node_of(&self, index: usize) -> NodeId {
+        index % self.nodes()
+    }
+
+    /// The per-head shard map for one sequence homed on `base`: head `h`
+    /// lives on `(base + h) % nodes`. Single-node topologies map every
+    /// head to node 0 (today's flat layout, bit for bit); multi-node
+    /// topologies spread slabs round-robin starting at the home node, so
+    /// placement is a pure function of `(base, h, nodes)` and never of
+    /// runtime state.
+    pub fn shard_heads(&self, heads: usize, base: NodeId) -> Vec<NodeId> {
+        let n = self.nodes();
+        (0..heads).map(|h| (base + h) % n).collect()
+    }
+
+    /// Best-effort: pin the calling thread to `node`'s CPU set. Returns
+    /// `false` — and changes nothing — when the node's CPUs are unknown
+    /// (synthetic topology), the platform has no affinity syscall, or the
+    /// kernel refuses (sandbox seccomp). Callers must treat pinning as an
+    /// optimization only.
+    pub fn pin_current_thread(&self, node: NodeId) -> bool {
+        let cpus = self.cpus_of(node);
+        if cpus.is_empty() {
+            return false;
+        }
+        set_current_thread_affinity(cpus)
+    }
+}
+
+/// Parse a sysfs cpulist ("0-3,8,10-11") into CPU ids. Malformed pieces
+/// are skipped (best-effort — an empty result just disables pinning).
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for piece in s.trim().split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = piece.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                if a <= b && b - a < 4096 {
+                    out.extend(a..=b);
+                }
+            }
+        } else if let Ok(c) = piece.parse::<usize>() {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// 1024-bit cpu_set_t as 16 u64 words (glibc's default CPU_SETSIZE).
+#[cfg(target_os = "linux")]
+fn set_current_thread_affinity(cpus: &[usize]) -> bool {
+    const WORDS: usize = 16;
+    let mut mask = [0u64; WORDS];
+    let mut any = false;
+    for &c in cpus {
+        if c < WORDS * 64 {
+            mask[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    extern "C" {
+        // pid 0 = the calling thread; linking libc is implicit on linux
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: mask points at WORDS u64s and cpusetsize matches its byte
+    // length; the syscall reads, never writes.
+    unsafe { sched_setaffinity(0, WORDS * 8, mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn set_current_thread_affinity(_cpus: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_is_one_flat_node() {
+        let t = Topology::single();
+        assert_eq!(t.nodes(), 1);
+        assert!(t.is_single());
+        assert_eq!(t.source(), TopologySource::Single);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.shard_heads(4, 0), vec![0, 0, 0, 0]);
+        assert!(!t.pin_current_thread(0), "no CPU info: pinning is a no-op");
+    }
+
+    #[test]
+    fn synthetic_round_robins_deterministically() {
+        let t = Topology::synthetic(4);
+        assert_eq!(t.nodes(), 4);
+        assert_eq!(t.source(), TopologySource::Synthetic);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(5), 1);
+        // shard map offset by the home node, wrapping
+        assert_eq!(t.shard_heads(6, 0), vec![0, 1, 2, 3, 0, 1]);
+        assert_eq!(t.shard_heads(6, 2), vec![2, 3, 0, 1, 2, 3]);
+        // repeated construction is identical (placement is a pure function)
+        assert_eq!(t, Topology::synthetic(4));
+    }
+
+    #[test]
+    fn synthetic_one_collapses_to_single() {
+        assert!(Topology::synthetic(1).is_single());
+        assert_eq!(Topology::synthetic(1), Topology::single());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_nodes_panics() {
+        Topology::synthetic(0);
+    }
+
+    #[test]
+    fn env_value_parsing() {
+        assert_eq!(Topology::synthetic_from_env("2").map(|t| t.nodes()), Some(2));
+        assert_eq!(Topology::synthetic_from_env(" 4 ").map(|t| t.nodes()), Some(4));
+        assert!(Topology::synthetic_from_env("0").is_none());
+        assert!(Topology::synthetic_from_env("banana").is_none());
+        assert!(Topology::synthetic_from_env("").is_none());
+    }
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3,8,10-11\n"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("3-1"), Vec::<usize>::new(), "inverted range skipped");
+        assert_eq!(parse_cpulist("junk,2"), vec![2], "malformed pieces skipped");
+    }
+
+    #[test]
+    fn detect_yields_at_least_one_node() {
+        // whatever the machine (or env) looks like, detection never
+        // produces an unusable topology
+        let t = Topology::detect();
+        assert!(t.nodes() >= 1);
+    }
+
+    #[test]
+    fn pinning_is_best_effort_on_detected_topology() {
+        // must never panic or corrupt anything, whatever it returns
+        let t = Topology::detect();
+        for node in 0..t.nodes() {
+            let _ = t.pin_current_thread(node);
+        }
+    }
+
+    #[test]
+    fn cpus_of_wraps_out_of_range_nodes() {
+        let t = Topology::synthetic(2);
+        assert_eq!(t.cpus_of(5), t.cpus_of(1));
+    }
+}

@@ -1,0 +1,321 @@
+//! Conformance suite for NUMA-aware execution domains (topology layer,
+//! per-node attention queues, sharded KV stores, per-node GPU block
+//! budgets, placement-aware EDF admission).
+//!
+//! The load-bearing invariants (ISSUE acceptance):
+//! * **Bitwise topology conformance** — identical request streams yield
+//!   bitwise-identical tokens on 1/2/4-node synthetic topologies, and a
+//!   1-node topology reproduces the flat pool's scheduling decisions
+//!   (admission ticks, defers, finish reasons) *exactly*.
+//! * **Per-node capacity gating** — admission defers/admits exactly like
+//!   the global pool did, at node granularity: a lease draws from one
+//!   node's budget, never spills, and returns to the same budget.
+//! * **Deterministic placement** — the least-loaded fitting node wins,
+//!   ties broken by the lowest node id; a sequence's CPU shard map and
+//!   GPU lease share the home node.
+//! * **Never-fits keys on the largest node budget** — summed capacity
+//!   across nodes is irrelevant because a lease never spans nodes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::{Batcher, Engine, FinishReason, Policy, Request};
+use hgca::runtime::PjrtRuntime;
+use hgca::topology::Topology;
+
+fn runtime() -> Rc<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(PjrtRuntime::new(&dir).expect("runtime"))
+}
+
+/// Ground truth: a fresh flat engine generates the prompt alone.
+fn isolated(prompt: &str, max_new: usize) -> Vec<u8> {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut seq = engine.new_sequence(0, prompt.as_bytes());
+    engine.generate(&mut seq, max_new).unwrap()
+}
+
+fn req(id: u64, prompt: &str, max_new: usize) -> Request {
+    Request {
+        id,
+        prompt: prompt.as_bytes().to_vec(),
+        max_new_tokens: max_new,
+    }
+}
+
+/// Everything a scheduling decision leaves behind, per request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Outcome {
+    text: Vec<u8>,
+    admit_tick: u64,
+    queue_ticks: u64,
+    finish_tick: u64,
+    finish_reason: FinishReason,
+}
+
+/// Run one fixed request stream on an engine with `nodes` synthetic NUMA
+/// domains and a total KV capacity of `total_blocks` (split evenly per
+/// node), returning per-id outcomes plus the deferred-admission count.
+fn run_stream(nodes: usize, total_blocks: usize, batch: usize) -> (BTreeMap<u64, Outcome>, u64) {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let topo = Topology::synthetic(nodes);
+    engine.set_topology(topo.clone());
+    let budgets: Vec<usize> = {
+        let base = total_blocks / nodes;
+        let rem = total_blocks % nodes;
+        (0..nodes).map(|i| base + usize::from(i < rem)).collect()
+    };
+    engine.set_kv_node_budgets(budgets);
+    let mut batcher = Batcher::new(batch);
+    // six requests, submitted in two waves (the second mid-flight)
+    batcher.submit(req(1, "The windmill ground ", 6));
+    batcher.submit(req(2, "The ferry crossed ", 5));
+    batcher.submit(req(3, "The orchard yielded ", 4));
+    batcher.submit(req(4, "The quarry supplied ", 6));
+    let mut done = Vec::new();
+    done.extend(batcher.tick(&mut engine).unwrap());
+    batcher.submit(req(5, "The lighthouse keeper ", 3));
+    batcher.submit(req(6, "The granary stored ", 4));
+    done.extend(batcher.run_to_completion(&mut engine).unwrap());
+    assert_eq!(engine.kv_pool.in_use(), 0, "all leases reclaimed");
+    let outcomes = done
+        .into_iter()
+        .map(|c| {
+            (
+                c.id,
+                Outcome {
+                    text: c.text,
+                    admit_tick: c.admit_tick,
+                    queue_ticks: c.queue_ticks,
+                    finish_tick: c.finish_tick,
+                    finish_reason: c.finish_reason,
+                },
+            )
+        })
+        .collect();
+    (outcomes, batcher.stats().admissions_deferred)
+}
+
+// ---------------------------------------------------------------------
+// bitwise topology conformance
+// ---------------------------------------------------------------------
+
+#[test]
+fn topologies_1_2_4_yield_bitwise_identical_tokens_and_schedules() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let per_seq = {
+        let engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        engine.blocks_per_sequence()
+    };
+    // capacity = one full batch, split per node: every node still holds
+    // ≥ 1 sequence on 1/2/4 nodes, so only placement differs
+    let total = per_seq * 4;
+    let (flat, flat_defers) = run_stream(1, total, 4);
+    assert_eq!(flat.len(), 6, "every request completes");
+    for (id, o) in &flat {
+        assert_eq!(o.finish_reason, FinishReason::Length, "request {id}");
+    }
+    // spot-pin two streams against isolated generation (scheduling never
+    // perturbs numerics)
+    assert_eq!(flat[&1].text, isolated("The windmill ground ", 6));
+    assert_eq!(flat[&5].text, isolated("The lighthouse keeper ", 3));
+    for nodes in [2usize, 4] {
+        let (out, defers) = run_stream(nodes, total, 4);
+        assert_eq!(
+            out, flat,
+            "{nodes}-node topology must reproduce the flat run bit for bit \
+             (tokens AND scheduling metadata)"
+        );
+        assert_eq!(defers, flat_defers, "same deferral decisions on {nodes} nodes");
+    }
+}
+
+#[test]
+fn one_node_topology_reproduces_flat_pool_scheduling_exactly() {
+    // a *contended* stream (capacity = one sequence, three requests) on
+    // (a) the pre-NUMA flat capacity pool and (b) a 1-node budget pool:
+    // every admission, defer, and retirement must land on the same tick
+    let run = |numa: bool| -> (BTreeMap<u64, Outcome>, u64) {
+        let rt = runtime();
+        let mr = rt.load_model("tiny").unwrap();
+        let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        let per_seq = engine.blocks_per_sequence();
+        if numa {
+            engine.set_topology(Topology::synthetic(1));
+            engine.set_kv_node_budgets(vec![per_seq]);
+        } else {
+            engine.set_kv_block_capacity(Some(per_seq));
+        }
+        let mut batcher = Batcher::new(2);
+        batcher.submit(req(1, "The reservoir held ", 5));
+        batcher.submit(req(2, "The aqueduct carried ", 4));
+        batcher.submit(req(3, "The ferry crossed ", 3));
+        let done = batcher.run_to_completion(&mut engine).unwrap();
+        let outcomes = done
+            .into_iter()
+            .map(|c| {
+                (
+                    c.id,
+                    Outcome {
+                        text: c.text,
+                        admit_tick: c.admit_tick,
+                        queue_ticks: c.queue_ticks,
+                        finish_tick: c.finish_tick,
+                        finish_reason: c.finish_reason,
+                    },
+                )
+            })
+            .collect();
+        (outcomes, batcher.stats().admissions_deferred)
+    };
+    let (flat, flat_defers) = run(false);
+    let (numa, numa_defers) = run(true);
+    assert!(flat_defers > 0, "the stream must actually contend on blocks");
+    assert_eq!(numa, flat, "--numa-nodes 1 must change nothing");
+    assert_eq!(numa_defers, flat_defers);
+}
+
+// ---------------------------------------------------------------------
+// per-node capacity gating + lease accounting
+// ---------------------------------------------------------------------
+
+#[test]
+fn per_node_budgets_gate_admission_at_node_granularity() {
+    let p1 = "The first resident ";
+    let p2 = "The second resident ";
+    let p3 = "The patient visitor ";
+    let want3 = isolated(p3, 3);
+
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let per_seq = engine.blocks_per_sequence();
+    engine.set_topology(Topology::synthetic(2));
+    // one sequence per node, FOUR free batch rows: node budgets, not row
+    // count, are the binding constraint (the old capacity test, at node
+    // granularity)
+    engine.set_kv_node_budgets(vec![per_seq, per_seq]);
+    let mut batcher = Batcher::new(4);
+    batcher.submit(req(1, p1, 8));
+    batcher.submit(req(2, p2, 8));
+    batcher.submit(req(3, p3, 3));
+    let mut done = Vec::new();
+    done.extend(batcher.tick(&mut engine).unwrap());
+    // FIFO placement: R1 → node 0 (tie-break), R2 → node 1, R3 defers
+    assert_eq!(engine.kv_pool.in_use_on(0), per_seq);
+    assert_eq!(engine.kv_pool.in_use_on(1), per_seq);
+    assert_eq!(engine.kv_pool.free_blocks_on(0), Some(0));
+    assert_eq!(engine.kv_pool.free_blocks_on(1), Some(0));
+    assert!(batcher.stats().admissions_deferred > 0, "R3 visibly deferred");
+    assert_eq!(batcher.stats().active, 2);
+    assert_eq!(batcher.stats().queued, 1);
+
+    done.extend(batcher.run_to_completion(&mut engine).unwrap());
+    let c1 = done.iter().find(|c| c.id == 1).expect("R1 finished");
+    let c2 = done.iter().find(|c| c.id == 2).expect("R2 finished");
+    let c3 = done.iter().find(|c| c.id == 3).expect("R3 finished");
+    assert_eq!(c3.finish_reason, FinishReason::Length);
+    assert!(
+        c3.admit_tick >= c1.finish_tick.min(c2.finish_tick),
+        "R3 must wait for a node's blocks (admitted tick {}, first reclaim tick {})",
+        c3.admit_tick,
+        c1.finish_tick.min(c2.finish_tick)
+    );
+    assert!(c3.queue_ticks > 0, "R3 observably queued");
+    // deferral delays, never perturbs
+    assert_eq!(c3.text, want3);
+    assert_eq!(engine.kv_pool.in_use_on(0), 0);
+    assert_eq!(engine.kv_pool.in_use_on(1), 0);
+    assert_eq!(
+        engine.kv_pool.acquired_blocks(),
+        3 * per_seq as u64,
+        "exactly three placements ever leased"
+    );
+}
+
+#[test]
+fn placement_is_deterministic_and_leases_live_on_their_home_node() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let per_seq = engine.blocks_per_sequence();
+    let topo = Topology::synthetic(2);
+    engine.set_topology(topo.clone());
+    engine.set_kv_node_budgets(vec![per_seq, per_seq]);
+
+    let s1 = engine.try_new_sequence(1, b"alpha ").expect("node 0 free");
+    assert_eq!(s1.kv.node, 0, "equal free budgets → lowest node id");
+    let s2 = engine.try_new_sequence(2, b"beta ").expect("node 1 free");
+    assert_eq!(s2.kv.node, 1, "node 0 full → least-loaded node 1");
+    assert!(engine.try_new_sequence(3, b"gamma ").is_none(), "no node fits");
+
+    // the CPU shard map is anchored on the home node: the two sequences'
+    // maps are each other's rotation, and every entry names a real node
+    let heads = engine.model().n_heads;
+    assert_eq!(s1.kv.shard(), topo.shard_heads(heads, 0).as_slice());
+    assert_eq!(s2.kv.shard(), topo.shard_heads(heads, 1).as_slice());
+    for h in 0..heads {
+        assert_eq!(s2.kv.node_of_head(h), (s1.kv.node_of_head(h) + 1) % 2);
+    }
+
+    // retirement restores exactly the home node's budget
+    drop(s1);
+    assert_eq!(engine.kv_pool.free_blocks_on(0), Some(per_seq));
+    assert_eq!(engine.kv_pool.free_blocks_on(1), Some(0));
+    let s3 = engine.try_new_sequence(3, b"gamma ").expect("node 0 reclaimed");
+    assert_eq!(s3.kv.node, 0, "reclaimed node is the only fit");
+    drop(s2);
+    drop(s3);
+    assert_eq!(engine.kv_pool.in_use(), 0);
+}
+
+#[test]
+fn never_fits_keys_on_largest_node_budget_not_summed_capacity() {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let per_seq = engine.blocks_per_sequence();
+    engine.set_topology(Topology::synthetic(2));
+    // summed capacity comfortably exceeds one sequence, but NO single
+    // node can hold a whole lease — the request can never be admitted
+    engine.set_kv_node_budgets(vec![per_seq - 1, per_seq - 1]);
+    assert!(engine.kv_pool.capacity().unwrap() > per_seq);
+    assert!(engine.kv_pool.max_node_capacity().unwrap() < per_seq);
+
+    let mut batcher = Batcher::new(2);
+    batcher.submit(req(9, "The impossible request ", 4));
+    let done = batcher.tick(&mut engine).unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish_reason, FinishReason::NoCapacity);
+    assert_eq!(done[0].decode_steps, 0);
+    assert_eq!(engine.kv_pool.acquired_blocks(), 0, "no KV was ever leased");
+    assert_eq!(batcher.pending(), 0, "rejected, not queued forever");
+}
+
+// ---------------------------------------------------------------------
+// generation paths on multi-node engines stay conformant
+// ---------------------------------------------------------------------
+
+#[test]
+fn standalone_generation_on_a_multi_node_engine_matches_flat() {
+    // the force path (hgca generate) on a 4-node engine: placement (node
+    // 0 + rotated shard map) must not perturb a single byte
+    let prompt = "The railway company surveyed ";
+    let want = isolated(prompt, 8);
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    engine.set_topology(Topology::synthetic(4));
+    let mut seq = engine.new_sequence(0, prompt.as_bytes());
+    assert_eq!(seq.kv.node, 0, "force path places on node 0");
+    assert!(seq.kv.shard().iter().all(|&n| n < 4));
+    let out = engine.generate(&mut seq, 8).unwrap();
+    assert_eq!(out, want);
+}

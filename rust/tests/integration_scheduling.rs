@@ -271,6 +271,82 @@ fn infeasible_deadline_preempts_early_with_partial_text() {
 }
 
 #[test]
+fn infeasible_deadline_preempts_prefilling_row_before_absorbing_the_prompt() {
+    // ROADMAP satellite: the infeasibility proof extends to prefill. A
+    // ~40 MB prompt is ~650k chunks; after ONE observed chunk cost the
+    // lower bound (remaining chunks × fastest chunk) provably exceeds the
+    // 10s deadline on any real machine, so the row retires at the next
+    // tick's sweep instead of grinding chunks until the wall clock expires.
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut batcher = Batcher::new(1);
+    let huge_prompt = "x".repeat(40_000_000);
+    batcher.submit_with(
+        Request {
+            id: 7,
+            prompt: huge_prompt.into_bytes(),
+            max_new_tokens: 4,
+        },
+        deadline_in(10),
+    );
+    let start = Instant::now();
+    let mut done = Vec::new();
+    while done.is_empty() {
+        assert!(
+            start.elapsed() < Duration::from_secs(60),
+            "prefill pre-emption never fired (nor did the deadline sweep)"
+        );
+        done.extend(batcher.tick(&mut engine).unwrap());
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(8),
+        "pre-emption must fire well before the 10s deadline"
+    );
+    let c = &done[0];
+    assert_eq!(c.id, 7);
+    assert_eq!(c.finish_reason, FinishReason::Deadline);
+    assert_eq!(c.decode_steps, 0, "the prompt never finished absorbing");
+    assert!(c.text.is_empty());
+    let stats = batcher.stats();
+    assert_eq!(stats.deadline_preempted_prefill, 1, "counted as a prefill pre-emption");
+    assert_eq!(stats.deadline_preempted, 0, "not mistaken for a decode pre-emption");
+    assert_eq!(stats.retired, 1);
+    assert_eq!(engine.kv_pool.in_use(), 0, "blocks returned immediately");
+}
+
+#[test]
+fn feasible_multi_chunk_prefill_deadline_is_never_preempted() {
+    // a handful of chunks inside an hour is trivially feasible — the
+    // prefill-side proof must stay conservative
+    let prompt = "The careful archivist catalogued every ledger ".repeat(8); // ~6 chunks
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let want = {
+        let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+        let mut seq = engine.new_sequence(0, prompt.as_bytes());
+        engine.generate(&mut seq, 4).unwrap()
+    };
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    let mut batcher = Batcher::new(1);
+    batcher.submit_with(
+        Request {
+            id: 1,
+            prompt: prompt.as_bytes().to_vec(),
+            max_new_tokens: 4,
+        },
+        deadline_in(3600),
+    );
+    let done = batcher.run_to_completion(&mut engine).unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish_reason, FinishReason::Length);
+    assert_eq!(done[0].text, want);
+    let stats = batcher.stats();
+    assert_eq!(stats.deadline_preempted_prefill, 0);
+    assert_eq!(stats.deadline_preempted, 0);
+}
+
+#[test]
 fn feasible_deadline_is_never_preempted() {
     let prompt = "The ferry crossed ";
     let want = isolated(prompt, 5);

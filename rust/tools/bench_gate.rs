@@ -29,6 +29,12 @@ struct Case {
     threads: usize,
     pool_calls_per_sec: f64,
     speedup: f64,
+    /// Baseline-only marker for newly added bench cases: an `"additive":
+    /// true` baseline case that the current dump does not produce is a
+    /// warning, not case drift — so a baseline entry can land with (or
+    /// ahead of) the bench change without breaking runs of an older bench
+    /// binary. When the case IS produced, it is gated normally.
+    additive: bool,
 }
 
 fn load(path: &str) -> Result<Vec<Case>, String> {
@@ -51,9 +57,50 @@ fn load(path: &str) -> Result<Vec<Case>, String> {
             threads: f("threads")? as usize,
             pool_calls_per_sec: f("pool_calls_per_sec")?,
             speedup: f("speedup")?,
+            additive: c
+                .get("additive")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
         });
     }
     Ok(out)
+}
+
+/// Case-drift report: current cases with no baseline entry are always an
+/// error (an ungated case is a silent hole); baseline cases the bench did
+/// not produce are an error *unless* flagged additive (returned separately
+/// as warnings).
+fn drift(baseline: &[Case], current: &[Case]) -> (Vec<String>, Vec<String>) {
+    let mut errors = Vec::new();
+    let mut warnings = Vec::new();
+    for cur in current {
+        if !baseline
+            .iter()
+            .any(|b| b.jobs == cur.jobs && b.n == cur.n && b.threads == cur.threads)
+        {
+            errors.push(format!(
+                "current case jobs={} n={} t={} missing from baseline",
+                cur.jobs, cur.n, cur.threads
+            ));
+        }
+    }
+    for base in baseline {
+        if !current
+            .iter()
+            .any(|c| c.jobs == base.jobs && c.n == base.n && c.threads == base.threads)
+        {
+            let msg = format!(
+                "baseline case jobs={} n={} t={} not produced by the bench",
+                base.jobs, base.n, base.threads
+            );
+            if base.additive {
+                warnings.push(format!("{msg} (additive: tolerated, not gated)"));
+            } else {
+                errors.push(msg);
+            }
+        }
+    }
+    (errors, warnings)
 }
 
 fn run() -> Result<bool, String> {
@@ -73,35 +120,19 @@ fn run() -> Result<bool, String> {
 
     // case drift is an error, not a silent skip: a renamed/added bench case
     // without a baseline refresh would otherwise leave it ungated, and a
-    // baseline-only case would never be checked again
-    let mut drift = Vec::new();
-    for cur in &current {
-        if !baseline
-            .iter()
-            .any(|b| b.jobs == cur.jobs && b.n == cur.n && b.threads == cur.threads)
-        {
-            drift.push(format!(
-                "current case jobs={} n={} t={} missing from baseline",
-                cur.jobs, cur.n, cur.threads
-            ));
-        }
+    // baseline-only case would never be checked again. The one sanctioned
+    // exception: a baseline case flagged `"additive": true` that the
+    // current dump lacks (a newly added case run against an older bench
+    // binary) — tolerated with a warning, gated as soon as it appears.
+    let (errors, warnings) = drift(&baseline, &current);
+    for w in &warnings {
+        println!("  note: {w}");
     }
-    for base in &baseline {
-        if !current
-            .iter()
-            .any(|c| c.jobs == base.jobs && c.n == base.n && c.threads == base.threads)
-        {
-            drift.push(format!(
-                "baseline case jobs={} n={} t={} not produced by the bench",
-                base.jobs, base.n, base.threads
-            ));
-        }
-    }
-    if !drift.is_empty() {
+    if !errors.is_empty() {
         return Err(format!(
             "case drift — refresh the baseline (HGCA_BENCH_JSON=$PWD/{baseline_path} cargo bench \
              --bench hotpath_micro, from the workspace root):\n  {}",
-            drift.join("\n  ")
+            errors.join("\n  ")
         ));
     }
 
@@ -156,5 +187,56 @@ fn main() {
             eprintln!("bench gate: error: {e}");
             std::process::exit(2);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(jobs: usize, additive: bool) -> Case {
+        Case {
+            jobs,
+            n: 512,
+            threads: 4,
+            pool_calls_per_sec: 1000.0,
+            speedup: 2.0,
+            additive,
+        }
+    }
+
+    #[test]
+    fn matching_case_sets_have_no_drift() {
+        let (errors, warnings) = drift(&[case(4, false)], &[case(4, false)]);
+        assert!(errors.is_empty());
+        assert!(warnings.is_empty());
+    }
+
+    #[test]
+    fn current_only_case_is_always_an_error() {
+        // an ungated case is a silent hole, additive or not
+        let (errors, _) = drift(&[], &[case(4, false)]);
+        assert_eq!(errors.len(), 1);
+        assert!(errors[0].contains("missing from baseline"));
+    }
+
+    #[test]
+    fn baseline_only_case_errors_unless_additive() {
+        let (errors, warnings) = drift(&[case(4, false)], &[]);
+        assert_eq!(errors.len(), 1);
+        assert!(warnings.is_empty());
+        let (errors, warnings) = drift(&[case(4, true)], &[]);
+        assert!(errors.is_empty(), "additive baseline cases are tolerated");
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("additive"));
+    }
+
+    #[test]
+    fn additive_case_is_gated_once_produced() {
+        // once the bench emits it, an additive case compares like any other
+        let (errors, warnings) =
+            drift(&[case(4, true), case(8, false)], &[case(4, false), case(8, false)]);
+        assert!(errors.is_empty());
+        assert!(warnings.is_empty());
     }
 }
