@@ -43,9 +43,17 @@ pub struct CpuAttnOutput {
     pub probs: Option<Vec<Vec<f32>>>,
     /// number of spawned tasks (diagnostics; ≈ min(threads, jobs))
     pub tasks: usize,
+    /// summed task execution seconds across workers + caller-assist for
+    /// this submission (pool paths only; the spawn reference path reports
+    /// 0.0). Under overlapped execution this is the honest "CPU sparse
+    /// work" figure — the submitter's wall wait also covers its own
+    /// bookkeeping and is tracked separately (`cpu_attn_wait_secs`).
+    pub busy_secs: f64,
 }
 
-pub const EMPTY_LSE: f32 = -1e30;
+// The sentinel has exactly one definition (attention::merge) — re-exported
+// here so job producers and the LSE merge can never drift apart.
+pub use super::merge::EMPTY_LSE;
 
 /// q is [jobs][n_query][d_head] flat, aligned with `jobs`.
 pub fn sparse_attention(
@@ -216,7 +224,13 @@ pub fn sparse_attention_spawn_masked(
     let mut tasks = 0;
 
     if nj == 0 {
-        return CpuAttnOutput { o, lse, probs: want_probs.then_some(probs), tasks: 0 };
+        return CpuAttnOutput {
+            o,
+            lse,
+            probs: want_probs.then_some(probs),
+            tasks: 0,
+            busy_secs: 0.0,
+        };
     }
 
     std::thread::scope(|s| {
@@ -255,6 +269,7 @@ pub fn sparse_attention_spawn_masked(
         lse,
         probs: want_probs.then_some(probs),
         tasks,
+        busy_secs: 0.0,
     }
 }
 

@@ -32,14 +32,28 @@
 /// ```
 pub fn merge_head(o_acc: &mut [f32], lse_a: f32, o_b: &[f32], lse_b: f32) -> f32 {
     debug_assert_eq!(o_acc.len(), o_b.len());
-    let m = lse_a.max(lse_b);
-    if m == f32::NEG_INFINITY || m < -1e29 {
+    // Emptiness is a *sentinel* comparison, never a magnitude threshold: a
+    // genuine partial with a huge-negative lse (a real softmax over deeply
+    // negative scores) must survive the merge, not get zeroed. Producers
+    // mark "no entries" with exactly EMPTY_LSE (or -inf for an all-masked
+    // row), and both values round-trip bitwise — see `is_empty_lse`.
+    let empty_a = is_empty_lse(lse_a);
+    let empty_b = is_empty_lse(lse_b);
+    if empty_a && empty_b {
         // both sides empty — leave zeros
         for v in o_acc.iter_mut() {
             *v = 0.0;
         }
         return f32::NEG_INFINITY;
     }
+    if empty_b {
+        return lse_a; // identity: o_acc already holds O_a
+    }
+    if empty_a {
+        o_acc.copy_from_slice(o_b);
+        return lse_b;
+    }
+    let m = lse_a.max(lse_b);
     let wa = (lse_a - m).exp();
     let wb = (lse_b - m).exp();
     let z = wa + wb;
@@ -72,7 +86,22 @@ pub fn merge_states(
 }
 
 /// lse value denoting "no entries on this side".
+///
+/// This is the **single** definition of the sentinel (re-exported from
+/// `attention::cpu_attention` and `attention` itself); producer and
+/// consumer can never drift apart. Both the CPU job kernel and the dense
+/// artifact emit it bitwise: `softmax_lse` over an empty score row
+/// computes `-1e30 + ln(1e-30)`, and the `≈ -69` addend vanishes below
+/// the f32 ulp at 1e30 — the result is exactly `-1e30`.
 pub const EMPTY_LSE: f32 = -1e30;
+
+/// `true` iff `lse` marks an empty side: the exact [`EMPTY_LSE`] sentinel
+/// or `-inf` (a fold over zero scores before the sentinel clamp). Any
+/// other value — however negative — is a genuine partial.
+#[inline]
+pub fn is_empty_lse(lse: f32) -> bool {
+    lse == EMPTY_LSE || lse == f32::NEG_INFINITY
+}
 
 #[cfg(test)]
 mod tests {
@@ -123,6 +152,52 @@ mod tests {
         let l = merge_head(&mut o, EMPTY_LSE, &[7.0, 7.0], EMPTY_LSE);
         assert_eq!(o, vec![0.0, 0.0]);
         assert_eq!(l, f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn huge_negative_lse_is_a_partial_not_a_sentinel() {
+        // regression: the old check treated any m < -1e29 as "both sides
+        // empty" and zeroed the output. A genuine partial just above the
+        // sentinel must merge as a real (dominated or dominating) side.
+        let lse_real = -0.5e30_f32; // < -1e29, but NOT the sentinel
+        assert!(!is_empty_lse(lse_real));
+
+        // real-vs-empty: the real side survives verbatim
+        let mut o = vec![1.0, -2.0];
+        let l = merge_head(&mut o, lse_real, &[9.0, 9.0], EMPTY_LSE);
+        assert_eq!(o, vec![1.0, -2.0], "real partial must not be zeroed");
+        assert_eq!(l, lse_real);
+
+        // empty-vs-real, accumulator side: o_b is copied through
+        let mut o = vec![5.0, 5.0];
+        let l = merge_head(&mut o, EMPTY_LSE, &[3.0, 4.0], lse_real);
+        assert_eq!(o, vec![3.0, 4.0]);
+        assert_eq!(l, lse_real);
+
+        // two real huge-negative partials merge by weight, not to zero
+        let mut o = vec![1.0];
+        let l = merge_head(&mut o, lse_real, &[3.0], lse_real);
+        assert!((o[0] - 2.0).abs() < 1e-6, "equal lse → mean, got {o:?}");
+        // the + ln 2 addend vanishes below the f32 ulp at 0.5e30
+        assert!(l >= lse_real && l.is_finite());
+    }
+
+    #[test]
+    fn sentinel_boundary_values() {
+        // exactly the sentinel → empty
+        assert!(is_empty_lse(EMPTY_LSE));
+        assert!(is_empty_lse(f32::NEG_INFINITY));
+        // one ulp above/below the sentinel → a genuine partial
+        let above = f32::from_bits(EMPTY_LSE.to_bits() - 1); // toward 0
+        let below = f32::from_bits(EMPTY_LSE.to_bits() + 1); // more negative
+        assert!(above > EMPTY_LSE && !is_empty_lse(above));
+        assert!(below < EMPTY_LSE && !is_empty_lse(below));
+        for &lse in &[above, below] {
+            let mut o = vec![7.0];
+            let l = merge_head(&mut o, lse, &[0.0], EMPTY_LSE);
+            assert_eq!(o, vec![7.0], "near-sentinel partial survives");
+            assert_eq!(l, lse);
+        }
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub use cpu_attention::{
     sparse_attention_masked, sparse_attention_masked_placed, sparse_attention_spawn,
     CpuAttnOutput, HeadJob,
 };
-pub use merge::{merge_head, merge_states, EMPTY_LSE};
-pub use pool::{AttnPool, PoolStats, TaskSplit};
+pub use merge::{is_empty_lse, merge_head, merge_states, EMPTY_LSE};
+pub use pool::{AttnPool, OwnedJobs, PendingAttn, PoolStats, TaskSplit};

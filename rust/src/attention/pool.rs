@@ -11,8 +11,17 @@
 //! * **submit/wait** — [`AttnPool::run_masked`] packs the (row, head) jobs
 //!   into contiguous ranges ("adjacent head merging"), enqueues one task per
 //!   range, and blocks until the batch completes. Each task writes a
-//!   disjoint slice of the caller's pre-allocated output buffers, exactly as
-//!   the spawn path did.
+//!   disjoint slice of pre-allocated output buffers, exactly as the spawn
+//!   path did.
+//! * **non-blocking submit** — [`AttnPool::submit_placed`] takes **owned**
+//!   inputs ([`OwnedJobs`]), enqueues the same planned tasks, and returns a
+//!   [`PendingAttn`] handle immediately; `wait()` performs the blocking
+//!   path's caller-assist drain + completion wait. Inputs and outputs live
+//!   in Arc'd storage every task keeps alive, so the submitter can run
+//!   serial work (the engine's KV bookkeeping) concurrently with the
+//!   sparse jobs — the HGCA overlap — and even drop the handle without
+//!   waiting. The blocking entry points are thin submit + wait wrappers
+//!   over the same core.
 //! * **placement** — [`AttnPool::run_placed`] takes a per-job node map (the
 //!   KV shard map, see `kv::CpuLayerStore`): each task lands on the queue
 //!   of its first job's node, so the workers pinned to that node stream
@@ -48,6 +57,7 @@
 //! [`AttnPool::init_global`] when the serving binary passes `--numa-nodes`
 //! before first use.
 
+use std::cell::UnsafeCell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -150,6 +160,10 @@ struct BatchState {
     /// set when any task of this batch panicked — the submitter must not
     /// treat the (partially written) outputs as valid
     poisoned: AtomicBool,
+    /// summed task execution nanoseconds for **this submission** (pool-side
+    /// busy time — distinct from the submitter's wall wait, which under
+    /// overlapped execution also covers its own bookkeeping work)
+    busy_ns: AtomicU64,
 }
 
 impl BatchState {
@@ -158,6 +172,7 @@ impl BatchState {
             remaining: Mutex::new(n),
             done_cv: Condvar::new(),
             poisoned: AtomicBool::new(false),
+            busy_ns: AtomicU64::new(0),
         })
     }
 
@@ -258,14 +273,19 @@ impl Shared {
     /// Run one task, catching panics so the batch completion count is
     /// decremented no matter what (a waiter must never hang, and queued
     /// sibling tasks must never outlive their borrowed buffers — see the
-    /// SAFETY notes in `run_placed`). Returns the panic payload, if any.
+    /// SAFETY notes in `submit_core`). Returns the panic payload, if any.
+    ///
+    /// Invoking `run` consumes the closure, so everything it captured —
+    /// including its `Arc<PendingStorage>` keep-alive — is dropped *before*
+    /// `finish_one` wakes the waiter; [`PendingAttn::wait`] relies on that
+    /// to reclaim the storage with `Arc::try_unwrap`.
     fn run_task(&self, task: Task) -> Option<Box<dyn std::any::Any + Send>> {
         let Task { run, batch } = task;
         let t0 = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run));
-        self.counters
-            .busy_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let dt = t0.elapsed().as_nanos() as u64;
+        self.counters.busy_ns.fetch_add(dt, Ordering::Relaxed);
+        batch.busy_ns.fetch_add(dt, Ordering::Relaxed);
         if result.is_err() {
             batch.poisoned.store(true, Ordering::SeqCst);
         }
@@ -303,23 +323,136 @@ impl Shared {
     }
 }
 
-/// Unwind guard for a submission: if `run_placed` unwinds (a caller-assist
-/// task re-raised a panic), this drains and waits out the whole batch
-/// before the caller's stack frame — which the queued tasks borrow — is
-/// torn down. On the normal path the batch is already done and this is a
-/// no-op.
-struct BatchGuard<'p> {
-    shared: &'p Shared,
-    batch: &'p Arc<BatchState>,
-    home: usize,
+/// Owned inputs for a non-blocking submission
+/// ([`AttnPool::submit_placed`]): per-job KV copies plus the flat query
+/// block. The engine's gather loop already produces exactly this shape
+/// (owned copies out of the CPU store), so handing it to the pool moves
+/// vectors — it never re-copies KV.
+pub struct OwnedJobs {
+    /// per job: contiguous `[n][d_head]` K and V copies + entry count `n`
+    pub kvs: Vec<(Vec<f32>, Vec<f32>, usize)>,
+    /// `[jobs][n_query][d_head]` flat queries, aligned with `kvs`
+    pub q: Vec<f32>,
+    /// per-job count of valid query rows (`None` = all rows valid)
+    pub q_valid: Option<Vec<usize>>,
 }
 
-impl Drop for BatchGuard<'_> {
+/// Output buffers the tasks of one submission write into (disjoint slices
+/// handed out at submit time).
+struct OutBufs {
+    o: Vec<f32>,
+    lse: Vec<f32>,
+    probs: Vec<Vec<f32>>,
+}
+
+/// Heap home of one submission's data: the owned inputs its tasks borrow
+/// (`None` on the blocking path, whose inputs live in the caller's frame
+/// under the historical block-before-return contract) plus the output
+/// buffers. Shared as `Arc<PendingStorage>` by the [`PendingAttn`] handle
+/// *and every task closure*, so the data outlives the last task no matter
+/// when — or whether — the submitter waits. This owned storage is what
+/// lets `submit_placed` return without blocking.
+struct PendingStorage {
+    owned: Option<OwnedJobs>,
+    out: UnsafeCell<OutBufs>,
+}
+
+// SAFETY: `owned` is never written after construction (tasks only read
+// through shared borrows). `out` is only touched through pairwise-disjoint
+// `&mut` slices split off before the tasks are published (split_at_mut),
+// and the handle re-reads it only after batch completion — the batch
+// mutex provides the happens-before edge from every task's writes.
+unsafe impl Send for PendingStorage {}
+unsafe impl Sync for PendingStorage {}
+
+/// Handle to an in-flight submission ([`AttnPool::submit_placed`] /
+/// `submit_core`). [`PendingAttn::wait`] performs the blocking path's
+/// caller-assist drain + completion wait and returns the output; dropping
+/// the handle without waiting is safe — the drop drains and waits out the
+/// batch (swallowing task panics, since it may already be unwinding), so
+/// queues and counters are quiescent and nothing leaks. The handle owns
+/// [`Arc`]s only (no borrows), so it can outlive the submitting frame.
+pub struct PendingAttn {
+    shared: Arc<Shared>,
+    batch: Arc<BatchState>,
+    /// `Some` until consumed by [`PendingAttn::wait`]
+    storage: Option<Arc<PendingStorage>>,
+    /// node of the batch's first task — where caller-assist pops first
+    home: usize,
+    n_tasks: usize,
+    want_probs: bool,
+}
+
+impl PendingAttn {
+    /// Caller-assist drain + completion wait: pop tasks — home node first,
+    /// then the other queues, possibly from concurrent submissions — until
+    /// this batch drains, wait out stragglers running on other threads,
+    /// then hand back the submission's output. Identical scheduling to the
+    /// blocking `run_placed` (which is now literally submit + wait).
+    ///
+    /// # Panics
+    ///
+    /// Re-raises a panic from a task the *caller* ran, and asserts that no
+    /// worker-run task of this submission panicked (the output would be
+    /// garbage). In both cases the batch is fully settled first.
+    pub fn wait(mut self) -> CpuAttnOutput {
+        while !self.batch.is_done() {
+            let Some((task, from)) = self.shared.pop_task_preferring(self.home) else {
+                break;
+            };
+            if let Some(payload) = self.shared.run_for_caller(task, from, self.home) {
+                // a task the caller ran panicked: propagate to the caller
+                // (Drop settles the rest of the batch first)
+                std::panic::resume_unwind(payload);
+            }
+        }
+        self.batch.wait();
+        // a task that panicked on a worker completed its batch slot (so we
+        // never hang) but its output range is garbage — surface the failure
+        // on the submitting thread instead of returning partial results
+        assert!(
+            !self.batch.poisoned.load(Ordering::SeqCst),
+            "attention pool: a task of this submission panicked"
+        );
+        let mut storage = self.storage.take().expect("storage present until wait");
+        let (n_tasks, want_probs) = (self.n_tasks, self.want_probs);
+        let busy_secs = self.batch.busy_ns.load(Ordering::Relaxed) as f64 / 1e9;
+        drop(self); // batch settled + storage taken → Drop is a no-op
+        // every task dropped its storage keep-alive before completing its
+        // batch slot (see `run_task`), so this Arc is the last one; the
+        // loop only guards against an unwinding task still tearing down
+        let bufs = loop {
+            match Arc::try_unwrap(storage) {
+                Ok(s) => break s.out.into_inner(),
+                Err(back) => {
+                    storage = back;
+                    std::thread::yield_now();
+                }
+            }
+        };
+        CpuAttnOutput {
+            o: bufs.o,
+            lse: bufs.lse,
+            probs: want_probs.then_some(bufs.probs),
+            tasks: n_tasks,
+            busy_secs,
+        }
+    }
+}
+
+impl Drop for PendingAttn {
     fn drop(&mut self) {
+        if self.storage.is_none() {
+            return; // consumed by wait(): batch already settled
+        }
+        // dropped without wait() — or unwinding out of wait's assist loop.
+        // Memory is already safe (tasks keep the storage alive via their
+        // own Arc clones); draining + waiting here keeps the pool's queues
+        // and counters quiescent when the handle dies, and mirrors the old
+        // BatchGuard unwind contract. Panic payloads are swallowed: we may
+        // already be unwinding, and a double panic would abort.
         while !self.batch.is_done() {
             match self.shared.pop_task_preferring(self.home) {
-                // panics here are already being reported by the unwind in
-                // flight; swallow them to avoid a double-panic abort
                 Some((t, from)) => {
                     let _ = self.shared.run_for_caller(t, from, self.home);
                 }
@@ -600,21 +733,133 @@ impl AttnPool {
         if let Some(map) = nodes {
             assert_eq!(map.len(), nj, "node map must align with jobs");
         }
-        let mut o = vec![0.0f32; nj * n_query * d_head];
-        let mut lse = vec![EMPTY_LSE; nj * n_query];
-        let mut probs: Vec<Vec<f32>> = if want_probs {
-            jobs.iter().map(|j| vec![0.0; j.n]).collect()
-        } else {
-            Vec::new()
-        };
         if nj == 0 {
+            // early-out before any counter/storage work (an empty
+            // submission is not a submission — see the stats tests)
             return CpuAttnOutput {
-                o,
-                lse,
-                probs: want_probs.then_some(probs),
+                o: Vec::new(),
+                lse: Vec::new(),
+                probs: want_probs.then_some(Vec::new()),
                 tasks: 0,
+                busy_secs: 0.0,
             };
         }
+        let storage = Arc::new(PendingStorage {
+            owned: None,
+            out: UnsafeCell::new(out_bufs_for(jobs, n_query, d_head, want_probs)),
+        });
+        // SAFETY: the job/q/q_valid borrows the tasks capture point into
+        // the *caller's frame*; `wait()` below blocks until the batch
+        // completes, so they outlive every task — the historical blocking
+        // contract of this entry point.
+        let pending = unsafe {
+            self.submit_core(
+                jobs, q, n_query, d_head, split, want_probs, q_valid, nodes, storage,
+            )
+        };
+        pending.wait()
+    }
+
+    /// Non-blocking [`run_placed`](AttnPool::run_placed): enqueue the
+    /// planned tasks — same [`TaskSplit`] plan, same per-node placement,
+    /// same counters — and return immediately with a [`PendingAttn`]
+    /// handle. The submission's inputs are **owned** (moved into Arc'd
+    /// storage every task keeps alive), so nothing borrows the caller's
+    /// frame and the caller is free to run serial work — the engine's KV
+    /// bookkeeping — while workers crunch the sparse jobs; `wait()` then
+    /// performs exactly the blocking path's caller-assist drain +
+    /// completion wait. Outputs are bitwise identical to `run_placed` for
+    /// the same inputs: the overlap changes *when* the caller blocks,
+    /// never the plan, the placement, or the numerics.
+    pub fn submit_placed(
+        &self,
+        input: OwnedJobs,
+        n_query: usize,
+        d_head: usize,
+        split: TaskSplit,
+        want_probs: bool,
+        nodes: Option<&[NodeId]>,
+    ) -> PendingAttn {
+        let nj = input.kvs.len();
+        assert_eq!(input.q.len(), nj * n_query * d_head, "q layout mismatch");
+        if let Some(v) = &input.q_valid {
+            assert_eq!(v.len(), nj, "q_valid must align with jobs");
+        }
+        if let Some(map) = nodes {
+            assert_eq!(map.len(), nj, "node map must align with jobs");
+        }
+        for (k, v, n) in &input.kvs {
+            debug_assert_eq!(k.len(), *n * d_head, "k layout mismatch");
+            debug_assert_eq!(v.len(), *n * d_head, "v layout mismatch");
+        }
+        let out = OutBufs {
+            o: vec![0.0f32; nj * n_query * d_head],
+            lse: vec![EMPTY_LSE; nj * n_query],
+            probs: if want_probs {
+                input.kvs.iter().map(|(_, _, n)| vec![0.0; *n]).collect()
+            } else {
+                Vec::new()
+            },
+        };
+        let storage = Arc::new(PendingStorage {
+            owned: Some(input),
+            out: UnsafeCell::new(out),
+        });
+        let owned = storage.owned.as_ref().expect("owned input just stored");
+        let jobs: Vec<HeadJob<'_>> = owned
+            .kvs
+            .iter()
+            .map(|(k, v, n)| HeadJob { k, v, n: *n })
+            .collect();
+        // SAFETY: every borrow the tasks capture points into `storage`,
+        // which each task closure keeps alive via its own Arc clone — the
+        // data outlives the batch regardless of when (or whether) the
+        // caller waits, even if this handle is dropped immediately.
+        unsafe {
+            self.submit_core(
+                &jobs,
+                &owned.q,
+                n_query,
+                d_head,
+                split,
+                want_probs,
+                owned.q_valid.as_deref(),
+                nodes,
+                Arc::clone(&storage),
+            )
+        }
+    }
+
+    /// Shared submission core: plan tasks, split `storage`'s output
+    /// buffers into disjoint per-task slices, enqueue with placement, and
+    /// return the handle. Does **not** block (beyond queue locks).
+    ///
+    /// # Safety
+    ///
+    /// Every borrow reachable through `jobs` / `q` / `q_valid` is
+    /// promoted to `'static` for the queued closures. The caller must
+    /// guarantee those borrows stay valid until the returned handle's
+    /// batch completes — either because they point into `storage` itself
+    /// (the owned `submit_placed` path) or because the caller blocks on
+    /// the batch before its frame unwinds (the `run_placed` path, whose
+    /// `PendingAttn` — waited *or* dropped — settles the batch first).
+    /// Output slices are pairwise disjoint by construction (split_at_mut),
+    /// so concurrent tasks never alias.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn submit_core(
+        &self,
+        jobs: &[HeadJob<'_>],
+        q: &[f32],
+        n_query: usize,
+        d_head: usize,
+        split: TaskSplit,
+        want_probs: bool,
+        q_valid: Option<&[usize]>,
+        nodes: Option<&[NodeId]>,
+        storage: Arc<PendingStorage>,
+    ) -> PendingAttn {
+        let nj = jobs.len();
+        debug_assert!(nj > 0, "callers early-out empty submissions");
 
         // contiguous job ranges per task — the "adjacent head packing";
         // depends only on the job shapes, never on worker availability
@@ -631,9 +876,12 @@ impl AttnPool {
         // the caller assists on the node of the batch's first task
         let mut home = 0usize;
         {
-            let mut o_rest: &mut [f32] = &mut o;
-            let mut lse_rest: &mut [f32] = &mut lse;
-            let mut probs_rest: &mut [Vec<f32>] = &mut probs;
+            // the one &mut to the output buffers; split below into
+            // disjoint per-task slices before any task is published
+            let bufs: &mut OutBufs = &mut *storage.out.get();
+            let mut o_rest: &mut [f32] = &mut bufs.o;
+            let mut lse_rest: &mut [f32] = &mut bufs.lse;
+            let mut probs_rest: &mut [Vec<f32>] = &mut bufs.probs;
             let mut start = 0;
             for (ti, &count) in counts.iter().enumerate() {
                 let (o_task, o_next) = o_rest.split_at_mut(count * n_query * d_head);
@@ -649,19 +897,20 @@ impl AttnPool {
                 let task_jobs = &jobs[start..start + count];
                 let task_q = &q[start * n_query * d_head..(start + count) * n_query * d_head];
                 let task_valid = q_valid.map(|v| &v[start..start + count]);
+                // each task keeps the storage alive until it finishes; the
+                // clone is dropped when the closure is consumed, strictly
+                // before the task's batch slot completes (see `run_task`)
+                let hold = Arc::clone(&storage);
                 let run: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     run_job_range(
                         task_jobs, task_q, n_query, d_head, o_task, lse_task, p_task, want_probs,
                         task_valid,
-                    )
+                    );
+                    drop(hold);
                 });
-                // SAFETY: every borrow captured by `run` outlives this call —
-                // run_placed blocks on batch completion before returning, so
-                // the 'static promotion never outlives the borrowed data.
-                // Output slices are pairwise disjoint by construction
-                // (split_at_mut), so concurrent tasks never alias.
-                let run: Box<dyn FnOnce() + Send + 'static> =
-                    unsafe { std::mem::transmute(run) };
+                // SAFETY: the 'static promotion is sound under this
+                // function's contract — see `# Safety` above.
+                let run: Box<dyn FnOnce() + Send + 'static> = std::mem::transmute(run);
                 // placement: the first job's node owns the task's slabs;
                 // unplaced submissions spread round-robin by task index
                 let node = match nodes {
@@ -686,42 +935,28 @@ impl AttnPool {
             self.shared.signal_work();
         }
 
-        // caller-assist: steal tasks (FIFO per node, own node first,
-        // possibly from other concurrent submissions) until this batch
-        // completes, then wait out stragglers. The guard keeps the unwind
-        // path sound: should a re-raised task panic unwind this frame, it
-        // drains + waits the batch before the borrowed buffers drop.
-        let guard = BatchGuard {
-            shared: &self.shared,
-            batch: &batch,
+        PendingAttn {
+            shared: Arc::clone(&self.shared),
+            batch,
+            storage: Some(storage),
             home,
-        };
-        while !batch.is_done() {
-            let Some((task, from)) = self.shared.pop_task_preferring(home) else {
-                break;
-            };
-            if let Some(payload) = self.shared.run_for_caller(task, from, home) {
-                // a task the *caller* ran panicked: propagate to the caller
-                // (the guard settles the rest of the batch first)
-                std::panic::resume_unwind(payload);
-            }
+            n_tasks,
+            want_probs,
         }
-        batch.wait();
-        drop(guard);
-        // a task that panicked on a worker completed its batch slot (so we
-        // never hang) but its output range is garbage — surface the failure
-        // on the submitting thread instead of returning partial results
-        assert!(
-            !batch.poisoned.load(Ordering::SeqCst),
-            "attention pool: a task of this submission panicked"
-        );
+    }
+}
 
-        CpuAttnOutput {
-            o,
-            lse,
-            probs: want_probs.then_some(probs),
-            tasks: n_tasks,
-        }
+/// Fresh output buffers sized for `jobs` (zero `o`, sentinel `lse`,
+/// per-job probs only when requested).
+fn out_bufs_for(jobs: &[HeadJob<'_>], n_query: usize, d_head: usize, want_probs: bool) -> OutBufs {
+    OutBufs {
+        o: vec![0.0f32; jobs.len() * n_query * d_head],
+        lse: vec![EMPTY_LSE; jobs.len() * n_query],
+        probs: if want_probs {
+            jobs.iter().map(|j| vec![0.0; j.n]).collect()
+        } else {
+            Vec::new()
+        },
     }
 }
 
@@ -928,6 +1163,42 @@ mod tests {
         assert_eq!(a.lse, b.lse);
         assert_eq!(a.probs, b.probs);
         assert_eq!(a.tasks, b.tasks);
+    }
+
+    #[test]
+    fn submit_placed_matches_run_placed_bitwise() {
+        // the overlap API is a pure scheduling change: owned-input submit +
+        // deferred wait produces the same bits as the blocking call
+        let mut rng = Rng::new(0xE55);
+        let dh = 16;
+        let kvs = rand_jobs(&mut rng, 10, dh, 30);
+        let jobs = as_jobs(&kvs);
+        let nq = 2;
+        let mut q = vec![0.0; jobs.len() * nq * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let q_valid: Vec<usize> = (0..jobs.len()).map(|i| i % (nq + 1)).collect();
+        let map: Vec<usize> = (0..jobs.len()).map(|j| j % 2).collect();
+        let split = TaskSplit::EvenJobs { max_parallel: 4 };
+        for workers in [0usize, 3] {
+            let pool = AttnPool::with_topology(workers, Topology::synthetic(2));
+            let blocking =
+                pool.run_placed(&jobs, &q, nq, dh, split, true, Some(&q_valid), Some(&map));
+            let input = OwnedJobs {
+                kvs: kvs.clone(),
+                q: q.clone(),
+                q_valid: Some(q_valid.clone()),
+            };
+            let pending = pool.submit_placed(input, nq, dh, split, true, Some(&map));
+            let out = pending.wait();
+            assert_eq!(out.o, blocking.o, "workers={workers}");
+            assert_eq!(out.lse, blocking.lse, "workers={workers}");
+            assert_eq!(out.probs, blocking.probs, "workers={workers}");
+            assert_eq!(out.tasks, blocking.tasks, "same plan either way");
+            assert!(out.busy_secs >= 0.0 && out.busy_secs.is_finite());
+            let s = pool.stats();
+            assert_eq!(s.submissions, 2, "submit counts like a blocking call");
+            assert_eq!(s.queue_depth, 0, "both batches fully drained");
+        }
     }
 
     #[test]

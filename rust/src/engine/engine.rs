@@ -9,7 +9,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::attention::{merge_states, HeadJob, EMPTY_LSE};
+use crate::attention::{
+    merge_states, AttnPool, CpuAttnOutput, OwnedJobs, PendingAttn, TaskSplit, EMPTY_LSE,
+};
 use crate::config::{HgcaConfig, ModelConfig};
 use crate::kv::{GpuBlockPool, KvManager};
 use crate::metrics::{Metrics, Timer};
@@ -102,6 +104,15 @@ pub struct Engine<'m> {
     /// the NUMA refactor); `hgca serve` sets it from `--numa-nodes` /
     /// detection via [`Engine::set_topology`].
     pub topology: Topology,
+    /// Overlap the CPU-sparse attention with the per-layer KV bookkeeping
+    /// (the paper's headline GPU∥CPU parallelism): gather + submit the
+    /// sparse jobs right after the dense artifact returns, run the serial
+    /// append/MAW/eviction bookkeeping while pool workers crunch, then
+    /// wait + merge. `false` forces the pre-overlap sequential order
+    /// (submit, wait, then bookkeeping) — bitwise identical tokens either
+    /// way (the conformance suite pins this); the toggle exists for A/B
+    /// benchmarking and as the bisection lever.
+    pub overlap_cpu_attn: bool,
     /// scratch: batch window staging buffers, reused across steps
     k_win: Vec<f32>,
     v_win: Vec<f32>,
@@ -121,6 +132,7 @@ impl<'m> Engine<'m> {
             rng: Rng::new(0x48474341),
             kv_pool: Arc::new(GpuBlockPool::new()),
             topology: Topology::single(),
+            overlap_cpu_attn: true,
             k_win: Vec::new(),
             v_win: Vec::new(),
         }
@@ -326,9 +338,91 @@ impl<'m> Engine<'m> {
             for (b, &v) in valid.iter().enumerate() {
                 n_valid[b] = v as i32;
             }
-            let out = exec.attn_step(
+            let mut out = exec.attn_step(
                 li, batch, w, n, &hidden, &self.k_win, &self.v_win, &win_len, &n_valid,
             )?;
+
+            // ---- CPU-side gather + non-blocking submit (Algorithm 2
+            // lines 6–7, 11–12), overlapped with the bookkeeping below ----
+            // Conformance argument: the gather snapshots the CPU store
+            // BEFORE any of this layer's bookkeeping mutates caches — the
+            // append/MAW loop below touches only the GPU window, and this
+            // chunk's overflow reaches the store only after wait() (the
+            // deferred drain) — so submitting here is bitwise identical to
+            // the old gather-after-bookkeeping order (identical merge
+            // inputs); it just stops serializing the two sides.
+            let mut pending: Option<(PendingAttn, Timer)> = None;
+            let mut cpu_done: Option<(CpuAttnOutput, f64)> = None;
+            let mut cpu_jobs = 0u64;
+            let mut sel_total = 0usize;
+            if self.policy.uses_cpu_side() {
+                // per-(row, head) jobs; on append attend the FULL store so
+                // re-evaluation sees complete scores (§3.2.2). `job_nodes`
+                // (built once above) aligns with this gather: the pool
+                // dispatches each packed task to the queue owning its
+                // slabs — placement only, never numerics
+                let mut gathered: Vec<(Vec<f32>, Vec<f32>, usize)> =
+                    Vec::with_capacity(batch * h_n);
+                for seq in seqs.iter() {
+                    let store = &seq.kv.layers[li].cpu;
+                    let g = if is_append && !store.is_empty() {
+                        Policy::FullOffload.gather_jobs(store, seq.kv.seq_len)
+                    } else {
+                        self.policy.gather_jobs(store, seq.kv.seq_len)
+                    };
+                    debug_assert_eq!(g.len(), h_n);
+                    gathered.extend(g);
+                }
+                for _ in nactive..batch {
+                    for _ in 0..h_n {
+                        gathered.push((Vec::new(), Vec::new(), 0));
+                    }
+                }
+                cpu_jobs = gathered.len() as u64;
+                sel_total = gathered.iter().map(|(_, _, cnt)| *cnt).sum();
+                let mut q_valid = Vec::with_capacity(gathered.len());
+                for b in 0..batch {
+                    let v = if b < nactive { valid[b] } else { 0 };
+                    for _ in 0..h_n {
+                        q_valid.push(v);
+                    }
+                }
+                // append re-evaluation (or a full-offload-style decode)
+                // spans the FULL store per head: size the task split by
+                // store length, not the decode parallelism cap
+                let split = if is_append || self.policy.decode_attends_full_store() {
+                    TaskSplit::ByEntries {
+                        per_task: self.cfg.append_entries_per_task,
+                        max_tasks: self.cfg.cpu_threads.saturating_mul(4).max(1),
+                    }
+                } else {
+                    TaskSplit::EvenJobs { max_parallel: self.cfg.cpu_threads }
+                };
+                // one pool submission carries every active sequence's jobs
+                // for this layer (continuous batching: cross-request work
+                // is fused, then split back per sequence by the LSE merge).
+                // The gathered KV copies and the artifact's q MOVE into
+                // the submission's owned storage — no re-copies
+                let input = OwnedJobs {
+                    kvs: gathered,
+                    q: std::mem::take(&mut out.q),
+                    q_valid: Some(q_valid),
+                };
+                let t = Timer::start();
+                let p = AttnPool::global()
+                    .submit_placed(input, n, dh, split, is_append, Some(&job_nodes));
+                if self.overlap_cpu_attn {
+                    // pool workers crunch the sparse jobs while this
+                    // thread runs the serial KV bookkeeping below
+                    pending = Some((p, t));
+                } else {
+                    // forced-sequential reference path: finish the sparse
+                    // side before bookkeeping (the pre-overlap engine)
+                    let done = p.wait();
+                    let secs = t.secs();
+                    cpu_done = Some((done, secs));
+                }
+            }
 
             // append new KV + MAW update per row; chunk entries beyond the
             // logical window overflow into the CPU store — but only AFTER
@@ -418,78 +512,31 @@ impl<'m> Engine<'m> {
                 }
             }
 
-            // ---- CPU-side sparse attention (Algorithm 2 lines 6–7, 11–12) ----
+            // ---- wait for the sparse side, then merge (Algorithm 2 line 13) ----
             let mut o_gpu = out.o_gpu;
             let mut lse_gpu = out.lse;
             if self.policy.uses_cpu_side() {
-                // gather per-(row, head) jobs; on append attend the FULL
-                // store so re-evaluation sees complete scores (§3.2.2).
-                // `job_nodes` (built once above) aligns with this gather:
-                // the pool dispatches each packed task to the queue owning
-                // its slabs — placement only, never numerics
-                let mut gathered: Vec<(Vec<f32>, Vec<f32>, usize)> = Vec::with_capacity(batch * h_n);
-                for (b, seq) in seqs.iter().enumerate() {
-                    let store = &seq.kv.layers[li].cpu;
-                    let g = if is_append && !store.is_empty() {
-                        Policy::FullOffload.gather_jobs(store, seq.kv.seq_len)
-                    } else {
-                        self.policy.gather_jobs(store, seq.kv.seq_len)
-                    };
-                    debug_assert_eq!(g.len(), h_n);
-                    gathered.extend(g);
-                    let _ = b;
-                }
-                for _ in nactive..batch {
-                    for _ in 0..h_n {
-                        gathered.push((Vec::new(), Vec::new(), 0));
+                let (cpu_out, wait_secs, book_secs) = match cpu_done {
+                    // forced-sequential: the sparse side already completed
+                    // before the bookkeeping — nothing was hidden
+                    Some((done, secs)) => (done, secs, 0.0),
+                    None => {
+                        let (p, t) = pending.take().expect("cpu-side submission in flight");
+                        // time the submission has had to itself so far ==
+                        // the serial bookkeeping span hidden under sparse
+                        // execution (the overlap win)
+                        let book = t.secs();
+                        let done = p.wait();
+                        (done, t.secs(), book)
                     }
-                }
-                let jobs: Vec<HeadJob> = gathered
-                    .iter()
-                    .map(|(k, v, cnt)| HeadJob { k, v, n: *cnt })
-                    .collect();
-                let mut q_valid = Vec::with_capacity(jobs.len());
-                for b in 0..batch {
-                    let v = if b < nactive { valid[b] } else { 0 };
-                    for _ in 0..h_n {
-                        q_valid.push(v);
-                    }
-                }
-                // one pool submission carries every active sequence's jobs
-                // for this layer (continuous batching: cross-request work is
-                // fused, then split back per sequence by the LSE merge)
-                let cpu_t = Timer::start();
-                let store_sized = is_append || self.policy.decode_attends_full_store();
-                let cpu_out = if store_sized {
-                    // the gather spans the FULL store per head (append
-                    // re-evaluation, or a full-offload-style policy): size
-                    // the task split by store length, not the decode
-                    // parallelism cap (pool-aware split)
-                    crate::attention::cpu_attention::sparse_attention_append_placed(
-                        &jobs,
-                        &out.q,
-                        n,
-                        dh,
-                        self.cfg.append_entries_per_task,
-                        self.cfg.cpu_threads.saturating_mul(4).max(1),
-                        is_append,
-                        Some(&q_valid),
-                        &job_nodes,
-                    )
-                } else {
-                    crate::attention::cpu_attention::sparse_attention_masked_placed(
-                        &jobs,
-                        &out.q,
-                        n,
-                        dh,
-                        self.cfg.cpu_threads,
-                        is_append,
-                        Some(&q_valid),
-                        &job_nodes,
-                    )
                 };
-                self.metrics
-                    .observe_cpu_attn(cpu_t.secs(), jobs.len() as u64, cpu_out.tasks as u64);
+                self.metrics.observe_cpu_attn(
+                    wait_secs,
+                    cpu_out.busy_secs,
+                    cpu_jobs,
+                    cpu_out.tasks as u64,
+                );
+                self.metrics.observe_cpu_attn_overlap(book_secs);
 
                 merge_states(&mut o_gpu, &mut lse_gpu, &cpu_out.o, &cpu_out.lse, dh);
 
@@ -533,7 +580,7 @@ impl<'m> Engine<'m> {
                     }
                 }
                 // simulated time for this layer (per the active policy)
-                let (n_win, n_cpu, n_sel) = kv_sizes(seqs, li, &gathered, h_n);
+                let (n_win, n_cpu, n_sel) = kv_sizes(seqs, li, sel_total, h_n);
                 let (t, _) = self.policy.sim_attention(
                     &self.testbed,
                     &model,
@@ -797,10 +844,14 @@ fn compact_asum(
     out
 }
 
+/// Per-layer KV sizes for the simulator. `sel_total` is the summed
+/// selected-entry count across the layer's gathered jobs (the gather
+/// itself has already moved into the pool submission by the time timing
+/// runs, so the caller pre-computes the sum at gather time).
 fn kv_sizes(
     seqs: &[&mut Sequence],
     li: usize,
-    gathered: &[(Vec<f32>, Vec<f32>, usize)],
+    sel_total: usize,
     h_n: usize,
 ) -> (usize, usize, usize) {
     let n_win = seqs.iter().map(|s| s.kv.window_len(li)).max().unwrap_or(0);
@@ -810,7 +861,6 @@ fn kv_sizes(
         .max()
         .unwrap_or(0);
     // mean selected entries per head (rounded up)
-    let sel_total: usize = gathered.iter().map(|(_, _, n)| n).sum();
     let denom = (seqs.len() * h_n).max(1);
     (n_win, n_cpu, sel_total.div_ceil(denom))
 }

@@ -27,8 +27,18 @@ pub struct Metrics {
     /// peak memory observations
     pub peak_gpu_kv_bytes: usize,
     pub peak_cpu_kv_bytes: usize,
-    /// wall seconds inside CPU sparse attention (pool submissions)
-    pub cpu_attn_secs: f64,
+    /// wall seconds from sparse-attention submit to merge-ready (the
+    /// submitter's wait). Under overlapped execution this span also covers
+    /// the caller's own KV bookkeeping, so it is a *latency* figure, not a
+    /// CPU-work figure — that's `cpu_attn_busy_secs`.
+    pub cpu_attn_wait_secs: f64,
+    /// summed pool-side task execution seconds (workers + caller-assist)
+    /// for the engine's sparse submissions — the honest CPU-work figure
+    pub cpu_attn_busy_secs: f64,
+    /// serial bookkeeping seconds that ran concurrently with an in-flight
+    /// sparse submission — the time the overlap hid (0 when the engine
+    /// runs forced-sequential)
+    pub cpu_attn_overlap_secs: f64,
     /// (row, head) jobs submitted to the CPU attention pool
     pub cpu_attn_jobs: u64,
     /// packed tasks those jobs became (≈ jobs / adjacent-head merge factor)
@@ -66,11 +76,20 @@ impl Metrics {
         self.peak_cpu_kv_bytes = self.peak_cpu_kv_bytes.max(cpu);
     }
 
-    /// Account one CPU sparse-attention submission.
-    pub fn observe_cpu_attn(&mut self, secs: f64, jobs: u64, tasks: u64) {
-        self.cpu_attn_secs += secs;
+    /// Account one CPU sparse-attention submission: `wait_secs` is the
+    /// submit→merge-ready wall span on the engine thread, `busy_secs` the
+    /// pool-side execution time of the submission's tasks.
+    pub fn observe_cpu_attn(&mut self, wait_secs: f64, busy_secs: f64, jobs: u64, tasks: u64) {
+        self.cpu_attn_wait_secs += wait_secs;
+        self.cpu_attn_busy_secs += busy_secs;
         self.cpu_attn_jobs += jobs;
         self.cpu_attn_tasks += tasks;
+    }
+
+    /// Account bookkeeping time that ran while a sparse submission was in
+    /// flight (the overlap win; 0 under forced-sequential stepping).
+    pub fn observe_cpu_attn_overlap(&mut self, secs: f64) {
+        self.cpu_attn_overlap_secs += secs;
     }
 
     pub fn tbt_summary(&self) -> Option<Summary> {

@@ -248,7 +248,9 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         ),
         ("peak_gpu_kv_bytes", Json::num(m.peak_gpu_kv_bytes as f64)),
         ("peak_cpu_kv_bytes", Json::num(m.peak_cpu_kv_bytes as f64)),
-        ("cpu_attn_secs", Json::num(m.cpu_attn_secs)),
+        ("cpu_attn_wait_secs", Json::num(m.cpu_attn_wait_secs)),
+        ("cpu_attn_busy_secs", Json::num(m.cpu_attn_busy_secs)),
+        ("cpu_attn_overlap_secs", Json::num(m.cpu_attn_overlap_secs)),
         ("cpu_attn_jobs", Json::num(m.cpu_attn_jobs as f64)),
         ("cpu_attn_tasks", Json::num(m.cpu_attn_tasks as f64)),
         ("policy", Json::str(engine.policy.name())),

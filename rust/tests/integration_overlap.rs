@@ -1,0 +1,206 @@
+//! Conformance suite for the overlapped step pipeline (ISSUE 6): the
+//! engine submits the CPU-sparse side non-blockingly right after the dense
+//! artifact call and runs its serial KV bookkeeping while pool workers
+//! crunch the sparse jobs, waiting only at the merge point.
+//!
+//! The load-bearing invariants:
+//! * **Bitwise overlap conformance** — overlapped and forced-sequential
+//!   stepping produce byte-identical tokens for every policy that touches
+//!   the CPU side (hgca with multi-chunk append re-evaluation,
+//!   full-offload) and trivially for gpu-only (the submit is skipped).
+//!   The gather snapshots the CPU store *before* bookkeeping mutates any
+//!   cache, and the chunk's overflow enters the store only after the
+//!   merge, so reordering never changes the merge inputs.
+//! * **Topology-independence survives the overlap** — 1/2/4 synthetic
+//!   NUMA nodes reproduce the flat engine bit for bit, overlapped or not.
+//! * **Dropping a [`PendingAttn`] without waiting is safe** — the handle
+//!   settles its batch on drop, so the pool's queues and counters stay
+//!   quiescent and later submissions are unperturbed.
+//! * **The metrics split is observable** — `cpu_attn_overlap_secs`
+//!   accumulates only under overlapped stepping, and the wait/busy split
+//!   is populated whenever the CPU side runs.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::attention::{AttnPool, HeadJob, OwnedJobs, TaskSplit};
+use hgca::config::HgcaConfig;
+use hgca::engine::{Engine, Policy};
+use hgca::metrics::Metrics;
+use hgca::runtime::PjrtRuntime;
+use hgca::topology::Topology;
+
+fn runtime() -> Rc<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(PjrtRuntime::new(&dir).expect("runtime"))
+}
+
+fn corpus(n: usize) -> Vec<u8> {
+    let text = hgca::util::corpus::ensure_corpus(
+        &Path::new(env!("CARGO_MANIFEST_DIR")).join("data/corpus.txt"),
+    )
+    .expect("corpus");
+    text[4096..4096 + n].to_vec()
+}
+
+/// Logical window 32 → a 160-byte prompt overflows the GPU window during
+/// chunked prefill (chunk 64 → three append steps), exercising eviction,
+/// the CPU store, and append-time re-evaluation — the paths the overlap
+/// reorders around.
+fn small_cfg() -> HgcaConfig {
+    HgcaConfig {
+        blk_size: 8,
+        blk_num: 4,
+        ..Default::default()
+    }
+}
+
+/// Generate `max_new` greedy tokens on a fresh engine, overlapped or
+/// forced-sequential, on an `nodes`-node synthetic topology.
+fn run(
+    policy: Policy,
+    nodes: usize,
+    overlap: bool,
+    prompt: &[u8],
+    max_new: usize,
+) -> (Vec<u8>, Metrics) {
+    let rt = runtime();
+    let mr = rt.load_model("tiny-small").unwrap();
+    let mut engine = Engine::new(&mr, small_cfg(), policy);
+    engine.overlap_cpu_attn = overlap;
+    engine.set_topology(Topology::synthetic(nodes));
+    let mut seq = engine.new_sequence(0, prompt);
+    let out = engine.generate(&mut seq, max_new).unwrap();
+    (out, engine.metrics.clone())
+}
+
+// ---------------------------------------------------------------------
+// bitwise overlap conformance per policy
+// ---------------------------------------------------------------------
+
+#[test]
+fn overlapped_hgca_matches_sequential_bitwise() {
+    // multi-chunk prefill (append path + re-evaluation) + decode: the
+    // full set of reordered bookkeeping must not perturb a single byte
+    let prompt = corpus(160);
+    let (seq_tokens, seq_m) = run(Policy::Hgca { beta: 1.0 }, 1, false, &prompt, 12);
+    let (ovl_tokens, ovl_m) = run(Policy::Hgca { beta: 1.0 }, 1, true, &prompt, 12);
+    assert_eq!(ovl_tokens, seq_tokens, "overlap is a pure scheduling change");
+    // the overlap win is observable — and absent when forced sequential
+    assert_eq!(seq_m.cpu_attn_overlap_secs, 0.0, "nothing hidden when serial");
+    assert!(ovl_m.cpu_attn_overlap_secs > 0.0, "bookkeeping ran under the submit");
+    for m in [&seq_m, &ovl_m] {
+        assert!(m.cpu_attn_jobs > 0, "the CPU side actually ran");
+        assert!(m.cpu_attn_tasks > 0);
+        assert!(m.cpu_attn_wait_secs > 0.0);
+        assert!(m.cpu_attn_busy_secs > 0.0, "pool-side busy time accounted");
+    }
+}
+
+#[test]
+fn overlapped_full_offload_matches_sequential_bitwise() {
+    // full-offload attends the whole store every decode step — the
+    // heaviest CPU side, and the one where overlap matters most
+    let prompt = corpus(128);
+    let (seq_tokens, _) = run(Policy::FullOffload, 1, false, &prompt, 10);
+    let (ovl_tokens, m) = run(Policy::FullOffload, 1, true, &prompt, 10);
+    assert_eq!(ovl_tokens, seq_tokens);
+    assert!(m.cpu_attn_overlap_secs > 0.0);
+}
+
+#[test]
+fn gpu_only_skips_the_cpu_side_entirely() {
+    // no CPU store, no submission: the overlap flag is a no-op and every
+    // cpu_attn counter stays at its default (prompt + decode fit the
+    // 32-entry window, so gpu-only cannot OOM here)
+    let prompt = b"The canal barge ";
+    let (seq_tokens, seq_m) = run(Policy::GpuOnly, 1, false, prompt, 8);
+    let (ovl_tokens, ovl_m) = run(Policy::GpuOnly, 1, true, prompt, 8);
+    assert_eq!(ovl_tokens, seq_tokens);
+    for m in [&seq_m, &ovl_m] {
+        assert_eq!(m.cpu_attn_jobs, 0);
+        assert_eq!(m.cpu_attn_tasks, 0);
+        assert_eq!(m.cpu_attn_wait_secs, 0.0);
+        assert_eq!(m.cpu_attn_busy_secs, 0.0);
+        assert_eq!(m.cpu_attn_overlap_secs, 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// topology-independence survives the overlap
+// ---------------------------------------------------------------------
+
+#[test]
+fn overlap_is_bitwise_identical_on_1_2_4_node_topologies() {
+    let prompt = corpus(160);
+    let (reference, _) = run(Policy::Hgca { beta: 1.0 }, 1, false, &prompt, 10);
+    for nodes in [1usize, 2, 4] {
+        for overlap in [false, true] {
+            let (tokens, _) = run(Policy::Hgca { beta: 1.0 }, nodes, overlap, &prompt, 10);
+            assert_eq!(
+                tokens, reference,
+                "nodes={nodes} overlap={overlap} must reproduce the flat \
+                 sequential run bit for bit"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// PendingAttn drop-without-wait safety
+// ---------------------------------------------------------------------
+
+fn det_jobs(nj: usize, n: usize, dh: usize) -> Vec<(Vec<f32>, Vec<f32>, usize)> {
+    (0..nj)
+        .map(|j| {
+            let k = (0..n * dh)
+                .map(|i| ((j * 31 + i * 7) as f32 * 0.013).sin())
+                .collect();
+            let v = (0..n * dh)
+                .map(|i| ((j * 17 + i * 5) as f32 * 0.011).cos())
+                .collect();
+            (k, v, n)
+        })
+        .collect()
+}
+
+#[test]
+fn dropping_a_pending_submission_settles_the_batch() {
+    let (nj, n, dh) = (6usize, 24usize, 8usize);
+    let kvs = det_jobs(nj, n, dh);
+    let q: Vec<f32> = (0..nj * dh).map(|i| (i as f32 * 0.02).sin()).collect();
+    let pool = AttnPool::new(2);
+    let pending = pool.submit_placed(
+        OwnedJobs {
+            kvs: kvs.clone(),
+            q: q.clone(),
+            q_valid: None,
+        },
+        1,
+        dh,
+        TaskSplit::EvenJobs { max_parallel: 4 },
+        false,
+        None,
+    );
+    // drop without wait(): must not panic, must not leak queued tasks,
+    // and must leave the counters exactly as a waited submission would
+    drop(pending);
+    let s = pool.stats();
+    assert_eq!(s.submissions, 1);
+    assert_eq!(s.jobs, nj as u64);
+    assert!(s.tasks >= 1);
+    assert_eq!(s.queue_depth, 0, "drop drains + waits out the batch");
+
+    // the pool stays fully serviceable: a follow-up blocking call is
+    // bitwise identical to a fresh pool's answer
+    let jobs: Vec<HeadJob<'_>> = kvs
+        .iter()
+        .map(|(k, v, n)| HeadJob { k, v, n: *n })
+        .collect();
+    let after = pool.run_masked(&jobs, &q, 1, dh, 4, true, None);
+    let fresh = AttnPool::new(0).run_masked(&jobs, &q, 1, dh, 4, true, None);
+    assert_eq!(after.o, fresh.o);
+    assert_eq!(after.lse, fresh.lse);
+    assert_eq!(after.probs, fresh.probs);
+    assert_eq!(pool.stats().queue_depth, 0);
+}
