@@ -175,6 +175,19 @@ impl ServingConfig {
             .collect()
     }
 
+    /// Watermark admission test shared by the HTTP front door and the
+    /// trace-replay harness: shed when the queue is already non-empty and
+    /// accepting `incoming` more requests would push `pending + incoming`
+    /// past the watermark. An idle server (`pending == 0`) always accepts,
+    /// even under a watermark smaller than the burst — shedding exists to
+    /// bound *queueing*, not to refuse work to an empty machine.
+    pub fn should_shed(&self, pending: usize, incoming: usize) -> bool {
+        match self.shed_watermark {
+            Some(w) => pending > 0 && pending + incoming > w,
+            None => false,
+        }
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         if let Some(w) = self.shed_watermark {
             anyhow::ensure!(w > 0, "shed watermark must be positive");

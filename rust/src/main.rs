@@ -38,6 +38,12 @@ USAGE:
   hgca ppl      [--len 512] [--model tiny] [--policy hgca] [--beta 1.0] [--window 256]
   hgca analyze  [--model tiny] [--len 256]      # attention-pattern stats (Figs. 3-5)
   hgca simulate [--system hgca|flexgen|h2o|infinigen|hf] [--model opt-6.7b] [--batch 4]
+  hgca replay   FILE.scn ... [--nodes N] [--seed N] [--json PATH] [--verify]
+                # replay scenario-DSL workload traces (docs/SCENARIOS.md)
+                # against the real serving stack; --verify re-runs each
+                # scenario (same seed twice, then 1/2/4 synthetic NUMA
+                # nodes) and fails unless outcomes are bitwise identical;
+                # --json writes the gate-ready report (tools/scenario_gate.rs)
   hgca info                                     # manifest + artifact inventory
 
 COMMON FLAGS:
@@ -88,7 +94,7 @@ fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..], &["full"])?;
+    let args = Args::parse(&argv[1..], &["full", "verify"])?;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
 
     match cmd.as_str() {
@@ -205,6 +211,85 @@ fn run() -> Result<()> {
             );
             for (l, s) in &r.breakdown.segments {
                 println!("  {l:<18} {}", hgca::util::fmt_secs(*s));
+            }
+        }
+        "replay" => {
+            use hgca::engine::FinishReason;
+            use hgca::simulator::trace::{parse, replay, ReplayOptions, ReplayReport};
+            use hgca::util::json::Json;
+            anyhow::ensure!(
+                !args.positional.is_empty(),
+                "usage: hgca replay FILE.scn ... [--nodes N] [--seed N] [--json PATH] [--verify]"
+            );
+            let rt = Rc::new(PjrtRuntime::new(&dir)?);
+            let mr = rt.load_model(args.get_or("model", "tiny"))?;
+            let cfg = engine_config(&args)?;
+            let policy = parse_policy(&args)?;
+            let nodes = args.usize("nodes", 1)?;
+            anyhow::ensure!(nodes >= 1, "--nodes must be ≥ 1");
+            let seed = match args.get("seed") {
+                Some(s) => Some(
+                    s.parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("--seed: expected integer, got '{s}'"))?,
+                ),
+                None => None,
+            };
+            let mut entries = Vec::new();
+            for path in &args.positional {
+                let src = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let scn = parse(&src).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                // every run gets a fresh engine: the engine RNG seeds at
+                // construction, which is what makes runs comparable at all
+                let run = |n: usize| -> Result<ReplayReport> {
+                    let mut engine = Engine::new(&mr, cfg.clone(), policy.clone());
+                    replay(&mut engine, &scn, &ReplayOptions { nodes: n, seed })
+                };
+                let report = run(nodes)?;
+                if args.flag("verify") {
+                    let again = run(nodes)?;
+                    anyhow::ensure!(
+                        again.outcomes == report.outcomes,
+                        "{}: outcomes differ between two same-seed runs",
+                        scn.name
+                    );
+                    for n in [1usize, 2, 4] {
+                        if n != nodes {
+                            let alt = run(n)?;
+                            anyhow::ensure!(
+                                alt.outcomes == report.outcomes,
+                                "{}: outcomes differ between {nodes} and {n} synthetic NUMA nodes",
+                                scn.name
+                            );
+                        }
+                    }
+                }
+                println!(
+                    "{}: {} requests, {} ticks, peak {}/{} active/queued — \
+                     {} completed, {} shed, {} cancelled, {} disconnected — \
+                     digest {:016x}{}",
+                    report.scenario,
+                    report.outcomes.len(),
+                    report.ticks,
+                    report.peak_active,
+                    report.peak_queued,
+                    report.count(FinishReason::Length),
+                    report.count(FinishReason::QueueTimeout),
+                    report.count(FinishReason::Cancelled),
+                    report.count(FinishReason::Disconnected),
+                    report.digest(),
+                    if args.flag("verify") { " [verified]" } else { "" },
+                );
+                entries.push(report.to_json());
+            }
+            if let Some(out) = args.get("json") {
+                let doc = Json::obj(vec![
+                    ("schema", Json::num(1.0)),
+                    ("scenarios", Json::arr(entries)),
+                ]);
+                std::fs::write(out, format!("{doc}\n"))
+                    .map_err(|e| anyhow::anyhow!("{out}: {e}"))?;
+                println!("report written to {out}");
             }
         }
         "serve" => {

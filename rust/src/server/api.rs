@@ -489,7 +489,7 @@ pub fn engine_loop_with(
 fn shed_check(batcher: &Batcher, serving: &ServingConfig, incoming: usize) -> Option<HttpResponse> {
     let w = serving.shed_watermark?;
     let depth = batcher.pending();
-    (depth > 0 && depth + incoming > w).then(|| {
+    serving.should_shed(depth, incoming).then(|| {
         HttpResponse::json(
             429,
             Json::obj(vec![

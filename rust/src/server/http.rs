@@ -187,6 +187,75 @@ fn pump_replies_inner(stream: &mut TcpStream, rrx: &Receiver<ServerReply>) -> Re
     }
 }
 
+/// Grace window for the read-side EOF watcher: a FIN arriving this soon
+/// after the request body was read is a legitimate send-then-half-close
+/// client (it still reads the response), not a disconnect. Past the
+/// window, EOF on the read side means the client hung up mid-flight.
+const HALF_CLOSE_GRACE: std::time::Duration = std::time::Duration::from_millis(250);
+
+/// Read-side disconnect watcher for *non-streamed* requests (streamed
+/// requests already learn of disconnects from write failures — a
+/// non-streamed request writes nothing until generation finishes, so
+/// without this the engine would decode an entire response for a client
+/// that hung up at tick one).
+///
+/// Watches the connection's read side after the request body is consumed:
+/// * EOF *inside* [`HALF_CLOSE_GRACE`] — a legitimate client half-close
+///   right after sending the request; ignored (the client still reads).
+/// * EOF (or a hard error like ECONNRESET) *after* the grace window — the
+///   client went away; trips [`CancelReason::Disconnected`] so the engine
+///   loop retires the row and returns its KV blocks mid-flight.
+/// * Stray readable bytes — ignored (a pipelining client's business).
+///
+/// The connection thread sets `done` once the response is written; the
+/// watcher polls it between read timeouts and exits without tripping.
+fn watch_disconnect(
+    stream: TcpStream,
+    cancel: CancelToken,
+    done: std::sync::Arc<std::sync::atomic::AtomicBool>,
+) {
+    use std::sync::atomic::Ordering;
+    if stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(50)))
+        .is_err()
+    {
+        return; // no timeout support — better no watcher than a hang
+    }
+    let mut stream = stream;
+    let start = std::time::Instant::now();
+    let mut buf = [0u8; 64];
+    loop {
+        if done.load(Ordering::Acquire) {
+            return;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                // half-close: benign if it follows the request
+                // immediately, a hang-up if the request has been in
+                // flight for a while
+                if start.elapsed() > HALF_CLOSE_GRACE && !done.load(Ordering::Acquire) {
+                    cancel.trip(CancelReason::Disconnected);
+                }
+                return;
+            }
+            Ok(_) => continue,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => {
+                // hard reset — unambiguous even inside the grace window
+                if !done.load(Ordering::Acquire) {
+                    cancel.trip(CancelReason::Disconnected);
+                }
+                return;
+            }
+        }
+    }
+}
+
 /// A parsed request paired with its reply channel (single [`ServerReply::Full`]
 /// send, or a `Chunk…End` stream for streamed generation) and the
 /// connection's cancellation token — tripped by the connection thread on
@@ -220,7 +289,20 @@ pub fn serve(addr: &str, tx: Sender<Incoming>) -> Result<(std::net::SocketAddr, 
                             cancel: cancel.clone(),
                         };
                         if tx.send(inc).is_ok() {
+                            // read-side EOF watcher: catches clients that
+                            // hang up while a non-streamed response is
+                            // still generating (write-side failures only
+                            // surface once something is written)
+                            let done = std::sync::Arc::new(
+                                std::sync::atomic::AtomicBool::new(false),
+                            );
+                            if let Ok(rs) = stream.try_clone() {
+                                let c = cancel.clone();
+                                let d = done.clone();
+                                std::thread::spawn(move || watch_disconnect(rs, c, d));
+                            }
                             let _ = pump_replies(&mut stream, &rrx, &cancel);
+                            done.store(true, std::sync::atomic::Ordering::Release);
                         } else {
                             let _ = write_response(
                                 &mut stream,
@@ -333,6 +415,61 @@ mod tests {
         let _ = s.read(&mut buf).unwrap(); // headers + first chunk arrived
         drop(s); // client stops reading — the dead-channel case
         let token = crx.recv().unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while token.tripped().is_none() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(token.tripped(), Some(CancelReason::Disconnected));
+    }
+
+    #[test]
+    fn immediate_half_close_after_body_is_not_a_disconnect() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (addr, _h) = serve("127.0.0.1:0", tx).unwrap();
+        let (ctx, crx) = std::sync::mpsc::channel();
+        // engine that answers slowly — long enough for a wrongly-tripped
+        // watcher to have fired (the reply lands well past the grace
+        // window)
+        std::thread::spawn(move || {
+            for inc in rx {
+                ctx.send(inc.cancel.clone()).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(600));
+                let _ = inc
+                    .reply
+                    .send(ServerReply::Full(HttpResponse::json(200, "{\"ok\":true}".into())));
+            }
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /gen HTTP/1.1\r\nContent-Length: 8\r\n\r\n{{\"a\": 1}}").unwrap();
+        // legitimate half-close: the request is fully sent, the client
+        // only reads from here on
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+        assert!(out.contains("\"ok\":true"));
+        let token = crx.recv().unwrap();
+        assert_eq!(token.tripped(), None, "half-close right after the body must not cancel");
+    }
+
+    #[test]
+    fn mid_flight_hangup_trips_disconnect_without_any_write() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (addr, _h) = serve("127.0.0.1:0", tx).unwrap();
+        let (ctx, crx) = std::sync::mpsc::channel();
+        // engine that never answers — only the read-side watcher can
+        // notice the client is gone (nothing is ever written)
+        std::thread::spawn(move || {
+            for inc in rx {
+                ctx.send((inc.cancel.clone(), inc.reply.clone())).unwrap();
+            }
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /gen HTTP/1.1\r\nContent-Length: 8\r\n\r\n{{\"a\": 1}}").unwrap();
+        let (token, _reply_keepalive) = crx.recv().unwrap();
+        // hang up well past the half-close grace window
+        std::thread::sleep(std::time::Duration::from_millis(500));
+        drop(s);
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
         while token.tripped().is_none() && std::time::Instant::now() < deadline {
             std::thread::sleep(std::time::Duration::from_millis(10));

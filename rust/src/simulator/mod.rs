@@ -1,11 +1,14 @@
 //! Hardware simulation substrate (DESIGN.md §1): roofline device cost
 //! models, interconnect transfer models, labeled time breakdowns, and the
-//! attention-placement scenarios used by every performance bench.
+//! attention-placement scenarios used by every performance bench — plus
+//! the [`trace`] workload harness, which replays scenario-DSL traces
+//! against the *real* serving stack rather than these cost models.
 
 pub mod clock;
 pub mod device;
 pub mod interconnect;
 pub mod scenarios;
+pub mod trace;
 
 pub use clock::{Breakdown, SimClock};
 pub use device::{AttnWork, DeviceSpec};

@@ -1,0 +1,183 @@
+//! Scenario AST and its canonical textual form.
+//!
+//! The formatter is the *definition* of canonical scenario text: statements
+//! in a fixed order, one per line, two-space indent, `None` optionals
+//! omitted. The parser accepts statements in any order, so for every value
+//! the grammar can express, `format → parse → format` is a fixed point
+//! (pinned by the round-trip property test in `tests/integration_trace.rs`).
+
+use std::fmt;
+
+/// A parsed workload scenario: the shape of an offered request trace plus
+/// the serving knobs (batch width, KV slots, admission bounds) it runs
+/// against. Field semantics are documented in docs/SCENARIOS.md.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Scenario name (an identifier; used as the report/gate key).
+    pub name: String,
+    /// Default sampler seed; `hgca replay --seed` overrides it.
+    pub seed: u64,
+    /// Total number of requests the trace generates.
+    pub requests: usize,
+    /// Batch rows the replay batcher runs with.
+    pub batch: usize,
+    /// Whole-sequence GPU KV lease slots (`None` = one slot per batch
+    /// row, i.e. KV never binds before row count does).
+    pub kv_slots: Option<usize>,
+    /// Max ticks a request may wait in the admission queue before it is
+    /// shed (`None` = wait forever).
+    pub queue_bound: Option<u64>,
+    /// Admission watermark applied at submit time (`None` = never shed
+    /// on queue depth).
+    pub watermark: Option<usize>,
+    /// Arrival process generating request ticks.
+    pub arrival: Arrival,
+    /// Distribution of prompt lengths in bytes (values ≥ 1).
+    pub prompt: Dist,
+    /// Distribution of `max_new_tokens`.
+    pub gen: Dist,
+    /// Distribution of per-request deadlines in milliseconds (`None` =
+    /// no deadlines).
+    pub deadline_ms: Option<Dist>,
+    /// Client-cancel fault injection (`None` = no cancels).
+    pub cancel: Option<Fault>,
+    /// Client-disconnect fault injection (`None` = no disconnects).
+    pub disconnect: Option<Fault>,
+    /// Probability a request is streamed (token events counted per
+    /// request) rather than buffered.
+    pub stream: f64,
+}
+
+/// When requests arrive, on the batcher tick clock.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// One request every `interval` ticks.
+    Fixed { interval: u64 },
+    /// `size` requests at once, every `period` ticks.
+    Bursty { period: u64, size: u64 },
+    /// Diurnal phases: each `(ticks, arrival)` window runs its
+    /// sub-process for `ticks` ticks, then the next phase starts; the
+    /// list cycles until the trace has generated all requests. Phases
+    /// cannot nest.
+    Phases(Vec<(u64, Arrival)>),
+}
+
+/// A small integer distribution (prompt bytes, generation lengths,
+/// deadline milliseconds, fault delays).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dist {
+    /// Always `n`.
+    Fixed(u64),
+    /// Uniform over `lo..=hi` (inclusive; `lo ≤ hi`).
+    Uniform(u64, u64),
+    /// Uniform over an explicit non-empty value list.
+    Choice(Vec<u64>),
+}
+
+impl Dist {
+    /// Smallest value the distribution can produce.
+    pub fn min(&self) -> u64 {
+        match self {
+            Dist::Fixed(n) => *n,
+            Dist::Uniform(lo, _) => *lo,
+            Dist::Choice(vs) => vs.iter().copied().min().unwrap_or(0),
+        }
+    }
+
+    /// Largest value the distribution can produce.
+    pub fn max(&self) -> u64 {
+        match self {
+            Dist::Fixed(n) => *n,
+            Dist::Uniform(_, hi) => *hi,
+            Dist::Choice(vs) => vs.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+/// A fault-injection knob: with probability `prob`, the request trips its
+/// cancel token `after` ticks past its arrival.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fault {
+    /// Per-request trigger probability in `[0, 1]`.
+    pub prob: f64,
+    /// Delay distribution (ticks after arrival).
+    pub after: Dist,
+}
+
+impl fmt::Display for Dist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dist::Fixed(n) => write!(f, "fixed({n})"),
+            Dist::Uniform(lo, hi) => write!(f, "uniform({lo}, {hi})"),
+            Dist::Choice(vs) => {
+                write!(f, "choice(")?;
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+impl fmt::Display for Arrival {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Arrival::Fixed { interval } => write!(f, "fixed(interval={interval})"),
+            Arrival::Bursty { period, size } => {
+                write!(f, "bursty(period={period}, size={size})")
+            }
+            Arrival::Phases(phases) => {
+                write!(f, "phases(")?;
+                for (i, (ticks, sub)) in phases.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{ticks}: {sub}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} after {}", self.prob, self.after)
+    }
+}
+
+impl fmt::Display for Scenario {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "scenario {} {{", self.name)?;
+        writeln!(f, "  seed {}", self.seed)?;
+        writeln!(f, "  requests {}", self.requests)?;
+        writeln!(f, "  batch {}", self.batch)?;
+        if let Some(s) = self.kv_slots {
+            writeln!(f, "  kv_slots {s}")?;
+        }
+        if let Some(q) = self.queue_bound {
+            writeln!(f, "  queue_bound {q}")?;
+        }
+        if let Some(w) = self.watermark {
+            writeln!(f, "  watermark {w}")?;
+        }
+        writeln!(f, "  arrival {}", self.arrival)?;
+        writeln!(f, "  prompt {}", self.prompt)?;
+        writeln!(f, "  gen {}", self.gen)?;
+        if let Some(d) = &self.deadline_ms {
+            writeln!(f, "  deadline_ms {d}")?;
+        }
+        if let Some(c) = &self.cancel {
+            writeln!(f, "  cancel {c}")?;
+        }
+        if let Some(d) = &self.disconnect {
+            writeln!(f, "  disconnect {d}")?;
+        }
+        writeln!(f, "  stream {}", self.stream)?;
+        writeln!(f, "}}")
+    }
+}

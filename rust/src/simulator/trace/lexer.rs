@@ -1,0 +1,219 @@
+//! Hand-rolled scenario lexer: identifiers, decimal numbers, punctuation,
+//! `#` line comments, with 1-based line/column spans on every token so the
+//! parser can report *where* an input went wrong.
+
+use std::fmt;
+
+/// 1-based source position of a token (or of an error).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub line: usize,
+    pub col: usize,
+}
+
+/// A lexed token. Numbers carry the `f64` value std parsed from the
+/// lexeme — the parser range-checks it and rejects fractional values
+/// where an integer is required ("1.5 requests" is an error, not a
+/// truncation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// `[A-Za-z_][A-Za-z0-9_]*`
+    Ident(String),
+    /// Decimal literal: optional fraction and exponent, no sign (the
+    /// grammar has no negative quantities).
+    Num(f64),
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    Comma,
+    Eq,
+    Colon,
+    /// End of input (always the final token of a successful lex).
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "'{s}'"),
+            Tok::Num(n) => write!(f, "number {n}"),
+            Tok::LBrace => write!(f, "'{{'"),
+            Tok::RBrace => write!(f, "'}}'"),
+            Tok::LParen => write!(f, "'('"),
+            Tok::RParen => write!(f, "')'"),
+            Tok::Comma => write!(f, "','"),
+            Tok::Eq => write!(f, "'='"),
+            Tok::Colon => write!(f, "':'"),
+            Tok::Eof => write!(f, "end of input"),
+        }
+    }
+}
+
+/// A spanned lexical or syntactic error. `Display` renders
+/// `line L, col C: message` — the format tests assert on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+}
+
+impl ParseError {
+    pub fn at(span: Span, msg: impl Into<String>) -> ParseError {
+        ParseError {
+            line: span.line,
+            col: span.col,
+            msg: msg.into(),
+        }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}, col {}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Tokenize `src`, returning spanned tokens ending with [`Tok::Eof`].
+/// Invalid characters and malformed numbers are spanned errors, never
+/// panics — the lexer walks `char_indices` so arbitrary (even non-UTF-8
+/// lossy-decoded) input is safe to feed it.
+pub fn lex(src: &str) -> Result<Vec<(Tok, Span)>, ParseError> {
+    let mut out = Vec::new();
+    let mut line = 1usize;
+    let mut col = 1usize;
+    let mut chars = src.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        let span = Span { line, col };
+        match c {
+            '\n' => {
+                chars.next();
+                line += 1;
+                col = 1;
+            }
+            c if c.is_whitespace() => {
+                chars.next();
+                col += 1;
+            }
+            '#' => {
+                // comment to end of line (the newline itself is handled
+                // by the '\n' arm next iteration)
+                while let Some(&c) = chars.peek() {
+                    if c == '\n' {
+                        break;
+                    }
+                    chars.next();
+                    col += 1;
+                }
+            }
+            '{' | '}' | '(' | ')' | ',' | '=' | ':' => {
+                chars.next();
+                col += 1;
+                out.push((
+                    match c {
+                        '{' => Tok::LBrace,
+                        '}' => Tok::RBrace,
+                        '(' => Tok::LParen,
+                        ')' => Tok::RParen,
+                        ',' => Tok::Comma,
+                        '=' => Tok::Eq,
+                        _ => Tok::Colon,
+                    },
+                    span,
+                ));
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let mut s = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c.is_ascii_alphanumeric() || c == '_' {
+                        s.push(c);
+                        chars.next();
+                        col += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out.push((Tok::Ident(s), span));
+            }
+            c if c.is_ascii_digit() || c == '.' => {
+                let mut s = String::new();
+                let mut saw_exp = false;
+                while let Some(&c) = chars.peek() {
+                    let take = c.is_ascii_digit()
+                        || c == '.'
+                        || c == 'e'
+                        || c == 'E'
+                        // a sign is part of the number only right after
+                        // the exponent marker (there are no signed
+                        // literals elsewhere in the grammar)
+                        || ((c == '+' || c == '-')
+                            && saw_exp
+                            && matches!(s.chars().last(), Some('e' | 'E')));
+                    if !take {
+                        break;
+                    }
+                    if c == 'e' || c == 'E' {
+                        saw_exp = true;
+                    }
+                    s.push(c);
+                    chars.next();
+                    col += 1;
+                }
+                let n: f64 = s
+                    .parse()
+                    .map_err(|_| ParseError::at(span, format!("malformed number '{s}'")))?;
+                if !n.is_finite() {
+                    return Err(ParseError::at(span, format!("number '{s}' out of range")));
+                }
+                out.push((Tok::Num(n), span));
+            }
+            other => {
+                return Err(ParseError::at(
+                    span,
+                    format!("unexpected character '{}'", other.escape_default()),
+                ));
+            }
+        }
+    }
+    out.push((Tok::Eof, Span { line, col }));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_are_one_based_and_track_lines() {
+        let toks = lex("scenario x {\n  seed 7\n}\n").unwrap();
+        assert_eq!(toks[0], (Tok::Ident("scenario".into()), Span { line: 1, col: 1 }));
+        assert_eq!(toks[3].1, Span { line: 2, col: 3 }); // `seed`
+        assert_eq!(toks[4], (Tok::Num(7.0), Span { line: 2, col: 8 }));
+        assert_eq!(toks[5].1, Span { line: 3, col: 1 }); // `}`
+        assert_eq!(toks.last().unwrap().0, Tok::Eof);
+    }
+
+    #[test]
+    fn comments_and_floats() {
+        let toks = lex("stream 0.25 # half\nbatch 2e1").unwrap();
+        assert_eq!(toks[1].0, Tok::Num(0.25));
+        assert_eq!(toks[3].0, Tok::Num(20.0));
+    }
+
+    #[test]
+    fn bad_char_is_spanned() {
+        let e = lex("seed 1\n  @").unwrap_err();
+        assert_eq!((e.line, e.col), (2, 3));
+        assert!(e.msg.contains("unexpected character"));
+    }
+
+    #[test]
+    fn malformed_number_is_an_error_not_a_panic() {
+        let e = lex("seed 1..2e").unwrap_err();
+        assert_eq!((e.line, e.col), (1, 6));
+        assert!(e.msg.contains("malformed number"));
+    }
+}

@@ -1,0 +1,28 @@
+//! Trace-driven workload harness: a compact scenario DSL plus an
+//! in-process replay driver (docs/SCENARIOS.md is the user-facing
+//! reference).
+//!
+//! * [`lexer`] / [`parser`] / [`ast`] — hand-rolled recursive-descent
+//!   front end: scenario text → validated [`Scenario`], every rejection a
+//!   spanned [`ParseError`].
+//! * [`sampler`] — seeded-LCG expansion of a scenario into a concrete
+//!   request trace, bitwise-reproducible from `(scenario, seed)`.
+//! * [`mod@replay`] — runs the trace against the real serving stack
+//!   (batcher + lifecycle + KV pool + NUMA placement) and aggregates a
+//!   gate-ready [`ReplayReport`].
+//!
+//! Exercised by `hgca replay`, the CI `scenario-replay` gate
+//! (`tools/scenario_gate.rs`), and the `integration_trace` /
+//! `integration_replay` test suites.
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod replay;
+pub mod sampler;
+
+pub use ast::{Arrival, Dist, Fault, Scenario};
+pub use lexer::ParseError;
+pub use parser::parse;
+pub use replay::{replay, ReplayOptions, ReplayReport, RequestOutcome};
+pub use sampler::{arrival_ticks, sample_trace, Lcg, TraceRequest};

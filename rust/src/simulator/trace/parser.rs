@@ -1,0 +1,460 @@
+//! Recursive-descent scenario parser (zero dependencies, hand rolled).
+//!
+//! Grammar (full EBNF in docs/SCENARIOS.md):
+//!
+//! ```text
+//! scenario   := "scenario" IDENT "{" statement* "}"
+//! statement  := "seed" INT | "requests" INT | "batch" INT
+//!             | "kv_slots" INT | "queue_bound" INT | "watermark" INT
+//!             | "arrival" arrival | "prompt" dist | "gen" dist
+//!             | "deadline_ms" dist | "cancel" fault | "disconnect" fault
+//!             | "stream" PROB
+//! arrival    := "fixed" "(" "interval" "=" INT ")"
+//!             | "bursty" "(" "period" "=" INT "," "size" "=" INT ")"
+//!             | "phases" "(" INT ":" arrival ("," INT ":" arrival)* ")"
+//! dist       := "fixed" "(" INT ")"
+//!             | "uniform" "(" INT "," INT ")"
+//!             | "choice" "(" INT ("," INT)* ")"
+//! fault      := PROB "after" dist
+//! ```
+//!
+//! Statements may appear in any order but at most once each; `arrival`,
+//! `prompt`, and `gen` are required. Every rejection — lexical, syntactic,
+//! or semantic (range checks) — is a spanned [`ParseError`]; the parser
+//! never panics on any input (pinned by the ≥1000-seed fuzz property in
+//! `tests/integration_trace.rs`).
+
+use super::ast::{Arrival, Dist, Fault, Scenario};
+use super::lexer::{lex, ParseError, Span, Tok};
+
+/// Hard ceilings keeping a parsed scenario replayable in CI: they bound
+/// trace size and per-request work, so a scenario that parses is one the
+/// harness can actually run (docs/SCENARIOS.md lists them).
+pub const MAX_REQUESTS: u64 = 100_000;
+pub const MAX_BATCH: u64 = 64;
+pub const MAX_PROMPT_BYTES: u64 = 4096;
+pub const MAX_GEN_TOKENS: u64 = 100_000;
+
+/// Parse canonical or free-form scenario text into a validated
+/// [`Scenario`].
+pub fn parse(src: &str) -> Result<Scenario, ParseError> {
+    Parser::new(src)?.scenario()
+}
+
+struct Parser {
+    toks: Vec<(Tok, Span)>,
+    pos: usize,
+}
+
+impl Parser {
+    fn new(src: &str) -> Result<Parser, ParseError> {
+        Ok(Parser {
+            toks: lex(src)?,
+            pos: 0,
+        })
+    }
+
+    fn peek(&self) -> &(Tok, Span) {
+        // the token stream always ends with Eof; clamp so a deep error
+        // path can never index past it
+        &self.toks[self.pos.min(self.toks.len() - 1)]
+    }
+
+    fn next(&mut self) -> (Tok, Span) {
+        let t = self.peek().clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok, what: &str) -> Result<Span, ParseError> {
+        let (tok, span) = self.next();
+        if &tok == want {
+            Ok(span)
+        } else {
+            Err(ParseError::at(span, format!("expected {what}, found {tok}")))
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> Result<(String, Span), ParseError> {
+        let (tok, span) = self.next();
+        match tok {
+            Tok::Ident(s) => Ok((s, span)),
+            other => Err(ParseError::at(span, format!("expected {what}, found {other}"))),
+        }
+    }
+
+    fn number(&mut self, what: &str) -> Result<(f64, Span), ParseError> {
+        let (tok, span) = self.next();
+        match tok {
+            Tok::Num(n) => Ok((n, span)),
+            other => Err(ParseError::at(span, format!("expected {what}, found {other}"))),
+        }
+    }
+
+    /// A non-negative integer in `lo..=hi`; fractional values are errors
+    /// (no silent truncation).
+    fn int(&mut self, what: &str, lo: u64, hi: u64) -> Result<u64, ParseError> {
+        let (n, span) = self.number(what)?;
+        if n.fract() != 0.0 || n < 0.0 || n > u64::MAX as f64 {
+            return Err(ParseError::at(
+                span,
+                format!("{what} must be an integer, got {n}"),
+            ));
+        }
+        let v = n as u64;
+        if v < lo || v > hi {
+            return Err(ParseError::at(
+                span,
+                format!("{what} must be in {lo}..={hi}, got {v}"),
+            ));
+        }
+        Ok(v)
+    }
+
+    /// A probability in `[0, 1]`.
+    fn prob(&mut self, what: &str) -> Result<f64, ParseError> {
+        let (n, span) = self.number(what)?;
+        if !(0.0..=1.0).contains(&n) {
+            return Err(ParseError::at(
+                span,
+                format!("{what} must be a probability in [0, 1], got {n}"),
+            ));
+        }
+        Ok(n)
+    }
+
+    fn dist(&mut self, what: &str, lo: u64, hi: u64) -> Result<Dist, ParseError> {
+        let (kind, span) = self.ident(&format!("a distribution for {what}"))?;
+        self.expect(&Tok::LParen, "'('")?;
+        let d = match kind.as_str() {
+            "fixed" => {
+                let v = self.int(what, lo, hi)?;
+                Dist::Fixed(v)
+            }
+            "uniform" => {
+                let a = self.int(what, lo, hi)?;
+                self.expect(&Tok::Comma, "','")?;
+                let b = self.int(what, lo, hi)?;
+                if a > b {
+                    return Err(ParseError::at(
+                        span,
+                        format!("uniform bounds for {what} are reversed ({a} > {b})"),
+                    ));
+                }
+                Dist::Uniform(a, b)
+            }
+            "choice" => {
+                let mut vs = vec![self.int(what, lo, hi)?];
+                while self.peek().0 == Tok::Comma {
+                    self.next();
+                    vs.push(self.int(what, lo, hi)?);
+                }
+                Dist::Choice(vs)
+            }
+            other => {
+                return Err(ParseError::at(
+                    span,
+                    format!("unknown distribution '{other}' (expected fixed, uniform, or choice)"),
+                ));
+            }
+        };
+        self.expect(&Tok::RParen, "')'")?;
+        Ok(d)
+    }
+
+    fn arrival(&mut self, nested: bool) -> Result<Arrival, ParseError> {
+        let (kind, span) = self.ident("an arrival process")?;
+        match kind.as_str() {
+            "fixed" => {
+                self.expect(&Tok::LParen, "'('")?;
+                let (key, kspan) = self.ident("'interval'")?;
+                if key != "interval" {
+                    return Err(ParseError::at(
+                        kspan,
+                        format!("expected 'interval', found '{key}'"),
+                    ));
+                }
+                self.expect(&Tok::Eq, "'='")?;
+                let interval = self.int("interval", 1, 1_000_000)?;
+                self.expect(&Tok::RParen, "')'")?;
+                Ok(Arrival::Fixed { interval })
+            }
+            "bursty" => {
+                self.expect(&Tok::LParen, "'('")?;
+                let (key, kspan) = self.ident("'period'")?;
+                if key != "period" {
+                    return Err(ParseError::at(kspan, format!("expected 'period', found '{key}'")));
+                }
+                self.expect(&Tok::Eq, "'='")?;
+                let period = self.int("period", 1, 1_000_000)?;
+                self.expect(&Tok::Comma, "','")?;
+                let (key, kspan) = self.ident("'size'")?;
+                if key != "size" {
+                    return Err(ParseError::at(kspan, format!("expected 'size', found '{key}'")));
+                }
+                self.expect(&Tok::Eq, "'='")?;
+                let size = self.int("size", 1, 10_000)?;
+                self.expect(&Tok::RParen, "')'")?;
+                Ok(Arrival::Bursty { period, size })
+            }
+            "phases" => {
+                if nested {
+                    return Err(ParseError::at(span, "phases cannot nest"));
+                }
+                self.expect(&Tok::LParen, "'('")?;
+                let mut phases = Vec::new();
+                loop {
+                    let ticks = self.int("phase length (ticks)", 1, 1_000_000)?;
+                    self.expect(&Tok::Colon, "':' after the phase length")?;
+                    let sub = self.arrival(true)?;
+                    phases.push((ticks, sub));
+                    match self.next() {
+                        (Tok::Comma, _) => continue,
+                        (Tok::RParen, _) => break,
+                        (tok, span) => {
+                            return Err(ParseError::at(
+                                span,
+                                format!("expected ',' or ')' in phases, found {tok}"),
+                            ));
+                        }
+                    }
+                }
+                Ok(Arrival::Phases(phases))
+            }
+            other => Err(ParseError::at(
+                span,
+                format!("unknown arrival process '{other}' (expected fixed, bursty, or phases)"),
+            )),
+        }
+    }
+
+    fn fault(&mut self, what: &str) -> Result<Fault, ParseError> {
+        let prob = self.prob(&format!("{what} probability"))?;
+        let (kw, span) = self.ident("'after'")?;
+        if kw != "after" {
+            return Err(ParseError::at(span, format!("expected 'after', found '{kw}'")));
+        }
+        let after = self.dist(&format!("{what} delay"), 0, 1_000_000)?;
+        Ok(Fault { prob, after })
+    }
+
+    fn scenario(&mut self) -> Result<Scenario, ParseError> {
+        let (kw, span) = self.ident("'scenario'")?;
+        if kw != "scenario" {
+            return Err(ParseError::at(span, format!("expected 'scenario', found '{kw}'")));
+        }
+        let (name, _) = self.ident("a scenario name")?;
+        self.expect(&Tok::LBrace, "'{'")?;
+
+        let mut seed: Option<u64> = None;
+        let mut requests: Option<u64> = None;
+        let mut batch: Option<u64> = None;
+        let mut kv_slots: Option<u64> = None;
+        let mut queue_bound: Option<u64> = None;
+        let mut watermark: Option<u64> = None;
+        let mut arrival: Option<Arrival> = None;
+        let mut prompt: Option<Dist> = None;
+        let mut gen: Option<Dist> = None;
+        let mut deadline_ms: Option<Dist> = None;
+        let mut cancel: Option<Fault> = None;
+        let mut disconnect: Option<Fault> = None;
+        let mut stream: Option<f64> = None;
+
+        loop {
+            let (tok, span) = self.next();
+            let key = match tok {
+                Tok::RBrace => break,
+                Tok::Ident(s) => s,
+                other => {
+                    return Err(ParseError::at(
+                        span,
+                        format!("expected a statement or '}}', found {other}"),
+                    ));
+                }
+            };
+            // duplicate statements are ambiguous (which wins?) — reject
+            // with the span of the second occurrence
+            macro_rules! once {
+                ($slot:ident, $value:expr) => {{
+                    if $slot.is_some() {
+                        return Err(ParseError::at(span, format!("duplicate statement '{key}'")));
+                    }
+                    $slot = Some($value);
+                }};
+            }
+            match key.as_str() {
+                "seed" => once!(seed, self.int("seed", 0, u64::MAX)?),
+                "requests" => once!(requests, self.int("requests", 1, MAX_REQUESTS)?),
+                "batch" => once!(batch, self.int("batch", 1, MAX_BATCH)?),
+                "kv_slots" => once!(kv_slots, self.int("kv_slots", 1, 10_000)?),
+                "queue_bound" => once!(queue_bound, self.int("queue_bound", 0, 1_000_000)?),
+                "watermark" => once!(watermark, self.int("watermark", 1, 1_000_000)?),
+                "arrival" => once!(arrival, self.arrival(false)?),
+                "prompt" => once!(prompt, self.dist("prompt bytes", 1, MAX_PROMPT_BYTES)?),
+                "gen" => once!(gen, self.dist("gen tokens", 0, MAX_GEN_TOKENS)?),
+                "deadline_ms" => {
+                    once!(deadline_ms, self.dist("deadline_ms", 1, 86_400_000)?)
+                }
+                "cancel" => once!(cancel, self.fault("cancel")?),
+                "disconnect" => once!(disconnect, self.fault("disconnect")?),
+                "stream" => once!(stream, self.prob("stream fraction")?),
+                other => {
+                    return Err(ParseError::at(
+                        span,
+                        format!(
+                            "unknown statement '{other}' (expected one of seed, requests, \
+                             batch, kv_slots, queue_bound, watermark, arrival, prompt, gen, \
+                             deadline_ms, cancel, disconnect, stream)"
+                        ),
+                    ));
+                }
+            }
+        }
+        let (tok, span) = self.next();
+        if tok != Tok::Eof {
+            return Err(ParseError::at(
+                span,
+                format!("expected end of input after '}}', found {tok}"),
+            ));
+        }
+
+        let require = |name: &str, missing: bool| -> Result<(), ParseError> {
+            if missing {
+                Err(ParseError::at(span, format!("missing required statement '{name}'")))
+            } else {
+                Ok(())
+            }
+        };
+        require("arrival", arrival.is_none())?;
+        require("prompt", prompt.is_none())?;
+        require("gen", gen.is_none())?;
+
+        Ok(Scenario {
+            name,
+            seed: seed.unwrap_or(1),
+            requests: requests.unwrap_or(16) as usize,
+            batch: batch.unwrap_or(4) as usize,
+            kv_slots: kv_slots.map(|v| v as usize),
+            queue_bound,
+            watermark: watermark.map(|v| v as usize),
+            arrival: arrival.expect("checked above"),
+            prompt: prompt.expect("checked above"),
+            gen: gen.expect("checked above"),
+            deadline_ms,
+            cancel,
+            disconnect,
+            stream: stream.unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal() -> &'static str {
+        "scenario s {\n  arrival fixed(interval=2)\n  prompt uniform(8, 16)\n  gen fixed(4)\n}\n"
+    }
+
+    #[test]
+    fn minimal_parses_with_defaults() {
+        let s = parse(minimal()).unwrap();
+        assert_eq!(s.name, "s");
+        assert_eq!((s.seed, s.requests, s.batch), (1, 16, 4));
+        assert_eq!(s.arrival, Arrival::Fixed { interval: 2 });
+        assert_eq!(s.stream, 0.0);
+        assert!(s.kv_slots.is_none() && s.deadline_ms.is_none());
+    }
+
+    #[test]
+    fn canonical_format_reparses_to_the_same_ast() {
+        let s = parse(minimal()).unwrap();
+        let text = s.to_string();
+        assert_eq!(parse(&text).unwrap(), s);
+        assert_eq!(parse(&text).unwrap().to_string(), text);
+    }
+
+    #[test]
+    fn full_statement_set_round_trips() {
+        let src = "scenario full {
+  seed 9
+  requests 5
+  batch 2
+  kv_slots 3
+  queue_bound 40
+  watermark 12
+  arrival phases(10: fixed(interval=1), 20: bursty(period=5, size=3))
+  prompt choice(8, 16, 32)
+  gen uniform(2, 6)
+  deadline_ms uniform(30000, 60000)
+  cancel 0.25 after uniform(1, 4)
+  disconnect 0.5 after fixed(2)
+  stream 0.75
+}
+";
+        let s = parse(src).unwrap();
+        assert_eq!(s.to_string(), src);
+    }
+
+    #[test]
+    fn duplicate_statement_is_spanned() {
+        let e = parse("scenario s {\n  seed 1\n  seed 2\n}").unwrap_err();
+        assert_eq!((e.line, e.col), (3, 3));
+        assert!(e.msg.contains("duplicate statement 'seed'"));
+    }
+
+    #[test]
+    fn nested_phases_rejected() {
+        let e = parse(
+            "scenario s {\n  arrival phases(5: phases(2: fixed(interval=1)))\n  prompt fixed(8)\n  gen fixed(1)\n}",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("phases cannot nest"), "{e}");
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn semantic_range_errors_are_spanned() {
+        for (src, needle) in [
+            ("scenario s {\n  stream 1.5\n}", "probability"),
+            ("scenario s {\n  prompt uniform(9, 3)\n}", "reversed"),
+            ("scenario s {\n  requests 2.5\n}", "integer"),
+            ("scenario s {\n  batch 0\n}", "must be in 1..="),
+            ("scenario s {\n  prompt fixed(0)\n}", "must be in 1..="),
+            ("scenario s {\n  frobnicate 3\n}", "unknown statement"),
+        ] {
+            let e = parse(src).unwrap_err();
+            assert!(e.msg.contains(needle), "for {src:?}: {e}");
+            assert!(e.line >= 1 && e.col >= 1);
+        }
+    }
+
+    #[test]
+    fn missing_required_statement() {
+        let e = parse("scenario s {\n  arrival fixed(interval=1)\n  gen fixed(1)\n}").unwrap_err();
+        assert!(e.msg.contains("missing required statement 'prompt'"));
+    }
+
+    #[test]
+    fn truncated_inputs_error_cleanly() {
+        for src in [
+            "",
+            "scenario",
+            "scenario s",
+            "scenario s {",
+            "scenario s { arrival fixed(interval=",
+            "scenario s { arrival bursty(period=3, ",
+        ] {
+            let e = parse(src).unwrap_err();
+            assert!(e.line >= 1 && e.col >= 1, "for {src:?}");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let e = parse(&format!("{} extra", parse(minimal()).unwrap())).unwrap_err();
+        assert!(e.msg.contains("after '}'"), "{e}");
+    }
+}

@@ -1,0 +1,220 @@
+//! Seeded trace sampler: expands a parsed [`Scenario`] into a concrete
+//! request list. Same `(scenario, seed)` → bitwise-identical trace, on any
+//! machine: the only entropy source is the [`Lcg`] below (the
+//! `util/corpus.rs` generator, same constants), prompts are slices of the
+//! deterministic synthetic corpus, and arrival ticks are computed, not
+//! drawn — so the arrival process never perturbs the per-request draw
+//! stream.
+
+use super::ast::{Arrival, Dist, Fault, Scenario};
+use crate::util::corpus;
+
+/// Deterministic PRNG, same multiplier/increment as the corpus generator
+/// (`util/corpus.rs::Lcg`, itself mirroring python/compile/corpus.py).
+/// Public so the property tests can drive AST/fuzz generation from the
+/// exact generator the sampler uses.
+#[derive(Debug, Clone)]
+pub struct Lcg {
+    state: u64,
+}
+
+impl Lcg {
+    pub fn new(seed: u64) -> Lcg {
+        Lcg { state: seed }
+    }
+
+    pub fn next(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.state >> 33
+    }
+
+    /// Uniform integer in `lo..=hi` (inclusive; `lo ≤ hi`).
+    pub fn randint(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo + 1)
+    }
+
+    /// Uniform fraction in `[0, 1)` with 1e-6 resolution — enough for the
+    /// grammar's probability knobs while keeping the draw integral (no
+    /// float-rounding divergence across platforms).
+    pub fn frac(&mut self) -> f64 {
+        (self.next() % 1_000_000) as f64 / 1_000_000.0
+    }
+}
+
+impl Dist {
+    /// Draw one value. `Fixed` consumes no randomness — a constant knob
+    /// must not shift the draw stream of the knobs after it.
+    pub fn sample(&self, rng: &mut Lcg) -> u64 {
+        match self {
+            Dist::Fixed(n) => *n,
+            Dist::Uniform(lo, hi) => rng.randint(*lo, *hi),
+            Dist::Choice(vs) => vs[(rng.next() as usize) % vs.len()],
+        }
+    }
+}
+
+/// One concrete request of a sampled trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceRequest {
+    /// 1-based request id (submission order).
+    pub id: u64,
+    /// Batcher tick at which the request is offered.
+    pub arrive_tick: u64,
+    /// Prompt bytes (a slice of the deterministic synthetic corpus).
+    pub prompt: Vec<u8>,
+    /// Generation budget (`max_new_tokens`).
+    pub max_new_tokens: usize,
+    /// Deadline in milliseconds after replay start, if assigned.
+    pub deadline_ms: Option<u64>,
+    /// Ticks after arrival at which the client cancels, if it does.
+    pub cancel_after: Option<u64>,
+    /// Ticks after arrival at which the client disconnects, if it does.
+    pub disconnect_after: Option<u64>,
+    /// Whether the client streams (token events are counted per token).
+    pub stream: bool,
+}
+
+/// Arrival ticks for the first `n` requests of an arrival process.
+/// Computed in closed form (phases by walking the cycle), so the arrival
+/// shape never consumes sampler randomness.
+pub fn arrival_ticks(arrival: &Arrival, n: usize) -> Vec<u64> {
+    match arrival {
+        Arrival::Fixed { interval } => (0..n as u64).map(|i| i * interval).collect(),
+        Arrival::Bursty { period, size } => {
+            (0..n as u64).map(|i| (i / size) * period).collect()
+        }
+        Arrival::Phases(phases) => {
+            let mut out = Vec::with_capacity(n);
+            let mut base = 0u64; // tick at which the current phase starts
+            let mut idx = 0usize;
+            while out.len() < n {
+                let (ticks, sub) = &phases[idx % phases.len()];
+                // generate the sub-process locally, keep arrivals that
+                // land inside this phase's window
+                let window = *ticks;
+                let local = arrival_ticks(sub, n - out.len());
+                for t in local {
+                    if t < window && out.len() < n {
+                        out.push(base + t);
+                    }
+                }
+                base += window;
+                idx += 1;
+            }
+            out
+        }
+    }
+}
+
+fn fault_draw(fault: &Option<Fault>, rng: &mut Lcg) -> Option<u64> {
+    let f = fault.as_ref()?;
+    // draw the trigger even when prob is 0 or 1 so toggling a fault's
+    // probability, not its presence, is what changes the stream
+    let hit = rng.frac() < f.prob;
+    hit.then(|| f.after.sample(rng))
+}
+
+/// Expand `scn` into its concrete request trace using `seed` (callers pass
+/// `scn.seed` unless overridden on the CLI). Per request the draw order is
+/// fixed — prompt length, prompt offset, gen, deadline, stream, cancel,
+/// disconnect — so adding a knob to a scenario changes only that knob's
+/// draws.
+pub fn sample_trace(scn: &Scenario, seed: u64) -> Vec<TraceRequest> {
+    let corpus_len = 65_536.max(scn.prompt.max() as usize + 1);
+    let corpus = corpus::generate(corpus_len, seed);
+    let mut rng = Lcg::new(seed);
+    let ticks = arrival_ticks(&scn.arrival, scn.requests);
+    let mut out = Vec::with_capacity(scn.requests);
+    for (i, arrive_tick) in ticks.into_iter().enumerate() {
+        let prompt_len = scn.prompt.sample(&mut rng) as usize;
+        let offset = rng.randint(0, (corpus.len() - prompt_len) as u64) as usize;
+        let prompt = corpus[offset..offset + prompt_len].to_vec();
+        let max_new_tokens = scn.gen.sample(&mut rng) as usize;
+        let deadline_ms = scn.deadline_ms.as_ref().map(|d| d.sample(&mut rng));
+        let stream = rng.frac() < scn.stream;
+        let cancel_after = fault_draw(&scn.cancel, &mut rng);
+        let disconnect_after = fault_draw(&scn.disconnect, &mut rng);
+        out.push(TraceRequest {
+            id: i as u64 + 1,
+            arrive_tick,
+            prompt,
+            max_new_tokens,
+            deadline_ms,
+            cancel_after,
+            disconnect_after,
+            stream,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::trace::parse;
+
+    #[test]
+    fn lcg_matches_corpus_constants() {
+        // first outputs of the corpus LCG from seed 1 (pinned so the two
+        // implementations cannot drift apart silently)
+        let mut r = Lcg::new(1);
+        let mut s = 1u64;
+        for _ in 0..4 {
+            s = s
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            assert_eq!(r.next(), s >> 33);
+        }
+    }
+
+    #[test]
+    fn arrival_shapes() {
+        assert_eq!(
+            arrival_ticks(&Arrival::Fixed { interval: 3 }, 4),
+            vec![0, 3, 6, 9]
+        );
+        assert_eq!(
+            arrival_ticks(&Arrival::Bursty { period: 10, size: 2 }, 5),
+            vec![0, 0, 10, 10, 20]
+        );
+        // phase 1: interval 2 over 5 ticks -> local 0,2,4 ; phase 2:
+        // burst of 2 at its start (tick 5); cycle back to phase 1
+        let ph = Arrival::Phases(vec![
+            (5, Arrival::Fixed { interval: 2 }),
+            (3, Arrival::Bursty { period: 10, size: 2 }),
+        ]);
+        assert_eq!(arrival_ticks(&ph, 6), vec![0, 2, 4, 5, 5, 8]);
+    }
+
+    #[test]
+    fn same_seed_same_trace_different_seed_differs() {
+        let scn = parse(
+            "scenario s {\n  requests 8\n  arrival fixed(interval=2)\n  prompt uniform(8, 64)\n  gen uniform(2, 6)\n  cancel 0.5 after uniform(1, 5)\n  stream 0.5\n}",
+        )
+        .unwrap();
+        let a = sample_trace(&scn, 7);
+        let b = sample_trace(&scn, 7);
+        assert_eq!(a, b);
+        let c = sample_trace(&scn, 8);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|r| (8..=64).contains(&r.prompt.len())));
+    }
+
+    #[test]
+    fn fixed_dists_consume_no_randomness() {
+        // two scenarios identical except one turns a sampled knob into a
+        // fixed one: the draws *after* it must not shift
+        let base = "scenario s {\n  requests 4\n  arrival fixed(interval=1)\n  prompt fixed(16)\n  gen GEN\n  stream 0.5\n}";
+        let a = parse(&base.replace("GEN", "fixed(4)")).unwrap();
+        let b = parse(&base.replace("GEN", "fixed(9)")).unwrap();
+        let ta = sample_trace(&a, 3);
+        let tb = sample_trace(&b, 3);
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(x.stream, y.stream);
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+}

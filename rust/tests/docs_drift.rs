@@ -1,0 +1,125 @@
+//! Metrics/doc drift gate: the counter set emitted by `GET /v1/metrics`
+//! must exactly match the counters documented in docs/API.md. The test
+//! parses the doc's metric tables (first-column backticked names, with
+//! `{i}` templates for per-node fields) and compares them two-way against
+//! a real `handle_metrics` response — an undocumented counter and a
+//! documented-but-gone counter both fail, naming the offender.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::rc::Rc;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::{Batcher, Engine, Policy};
+use hgca::runtime::PjrtRuntime;
+use hgca::server::api::handle_metrics;
+use hgca::util::json::Json;
+
+fn runtime() -> Rc<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(PjrtRuntime::new(&dir).expect("runtime"))
+}
+
+/// Metric names documented in API.md between `## GET /v1/metrics` and the
+/// next top-level section: every backticked token in the *first* column
+/// of the metric tables (one row may document several fields).
+fn documented_metrics() -> BTreeSet<String> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("docs/API.md");
+    let doc = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let start = doc.find("## GET /v1/metrics").expect("API.md documents GET /v1/metrics");
+    let section = &doc[start + 2..]; // skip past "##" so the end-scan finds the *next* section
+    let end = section.find("\n## ").map(|i| i + 2).unwrap_or(section.len());
+    let section = &doc[start..start + end];
+
+    let mut out = BTreeSet::new();
+    for line in section.lines() {
+        let mut cells = line.split('|');
+        let Some(first) = cells.nth(1) else { continue }; // cells[0] is the "" before the leading '|'
+        // backticked tokens in the first cell: `a`, `b` — each is a field
+        let mut rest = first;
+        while let Some(open) = rest.find('`') {
+            let tail = &rest[open + 1..];
+            let Some(close) = tail.find('`') else { break };
+            let token = &tail[..close];
+            rest = &tail[close + 1..];
+            let valid = !token.is_empty()
+                && token
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '{' || c == '}');
+            if valid {
+                out.insert(token.to_string());
+            }
+        }
+    }
+    assert!(
+        out.len() > 20,
+        "API.md metric tables parsed to only {} names — did the doc format change?",
+        out.len()
+    );
+    out
+}
+
+/// Collapse every maximal digit run to `{i}`, so `pool_node3_tasks`
+/// matches its documented template `pool_node{i}_tasks`.
+fn templated(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    let mut in_digits = false;
+    for c in name.chars() {
+        if c.is_ascii_digit() {
+            if !in_digits {
+                out.push_str("{i}");
+                in_digits = true;
+            }
+        } else {
+            in_digits = false;
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[test]
+fn metrics_counters_match_api_doc_exactly() {
+    let documented = documented_metrics();
+
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    // a bounded per-node budget makes the kv_blocks_free_node{i} family
+    // appear, so the template rows are actually exercised
+    engine.set_kv_node_budgets(vec![engine.blocks_per_sequence()]);
+    let batcher = Batcher::new(2);
+    let resp = handle_metrics(&engine, Some(&batcher));
+    assert_eq!(resp.status, 200);
+    let body = Json::parse(&resp.body).expect("metrics body is JSON");
+    let emitted: BTreeSet<String> = body.as_obj().expect("flat object").keys().cloned().collect();
+
+    let mut undocumented = Vec::new();
+    for name in &emitted {
+        if !documented.contains(name) && !documented.contains(&templated(name)) {
+            undocumented.push(name.clone());
+        }
+    }
+    assert!(
+        undocumented.is_empty(),
+        "counters emitted by /v1/metrics but missing from docs/API.md: {undocumented:?}"
+    );
+
+    let emitted_templates: BTreeSet<String> = emitted.iter().map(|n| templated(n)).collect();
+    let mut gone = Vec::new();
+    for name in &documented {
+        let live = if name.contains("{i}") {
+            emitted_templates.contains(name)
+        } else {
+            emitted.contains(name)
+        };
+        if !live {
+            gone.push(name.clone());
+        }
+    }
+    assert!(
+        gone.is_empty(),
+        "counters documented in docs/API.md but absent from /v1/metrics: {gone:?} \
+         (emitted: {emitted:?})"
+    );
+}

@@ -310,6 +310,37 @@ fn mid_stream_disconnect_retires_row_and_preserves_concurrent_request() {
 }
 
 #[test]
+fn non_streamed_disconnect_is_detected_by_the_read_side_watcher() {
+    let addr = spawn_server(ServingConfig::default());
+    // a long NON-streamed generation: nothing is written to the socket
+    // until the whole response is ready, so a write failure can never
+    // surface mid-flight — only the read-side EOF watcher can notice the
+    // client is gone (docs/API.md "Disconnects")
+    let mut victim = TcpStream::connect(addr).unwrap();
+    let body = r#"{"prompt": "The abandoned request ", "max_new_tokens": 20000}"#;
+    write!(
+        victim,
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    // stay connected well past the half-close grace window (an immediate
+    // half-close must NOT cancel — that path is pinned by the http.rs
+    // unit tests), then hang up mid-generation
+    std::thread::sleep(Duration::from_millis(500));
+    drop(victim);
+
+    // the watcher trips Disconnected, the engine loop retires the row
+    // mid-flight, and the KV blocks return to the pool — long before the
+    // 20000-token generation could have finished
+    await_metrics(addr, 30, "non-streamed disconnect retirement", |j| {
+        j.req_f64("requests_disconnected").unwrap() >= 1.0
+            && j.req_f64("kv_blocks_in_use").unwrap() == 0.0
+            && j.req_f64("batch_active").unwrap() == 0.0
+    });
+}
+
+#[test]
 fn deadline_ms_yields_summary_line_with_partial_tokens() {
     let addr = spawn_server(ServingConfig::default());
     let body =

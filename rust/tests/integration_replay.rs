@@ -1,0 +1,221 @@
+//! Trace-replay conformance: the harness drives the *real* serving stack
+//! (batcher + lifecycle + GPU KV pool + NUMA placement), and the same
+//! `(scenario, seed)` must replay to bitwise-identical per-request
+//! outcomes — across repeated runs and across 1/2/4 synthetic NUMA
+//! nodes, extending the bitwise discipline of integration_numa.rs to the
+//! open-loop workload path. Also pins the fault-injection and shed knobs
+//! with structurally-certain inline scenarios, and cross-checks the
+//! report's JSON keys against SCENARIO_baseline.json so the CI gate and
+//! the report cannot drift apart.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use hgca::config::HgcaConfig;
+use hgca::engine::{Engine, FinishReason, Policy};
+use hgca::runtime::PjrtRuntime;
+use hgca::simulator::trace::{parse, replay, ReplayOptions, ReplayReport, Scenario};
+use hgca::util::json::Json;
+
+fn runtime() -> Rc<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(PjrtRuntime::new(&dir).expect("runtime"))
+}
+
+fn scenario_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("scenarios")
+}
+
+fn load(name: &str) -> Scenario {
+    let path = scenario_dir().join(name);
+    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    parse(&src).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+/// One replay on a fresh engine — fresh because the engine RNG seeds at
+/// construction, which is what makes two runs comparable at all.
+fn run(scn: &Scenario, nodes: usize, seed: Option<u64>) -> ReplayReport {
+    let rt = runtime();
+    let mr = rt.load_model("tiny").unwrap();
+    let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+    replay(&mut engine, scn, &ReplayOptions { nodes, seed }).expect("replay")
+}
+
+const CHECKED_IN: &[&str] = &[
+    "steady_decode.scn",
+    "prefill_storm.scn",
+    "deadline_edf.scn",
+    "client_churn.scn",
+    "diurnal_phases.scn",
+];
+
+#[test]
+fn same_seed_runs_are_bitwise_identical_for_every_checked_in_scenario() {
+    for file in CHECKED_IN {
+        let scn = load(file);
+        let a = run(&scn, 1, None);
+        let b = run(&scn, 1, None);
+        assert_eq!(a.outcomes, b.outcomes, "{file}: same-seed runs diverged");
+        assert_eq!(a.digest(), b.digest(), "{file}");
+        // every trace request is accounted for exactly once, in id order
+        assert_eq!(a.outcomes.len(), scn.requests, "{file}");
+        for (i, o) in a.outcomes.iter().enumerate() {
+            assert_eq!(o.id, i as u64 + 1, "{file}: outcome ids must be dense");
+            assert!(o.finish_tick >= o.arrive_tick, "{file}: request {} time-travelled", o.id);
+        }
+    }
+}
+
+#[test]
+fn outcomes_are_invariant_across_1_2_4_synthetic_numa_nodes() {
+    // the two scenarios with the richest admission traffic; the full set
+    // is swept by `hgca replay --verify` in the CI scenario-replay job
+    for file in ["steady_decode.scn", "client_churn.scn"] {
+        let scn = load(file);
+        let one = run(&scn, 1, None);
+        for nodes in [2usize, 4] {
+            let multi = run(&scn, nodes, None);
+            assert_eq!(
+                one.outcomes, multi.outcomes,
+                "{file}: outcomes differ between 1 and {nodes} synthetic NUMA nodes"
+            );
+            assert_eq!(one.digest(), multi.digest(), "{file}");
+            assert_eq!(multi.nodes, nodes);
+        }
+    }
+}
+
+#[test]
+fn seed_override_changes_the_trace() {
+    let scn = load("steady_decode.scn");
+    let a = run(&scn, 1, None);
+    let b = run(&scn, 1, Some(scn.seed + 1));
+    assert_eq!(a.seed, scn.seed);
+    assert_eq!(b.seed, scn.seed + 1);
+    assert_ne!(a.digest(), b.digest(), "a different seed must sample a different trace");
+}
+
+#[test]
+fn churn_scenario_exercises_the_fault_knobs() {
+    let scn = load("client_churn.scn");
+    let r = run(&scn, 1, None);
+    let cancelled = r.count(FinishReason::Cancelled);
+    let disconnected = r.count(FinishReason::Disconnected);
+    // 24 requests each draw cancel (p=0.3) and disconnect (p=0.3); the
+    // chance a fixed seed dodges both everywhere is 0.49^24 ≈ 4e-8
+    assert!(cancelled + disconnected >= 1, "churn scenario never tripped a fault");
+    for o in &r.outcomes {
+        if o.finish_reason == FinishReason::Cancelled
+            || o.finish_reason == FinishReason::Disconnected
+        {
+            assert!(
+                o.decode_steps < scn.gen.min() as usize || o.text.len() < scn.gen.min() as usize,
+                "request {} was faulted after {}..{} ticks yet ran to its full budget",
+                o.id,
+                1,
+                6
+            );
+        }
+    }
+}
+
+/// `cancel 1.0 after fixed(2)` with a 50-token budget: every request is
+/// cancelled mid-flight, with certainty — no probability involved.
+#[test]
+fn cancel_fault_trips_every_request_mid_flight() {
+    let scn = parse(
+        "scenario cancel_all {\n  requests 4\n  arrival fixed(interval=1)\n  prompt fixed(32)\n  gen fixed(50)\n  cancel 1.0 after fixed(2)\n}",
+    )
+    .unwrap();
+    let r = run(&scn, 1, None);
+    assert_eq!(r.count(FinishReason::Cancelled), 4);
+    assert!(r.outcomes.iter().all(|o| o.decode_steps < 50));
+}
+
+#[test]
+fn disconnect_fault_trips_every_request_mid_flight() {
+    let scn = parse(
+        "scenario disconnect_all {\n  requests 4\n  arrival fixed(interval=1)\n  prompt fixed(32)\n  gen fixed(50)\n  disconnect 1.0 after fixed(2)\n}",
+    )
+    .unwrap();
+    let r = run(&scn, 1, None);
+    assert_eq!(r.count(FinishReason::Disconnected), 4);
+}
+
+/// `queue_bound 0` on a batch-1 burst: the head of the burst is admitted
+/// on the first tick, everything still queued one tick later has waited
+/// `1 > 0` ticks and is shed as a queue timeout.
+#[test]
+fn queue_bound_sheds_surface_as_queue_timeout_outcomes() {
+    let scn = parse(
+        "scenario shed_all {\n  requests 6\n  batch 1\n  kv_slots 1\n  queue_bound 0\n  arrival bursty(period=100, size=6)\n  prompt fixed(16)\n  gen fixed(5)\n}",
+    )
+    .unwrap();
+    let r = run(&scn, 1, None);
+    assert_eq!(r.count(FinishReason::Length), 1);
+    assert_eq!(r.count(FinishReason::QueueTimeout), 5);
+    assert_eq!(r.watermark_shed, 0, "these sheds are queue timeouts, not watermark rejections");
+}
+
+/// `watermark 2` against a size-6 burst at tick 0: requests 1-2 enter
+/// (pending 0 then 1), requests 3-6 find pending = 2 and `2 + 1 > 2`, so
+/// the door rejects them before they ever reach the queue.
+#[test]
+fn watermark_sheds_are_rejected_at_the_door() {
+    let scn = parse(
+        "scenario door_shed {\n  requests 6\n  batch 1\n  kv_slots 1\n  watermark 2\n  arrival bursty(period=100, size=6)\n  prompt fixed(16)\n  gen fixed(3)\n}",
+    )
+    .unwrap();
+    let r = run(&scn, 1, None);
+    assert_eq!(r.watermark_shed, 4);
+    assert_eq!(r.count(FinishReason::QueueTimeout), 4);
+    assert_eq!(r.count(FinishReason::Length), 2);
+    for o in &r.outcomes {
+        if o.finish_reason == FinishReason::QueueTimeout {
+            assert_eq!(o.finish_tick, o.arrive_tick, "door sheds never enter the system");
+            assert_eq!(o.queue_ticks, 0);
+            assert!(o.text.is_empty());
+        }
+    }
+}
+
+/// Every metric key the checked-in baseline gates (plain, `_max`, or
+/// `_min`) must exist in the replay report's JSON — a baseline typo or a
+/// renamed report field fails here, not as a silent gate pass.
+#[test]
+fn baseline_keys_match_the_report_schema() {
+    let report = run(&load("steady_decode.scn"), 1, None).to_json();
+    let baseline_path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("SCENARIO_baseline.json");
+    let baseline = Json::parse(&std::fs::read_to_string(&baseline_path).unwrap())
+        .unwrap_or_else(|e| panic!("{}: {e:?}", baseline_path.display()));
+    let scenarios = baseline
+        .get("scenarios")
+        .and_then(|s| s.as_arr())
+        .expect("baseline 'scenarios' array");
+    let mut names = Vec::new();
+    for entry in scenarios {
+        let obj = entry.as_obj().expect("baseline scenario object");
+        names.push(obj["name"].as_str().expect("name").to_string());
+        for key in obj.keys() {
+            if key == "name" || key == "additive" {
+                continue;
+            }
+            let metric = key.strip_suffix("_max").or_else(|| key.strip_suffix("_min")).unwrap_or(key);
+            assert!(
+                report.get(metric).is_some(),
+                "baseline gates '{key}' but the replay report has no '{metric}' field"
+            );
+        }
+    }
+    // the baseline covers exactly the checked-in scenario set
+    let mut expected: Vec<String> = CHECKED_IN
+        .iter()
+        .map(|f| f.trim_end_matches(".scn").to_string())
+        .collect();
+    names.sort();
+    expected.sort();
+    assert_eq!(names, expected);
+    // and the report carries the digest the gate can optionally pin
+    assert!(report.get("outcome_digest").and_then(|d| d.as_str()).is_some());
+}

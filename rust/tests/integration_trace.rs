@@ -1,0 +1,176 @@
+//! Scenario-DSL conformance: the `format → parse → format` fixed point
+//! over seeded-random ASTs, malformed-input robustness (spanned errors,
+//! never a panic), and the checked-in `scenarios/*.scn` corpus.
+//!
+//! Fuzzing is driven by the same LCG the trace sampler uses
+//! (`simulator::trace::Lcg`, the `util/corpus.rs` generator), across
+//! ≥1000 seeds per property, so every failure is replayable from its
+//! seed number alone.
+
+use std::path::Path;
+
+use hgca::simulator::trace::{parse, Arrival, Dist, Fault, Lcg, Scenario};
+
+// ---------------------------------------------------------------------
+// seeded-random AST generation
+// ---------------------------------------------------------------------
+
+fn gen_dist(r: &mut Lcg, lo: u64, hi: u64) -> Dist {
+    match r.next() % 3 {
+        0 => Dist::Fixed(r.randint(lo, hi)),
+        1 => {
+            let a = r.randint(lo, hi);
+            let b = r.randint(a, hi);
+            Dist::Uniform(a, b)
+        }
+        _ => {
+            let n = r.randint(1, 4);
+            Dist::Choice((0..n).map(|_| r.randint(lo, hi)).collect())
+        }
+    }
+}
+
+fn gen_arrival(r: &mut Lcg, nested: bool) -> Arrival {
+    match r.next() % if nested { 2 } else { 3 } {
+        0 => Arrival::Fixed {
+            interval: r.randint(1, 50),
+        },
+        1 => Arrival::Bursty {
+            period: r.randint(1, 50),
+            size: r.randint(1, 10),
+        },
+        _ => {
+            let n = r.randint(1, 3);
+            Arrival::Phases((0..n).map(|_| (r.randint(1, 100), gen_arrival(r, true))).collect())
+        }
+    }
+}
+
+fn gen_fault(r: &mut Lcg) -> Fault {
+    Fault {
+        prob: (r.next() % 1001) as f64 / 1000.0,
+        after: gen_dist(r, 0, 100),
+    }
+}
+
+fn gen_scenario(r: &mut Lcg) -> Scenario {
+    Scenario {
+        name: format!("s{}", r.next() % 10_000),
+        seed: r.next(),
+        requests: r.randint(1, 500) as usize,
+        batch: r.randint(1, 64) as usize,
+        kv_slots: (r.next() % 2 == 0).then(|| r.randint(1, 100) as usize),
+        queue_bound: (r.next() % 2 == 0).then(|| r.randint(0, 500)),
+        watermark: (r.next() % 2 == 0).then(|| r.randint(1, 500) as usize),
+        arrival: gen_arrival(r, false),
+        prompt: gen_dist(r, 1, 4096),
+        gen: gen_dist(r, 0, 1000),
+        deadline_ms: (r.next() % 2 == 0).then(|| gen_dist(r, 1, 86_400_000)),
+        cancel: (r.next() % 2 == 0).then(|| gen_fault(r)),
+        disconnect: (r.next() % 2 == 0).then(|| gen_fault(r)),
+        stream: (r.next() % 1001) as f64 / 1000.0,
+    }
+}
+
+// ---------------------------------------------------------------------
+// properties
+// ---------------------------------------------------------------------
+
+/// `format → parse` recovers the exact AST, and a second `format` is a
+/// fixed point — across ≥1000 LCG seeds.
+#[test]
+fn format_parse_format_is_a_fixed_point() {
+    for seed in 0..1200u64 {
+        let mut r = Lcg::new(seed);
+        let scn = gen_scenario(&mut r);
+        let text = scn.to_string();
+        let parsed = parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: canonical text failed to parse: {e}\n{text}"));
+        assert_eq!(parsed, scn, "seed {seed}: AST not recovered from\n{text}");
+        assert_eq!(parsed.to_string(), text, "seed {seed}: format not a fixed point");
+    }
+}
+
+/// Mutating valid scenario text never panics the parser; every rejection
+/// carries a 1-based line/column span and a message.
+#[test]
+fn mutated_inputs_error_with_spans_never_panic() {
+    for seed in 0..1200u64 {
+        let mut r = Lcg::new(seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1));
+        let text = gen_scenario(&mut r).to_string();
+        let mut bytes = text.into_bytes();
+        // 1-3 random mutations: delete, insert, or overwrite a byte with
+        // grammar-adjacent characters (punctuation and digits hit the
+        // parser's interesting paths far more often than raw noise)
+        const ALPHABET: &[u8] = b"{}(),=:#.0123456789abz_ \n";
+        for _ in 0..r.randint(1, 3) {
+            if bytes.is_empty() {
+                break;
+            }
+            let pos = (r.next() as usize) % bytes.len();
+            match r.next() % 3 {
+                0 => {
+                    bytes.remove(pos);
+                }
+                1 => {
+                    let c = ALPHABET[(r.next() as usize) % ALPHABET.len()];
+                    bytes.insert(pos, c);
+                }
+                _ => {
+                    bytes[pos] = ALPHABET[(r.next() as usize) % ALPHABET.len()];
+                }
+            }
+        }
+        let mutated = String::from_utf8_lossy(&bytes).into_owned();
+        if let Err(e) = parse(&mutated) {
+            assert!(e.line >= 1 && e.col >= 1, "seed {seed}: unspanned error {e:?}");
+            assert!(!e.msg.is_empty(), "seed {seed}: empty error message");
+            assert!(
+                e.to_string().contains(&format!("line {}", e.line)),
+                "seed {seed}: Display must carry the span"
+            );
+        }
+        // an Ok is fine — some mutations (comments, whitespace, digits
+        // inside numbers) keep the text valid
+    }
+}
+
+/// Arbitrary byte garbage — including non-UTF-8 and control characters —
+/// never panics the parser.
+#[test]
+fn raw_garbage_never_panics() {
+    for seed in 0..1000u64 {
+        let mut r = Lcg::new(seed.wrapping_mul(0xD1B54A32D192ED03).wrapping_add(7));
+        let len = (r.next() as usize) % 200;
+        let bytes: Vec<u8> = (0..len).map(|_| (r.next() % 256) as u8).collect();
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = parse(&text); // must return, Ok or Err — never panic
+    }
+}
+
+/// Every checked-in scenario parses, its name matches its file name, and
+/// its canonical form round-trips.
+#[test]
+fn checked_in_scenarios_parse_and_round_trip() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("scenarios");
+    let mut seen = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "scn"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let src = std::fs::read_to_string(&path).unwrap();
+        let scn = parse(&src).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(
+            Some(scn.name.as_str()),
+            path.file_stem().and_then(|s| s.to_str()),
+            "scenario name must match its file name"
+        );
+        let canon = scn.to_string();
+        assert_eq!(parse(&canon).unwrap(), scn, "{}", path.display());
+        seen += 1;
+    }
+    assert!(seen >= 4, "expected the 4-6 checked-in scenarios, found {seen}");
+}

@@ -1,0 +1,269 @@
+//! CI scenario-replay gate: compares a fresh `hgca replay --json` report
+//! against the checked-in per-scenario baseline (`SCENARIO_baseline.json`)
+//! and fails on latency/shed drift.
+//!
+//! Replay metrics are **tick-based** (batcher scheduler clock), so unlike
+//! the wall-clock bench they are machine-portable: the same `(scenario,
+//! seed)` produces the same tick metrics on any runner. The baseline
+//! therefore pins three kinds of key per scenario:
+//!
+//! * exact keys (`completed`, `shed_watermark`, …) — the current value
+//!   must match the baseline value exactly;
+//! * `<metric>_max` — the current `<metric>` must be ≤ the bound;
+//! * `<metric>_min` — the current `<metric>` must be ≥ the bound.
+//!
+//! Bounds exist so a baseline can assert "this overload scenario sheds,
+//! and p99 queue wait stays under N ticks" without pinning every digit of
+//! an emergent quantity; exact keys pin what is structurally guaranteed.
+//! Scenario drift mirrors `bench_gate`: a current scenario missing from
+//! the baseline is an error (an ungated scenario is a silent hole); a
+//! baseline scenario missing from the report errors unless flagged
+//! `"additive": true` (tolerated with a warning, gated once produced).
+//! `--check-digest` additionally compares `outcome_digest` when the
+//! baseline pins one (off by default: digests cover generated token
+//! bytes, which a model/config change legitimately moves).
+//!
+//! Usage:
+//!   scenario_gate [--baseline SCENARIO_baseline.json] [--current SCENARIO_ci.json]
+//!                 [--check-digest]
+//!
+//! Refresh after an intentional scheduling change with:
+//!   cargo run --release --bin hgca -- replay scenarios/*.scn --verify --json SCENARIO_ci.json
+//! then fold the printed values into SCENARIO_baseline.json.
+//!
+//! Exit codes: 0 pass, 1 drift, 2 usage/io error.
+
+use std::collections::BTreeMap;
+
+use hgca::util::argparse::Args;
+use hgca::util::json::Json;
+
+/// One scenario entry: its name, the digest (if present), the additive
+/// marker, and every numeric field as a flat key → value map.
+struct Entry {
+    name: String,
+    digest: Option<String>,
+    additive: bool,
+    nums: BTreeMap<String, f64>,
+}
+
+fn load(path: &str) -> Result<Vec<Entry>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let scenarios = doc
+        .get("scenarios")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| format!("{path}: missing 'scenarios' array"))?;
+    let mut out = Vec::with_capacity(scenarios.len());
+    for s in scenarios {
+        let obj = s
+            .as_obj()
+            .ok_or_else(|| format!("{path}: scenario entry is not an object"))?;
+        let name = s
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| format!("{path}: scenario entry missing 'name'"))?
+            .to_string();
+        let mut nums = BTreeMap::new();
+        for (k, v) in obj {
+            if let Some(n) = v.as_f64() {
+                nums.insert(k.clone(), n);
+            }
+        }
+        out.push(Entry {
+            digest: s.get("outcome_digest").and_then(|d| d.as_str()).map(String::from),
+            additive: s.get("additive").and_then(|a| a.as_bool()).unwrap_or(false),
+            name,
+            nums,
+        });
+    }
+    Ok(out)
+}
+
+/// Scenario-drift report (same contract as `bench_gate::drift`): current
+/// scenarios with no baseline entry are errors; baseline scenarios the
+/// report lacks error unless additive (returned as warnings).
+fn drift(baseline: &[Entry], current: &[Entry]) -> (Vec<String>, Vec<String>) {
+    let mut errors = Vec::new();
+    let mut warnings = Vec::new();
+    for cur in current {
+        if !baseline.iter().any(|b| b.name == cur.name) {
+            errors.push(format!("current scenario '{}' missing from baseline", cur.name));
+        }
+    }
+    for base in baseline {
+        if !current.iter().any(|c| c.name == base.name) {
+            let msg = format!("baseline scenario '{}' not present in the report", base.name);
+            if base.additive {
+                warnings.push(format!("{msg} (additive: tolerated, not gated)"));
+            } else {
+                errors.push(msg);
+            }
+        }
+    }
+    (errors, warnings)
+}
+
+/// Compare one scenario's current values against its baseline entry.
+/// Returns human-readable violations (empty = pass).
+fn check(base: &Entry, cur: &Entry, check_digest: bool) -> Vec<String> {
+    let mut bad = Vec::new();
+    for (key, &want) in &base.nums {
+        // `seed` and `nodes` identify the run, not a gated metric — but
+        // when the baseline pins them, a mismatch means the report was
+        // produced with the wrong invocation, which IS an error; plain
+        // exact comparison covers that too.
+        if let Some(metric) = key.strip_suffix("_max") {
+            match cur.nums.get(metric) {
+                Some(&got) if got <= want => {}
+                Some(&got) => bad.push(format!("{metric} = {got} exceeds bound {want}")),
+                None => bad.push(format!("report lacks '{metric}' (bounded by '{key}')")),
+            }
+        } else if let Some(metric) = key.strip_suffix("_min") {
+            match cur.nums.get(metric) {
+                Some(&got) if got >= want => {}
+                Some(&got) => bad.push(format!("{metric} = {got} below floor {want}")),
+                None => bad.push(format!("report lacks '{metric}' (bounded by '{key}')")),
+            }
+        } else {
+            match cur.nums.get(key) {
+                Some(&got) if got == want => {}
+                Some(&got) => bad.push(format!("{key} = {got}, baseline pins {want}")),
+                None => bad.push(format!("report lacks pinned key '{key}'")),
+            }
+        }
+    }
+    if check_digest {
+        if let (Some(want), Some(got)) = (&base.digest, &cur.digest) {
+            if want != got {
+                bad.push(format!("outcome_digest {got} != baseline {want}"));
+            }
+        }
+    }
+    bad
+}
+
+fn run() -> Result<bool, String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["check-digest"]).map_err(|e| e.to_string())?;
+    let baseline_path = args.get_or("baseline", "SCENARIO_baseline.json");
+    let current_path = args.get_or("current", "SCENARIO_ci.json");
+    let check_digest = args.flag("check-digest");
+
+    let baseline = load(baseline_path)?;
+    let current = load(current_path)?;
+    println!("scenario gate: {current_path} vs {baseline_path}");
+
+    let (errors, warnings) = drift(&baseline, &current);
+    for w in &warnings {
+        println!("  note: {w}");
+    }
+    if !errors.is_empty() {
+        return Err(format!(
+            "scenario drift — run `cargo run --release --bin hgca -- replay scenarios/*.scn \
+             --verify --json {current_path}` and fold the new scenario into {baseline_path}:\n  {}",
+            errors.join("\n  ")
+        ));
+    }
+
+    let mut pass = true;
+    let mut compared = 0;
+    for cur in &current {
+        let base = baseline
+            .iter()
+            .find(|b| b.name == cur.name)
+            .expect("drift checked above");
+        compared += 1;
+        let bad = check(base, cur, check_digest);
+        println!(
+            "  {}: {} keys gated {}",
+            cur.name,
+            base.nums.len(),
+            if bad.is_empty() { "ok" } else { "DRIFTED" },
+        );
+        for b in &bad {
+            println!("      {b}");
+        }
+        pass &= bad.is_empty();
+    }
+    if compared == 0 {
+        return Err("no comparable scenarios between baseline and report".into());
+    }
+    Ok(pass)
+}
+
+fn main() {
+    match run() {
+        Ok(true) => println!("scenario gate: PASS"),
+        Ok(false) => {
+            eprintln!("scenario gate: FAIL — replay metrics drifted from the baseline");
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("scenario gate: error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, pairs: &[(&str, f64)], additive: bool) -> Entry {
+        Entry {
+            name: name.into(),
+            digest: None,
+            additive,
+            nums: pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    #[test]
+    fn exact_keys_pin_values() {
+        let base = entry("s", &[("completed", 18.0)], false);
+        assert!(check(&base, &entry("s", &[("completed", 18.0)], false), false).is_empty());
+        let bad = check(&base, &entry("s", &[("completed", 17.0)], false), false);
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].contains("baseline pins"));
+    }
+
+    #[test]
+    fn max_and_min_bounds() {
+        let base = entry("s", &[("e2e_p99_ticks_max", 100.0), ("completed_min", 4.0)], false);
+        let ok = entry("s", &[("e2e_p99_ticks", 60.0), ("completed", 9.0)], false);
+        assert!(check(&base, &ok, false).is_empty());
+        let slow = entry("s", &[("e2e_p99_ticks", 150.0), ("completed", 9.0)], false);
+        assert!(check(&base, &slow, false)[0].contains("exceeds bound"));
+        let starved = entry("s", &[("e2e_p99_ticks", 60.0), ("completed", 2.0)], false);
+        assert!(check(&base, &starved, false)[0].contains("below floor"));
+    }
+
+    #[test]
+    fn missing_metric_behind_a_bound_is_caught() {
+        let base = entry("s", &[("shed_queue_max", 5.0)], false);
+        let bad = check(&base, &entry("s", &[], false), false);
+        assert!(bad[0].contains("report lacks"));
+    }
+
+    #[test]
+    fn digest_only_gates_when_asked() {
+        let mut base = entry("s", &[], false);
+        base.digest = Some("aa".into());
+        let mut cur = entry("s", &[], false);
+        cur.digest = Some("bb".into());
+        assert!(check(&base, &cur, false).is_empty());
+        assert_eq!(check(&base, &cur, true).len(), 1);
+    }
+
+    #[test]
+    fn drift_mirrors_bench_gate_semantics() {
+        let (errors, _) = drift(&[], &[entry("new", &[], false)]);
+        assert!(errors[0].contains("missing from baseline"));
+        let (errors, warnings) = drift(&[entry("old", &[], false)], &[]);
+        assert_eq!((errors.len(), warnings.len()), (1, 0));
+        let (errors, warnings) = drift(&[entry("old", &[], true)], &[]);
+        assert_eq!((errors.len(), warnings.len()), (0, 1));
+        assert!(warnings[0].contains("additive"));
+    }
+}
