@@ -216,6 +216,84 @@ fn main() {
     }
     println!();
 
+    // ---- shared-prefix prefill: radix cache on vs off ----
+    // 64 requests through the real batcher, all opening with the same
+    // 128-byte prefix. The cached arm adopts the prefix KV snapshot at
+    // admission instead of re-prefilling it; tokens must be bitwise
+    // identical either way (adoption is pure memoization — greedy sampler,
+    // RNG-free prefill). speedup = uncached_p50 / cached_p50.
+    println!("== shared-prefix prefill fleet: radix cache on vs off ==");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if let Ok(rt) = hgca::runtime::PjrtRuntime::new(&dir) {
+        use hgca::config::HgcaConfig;
+        use hgca::engine::{Batcher, Engine, Policy, Request};
+        let rt = Rc::new(rt);
+        let mr = rt.load_model("tiny").unwrap();
+        let (fleet, prefix_len, tail_len, batch) = (64usize, 128usize, 64usize, 4usize);
+        let corpus = hgca::util::corpus::generate(prefix_len + fleet * tail_len, 1);
+        let prompts: Vec<Vec<u8>> = (0..fleet)
+            .map(|i| {
+                let mut p = corpus[..prefix_len].to_vec();
+                p.extend_from_slice(&corpus[prefix_len + i * tail_len..prefix_len + (i + 1) * tail_len]);
+                p
+            })
+            .collect();
+        let run_fleet = |cached: bool| -> Vec<(u64, Vec<u8>)> {
+            let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
+            let bps = engine.blocks_per_sequence();
+            // spare slots beyond the batch so cache entries can lease blocks
+            engine.set_kv_block_capacity(Some((batch + 2) * bps));
+            if cached {
+                engine.enable_prefix_cache(32);
+            }
+            let mut b = Batcher::new(batch);
+            for (i, p) in prompts.iter().enumerate() {
+                b.submit(Request {
+                    id: i as u64 + 1,
+                    prompt: p.clone(),
+                    max_new_tokens: 4,
+                });
+            }
+            let mut out = Vec::new();
+            while b.pending() > 0 {
+                for c in b.tick(&mut engine).unwrap() {
+                    out.push((c.id, c.text));
+                }
+            }
+            out.sort();
+            out
+        };
+        // bitwise conformance first: the cache must be invisible in tokens
+        let uncached = run_fleet(false);
+        let cached = run_fleet(true);
+        assert_eq!(cached, uncached, "prefix-cache adoption changed generated tokens");
+        let s_off = bench(1, 5, || {
+            let _ = run_fleet(false);
+        });
+        let s_on = bench(1, 5, || {
+            let _ = run_fleet(true);
+        });
+        println!(
+            "fleet={fleet:>3} prefix={prefix_len} tail={tail_len}: cached p50 {:>9.1} ms | uncached p50 {:>9.1} ms | speedup {:>5.2}x",
+            s_on.p50 * 1e3,
+            s_off.p50 * 1e3,
+            s_off.p50 / s_on.p50
+        );
+        gate_cases.push(Json::obj(vec![
+            ("jobs", Json::num(fleet as f64)),
+            ("n", Json::num((prefix_len + tail_len) as f64)),
+            ("threads", Json::num(4.0)),
+            // gated path = the cached fleet; baseline = cache disabled
+            ("pool_p50_us", Json::num(s_on.p50 * 1e6)),
+            ("spawn_p50_us", Json::num(s_off.p50 * 1e6)),
+            ("pool_calls_per_sec", Json::num(1.0 / s_on.p50)),
+            ("speedup", Json::num(s_off.p50 / s_on.p50)),
+        ]));
+    } else {
+        println!("(skipped: no artifact runtime — baseline case is additive)");
+    }
+    println!();
+
     // ---- CI gate dump (BENCH_*.json; see tools/bench_gate.rs) ----
     if let Ok(path) = std::env::var("HGCA_BENCH_JSON") {
         let doc = Json::obj(vec![

@@ -108,6 +108,20 @@ pub struct ServingConfig {
     /// sequences). Values < 1 make KV availability, not row count, the
     /// binding admission constraint; values > 1 leave slack.
     pub kv_headroom: f64,
+    /// Cross-request prefix KV reuse (`--prefix-cache`): admission
+    /// consults a radix cache of chunk-aligned prompt-prefix snapshots
+    /// and adopts the longest hit instead of re-running those prefill
+    /// chunks. Off by default — tokens are bitwise-identical either way
+    /// (the conformance suite pins this); the cache trades pool blocks
+    /// for skipped prefill work. Cached entries lease blocks from the
+    /// same pool sequences use, so pair it with headroom above one full
+    /// batch (`--kv-headroom` > 1 or explicit `--kv-blocks`) or the
+    /// cache will have nothing to lease and every lookup will miss.
+    pub prefix_cache: bool,
+    /// Max resident prefix-cache entries (`--prefix-cache-entries`,
+    /// default 32) — LRU evicts past this, and capacity pressure from
+    /// admission evicts below it.
+    pub prefix_cache_entries: usize,
 }
 
 impl Default for ServingConfig {
@@ -118,6 +132,8 @@ impl Default for ServingConfig {
             max_queue_ticks: None,
             kv_blocks: None,
             kv_headroom: 1.0,
+            prefix_cache: false,
+            prefix_cache_entries: 32,
         }
     }
 }
@@ -202,6 +218,10 @@ impl ServingConfig {
             self.kv_headroom.is_finite() && self.kv_headroom > 0.0,
             "kv headroom must be a positive finite factor"
         );
+        anyhow::ensure!(
+            self.prefix_cache_entries > 0,
+            "prefix cache entry cap must be positive"
+        );
         Ok(())
     }
 }
@@ -219,6 +239,8 @@ mod tests {
             max_queue_ticks: Some(64),
             kv_blocks: Some(128),
             kv_headroom: 1.5,
+            prefix_cache: true,
+            prefix_cache_entries: 8,
         };
         ok.validate().unwrap();
         let bad = ServingConfig {
@@ -243,6 +265,11 @@ mod tests {
             };
             assert!(bad.validate().is_err(), "headroom {headroom} must fail");
         }
+        let bad = ServingConfig {
+            prefix_cache_entries: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

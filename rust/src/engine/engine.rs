@@ -13,7 +13,7 @@ use crate::attention::{
     merge_states, AttnPool, CpuAttnOutput, OwnedJobs, PendingAttn, TaskSplit, EMPTY_LSE,
 };
 use crate::config::{HgcaConfig, ModelConfig};
-use crate::kv::{GpuBlockPool, KvManager};
+use crate::kv::{GpuBlockPool, KvManager, PrefixCache, PrefixStats};
 use crate::metrics::{Metrics, Timer};
 use crate::model::Sampler;
 use crate::runtime::{Executor, ModelRuntime};
@@ -113,6 +113,14 @@ pub struct Engine<'m> {
     /// way (the conformance suite pins this); the toggle exists for A/B
     /// benchmarking and as the bisection lever.
     pub overlap_cpu_attn: bool,
+    /// Cross-request prefix KV cache (radix trie over chunk-aligned token
+    /// prefixes, `kv/prefix_cache.rs`). `None` — the default — means
+    /// admission and prefill behave exactly as before the cache existed.
+    /// Enabled by [`Engine::enable_prefix_cache`] (`hgca serve
+    /// --prefix-cache`); the batcher then admits through
+    /// [`Engine::try_new_sequence_cached`] and feeds snapshots back via
+    /// [`Engine::cache_prefix`] after each prefill chunk.
+    prefix: Option<PrefixCache>,
     /// scratch: batch window staging buffers, reused across steps
     k_win: Vec<f32>,
     v_win: Vec<f32>,
@@ -133,6 +141,7 @@ impl<'m> Engine<'m> {
             kv_pool: Arc::new(GpuBlockPool::new()),
             topology: Topology::single(),
             overlap_cpu_attn: true,
+            prefix: None,
             k_win: Vec::new(),
             v_win: Vec::new(),
         }
@@ -178,6 +187,7 @@ impl<'m> Engine<'m> {
             Some(blocks) => GpuBlockPool::with_capacity(blocks),
             None => GpuBlockPool::new(),
         });
+        self.rebind_prefix_cache();
     }
 
     /// Replace [`Engine::kv_pool`] with a fresh pool whose capacity is
@@ -188,6 +198,45 @@ impl<'m> Engine<'m> {
     /// exactly that method.
     pub fn set_kv_node_budgets(&mut self, budgets: Vec<usize>) {
         self.kv_pool = Arc::new(GpuBlockPool::with_node_budgets(budgets));
+        self.rebind_prefix_cache();
+    }
+
+    /// Re-create an enabled prefix cache against the current pool (the
+    /// pool-replacing setters above call this so cached entries never hold
+    /// leases against a retired pool).
+    fn rebind_prefix_cache(&mut self) {
+        if let Some(cache) = self.prefix.take() {
+            self.prefix = Some(PrefixCache::new(
+                Arc::clone(&self.kv_pool),
+                self.cfg.chunk,
+                cache.max_entries(),
+            ));
+        }
+    }
+
+    /// Turn on cross-request prefix KV reuse: admissions through
+    /// [`Engine::try_new_sequence_cached`] consult a radix cache of up to
+    /// `max_entries` chunk-aligned prefix snapshots before re-running
+    /// prefill chunks. Call after the pool is bounded
+    /// ([`Engine::set_kv_node_budgets`]) — the cache leases its entry
+    /// storage from [`Engine::kv_pool`].
+    pub fn enable_prefix_cache(&mut self, max_entries: usize) {
+        self.prefix = Some(PrefixCache::new(
+            Arc::clone(&self.kv_pool),
+            self.cfg.chunk,
+            max_entries,
+        ));
+    }
+
+    /// Whether cross-request prefix reuse is on.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Prefix-cache counters (all-zero when the cache is disabled — the
+    /// metrics endpoint emits them unconditionally so the schema is stable).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.as_ref().map(PrefixCache::stats).unwrap_or_default()
     }
 
     /// Set the NUMA topology sequences are placed over. Call **before**
@@ -228,6 +277,74 @@ impl<'m> Engine<'m> {
         let mut seq = Sequence::new_on(id, prompt, &self.mr.cfg, &self.cfg, &self.topology, node);
         seq.kv.attach_lease(lease);
         Some(seq)
+    }
+
+    /// [`Engine::try_new_sequence`] with cross-request prefix reuse (the
+    /// batcher's admission path once `--prefix-cache` is on; identical to
+    /// it when the cache is disabled). Two cache interactions:
+    ///
+    /// 1. **LRU vs capacity**: if the sequence lease doesn't fit, cached
+    ///    entries are LRU-evicted to make room and the acquire retried —
+    ///    live admission always outbids cached prefixes
+    ///    (docs/SCHEDULING.md). Still `None` when even an empty cache
+    ///    can't free enough.
+    /// 2. **Adoption**: the longest cached chunk-aligned prefix of
+    ///    `prompt` (strictly shorter than it) seeds the sequence's KV —
+    ///    re-anchored to the lease's node (placement metadata only, so
+    ///    tokens stay bitwise-identical to a cold prefill) with
+    ///    `processed` advanced past the adopted tokens, so prefill resumes
+    ///    at the first un-cached chunk.
+    pub fn try_new_sequence_cached(&mut self, id: u64, prompt: &[u8]) -> Option<Sequence> {
+        if self.prefix.is_none() {
+            return self.try_new_sequence(id, prompt);
+        }
+        let blocks = self.blocks_per_sequence();
+        let lease = match self.kv_pool.try_acquire(blocks) {
+            Some(l) => l,
+            None => {
+                let cache = self.prefix.as_mut().expect("checked above");
+                if cache.evict_for_blocks(blocks) == 0 {
+                    return None; // nothing cached to reclaim — defer
+                }
+                self.kv_pool.try_acquire(blocks)?
+            }
+        };
+        let node = lease.node();
+        let cache = self.prefix.as_mut().expect("checked above");
+        match cache.lookup(prompt) {
+            Some((prefix_len, mut kv)) => {
+                kv.reanchor(&self.topology, node);
+                kv.attach_lease(lease);
+                Some(Sequence {
+                    id,
+                    tokens: prompt.to_vec(),
+                    kv,
+                    processed: prefix_len,
+                })
+            }
+            None => {
+                let mut seq =
+                    Sequence::new_on(id, prompt, &self.mr.cfg, &self.cfg, &self.topology, node);
+                seq.kv.attach_lease(lease);
+                Some(seq)
+            }
+        }
+    }
+
+    /// Offer a mid-prefill sequence's KV state to the prefix cache (the
+    /// batcher calls this after every prefill chunk). No-op unless the
+    /// cache is on and the state is adoptable: chunk-aligned, nonzero, and
+    /// strictly inside the prompt (the final chunk's state is never cached
+    /// — adopters must run it themselves to get first-token logits).
+    pub fn cache_prefix(&mut self, seq: &Sequence) {
+        let Some(cache) = self.prefix.as_mut() else {
+            return;
+        };
+        let p = seq.processed;
+        if p == 0 || p % self.cfg.chunk != 0 || p >= seq.tokens.len() {
+            return;
+        }
+        cache.insert(&seq.tokens, p, &seq.kv);
     }
 
     // ------------------------------------------------------------------
@@ -901,10 +1018,10 @@ fn prune_store(store: &mut crate::kv::CpuLayerStore, policy: &Policy, seq_len: u
             np.push(hs.pos[i]);
         }
         let hs = &mut store.full[h];
-        hs.k = nk;
-        hs.v = nv;
+        hs.k = nk.into();
+        hs.v = nv.into();
         hs.maw = nm;
-        hs.pos = np;
+        hs.pos = np.into();
     }
 }
 

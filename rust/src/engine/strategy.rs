@@ -80,7 +80,7 @@ impl Policy {
             Policy::FullOffload => store
                 .full
                 .iter()
-                .map(|h| (h.k.clone(), h.v.clone(), h.len()))
+                .map(|h| (h.k.to_vec(), h.v.to_vec(), h.len()))
                 .collect(),
             Policy::H2o { frac } | Policy::Infinigen { frac } => {
                 let pol = TopK::new(*frac);

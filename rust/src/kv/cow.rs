@@ -1,0 +1,98 @@
+//! Copy-on-write vectors for shared KV snapshots.
+//!
+//! The prefix cache (`kv/prefix_cache.rs`) stores a full [`KvManager`]
+//! snapshot per cached prefix, and every adopting sequence starts from a
+//! clone of that snapshot. The bulk of a snapshot is the per-layer KV
+//! slabs — the GPU window's `k`/`v`/`pos` buffers and the CPU full
+//! store's per-head `k`/`v`/`pos` — which an adopter only *extends or
+//! rewrites lazily* as its own generation diverges. [`CowVec`] makes the
+//! snapshot clone O(1) per buffer (an `Arc` bump) and defers the byte
+//! copy to the first mutation (`Arc::make_mut`), so N sequences sharing
+//! a hot system prompt share one physical copy of its KV until each
+//! actually appends past it.
+//!
+//! Reads go through `Deref<Target = [T]>`, so slice-indexing call sites
+//! (`&store.k[a..b]`) are untouched; mutation sites call
+//! [`CowVec::make_mut`] explicitly, which is the complete audit surface
+//! for "who pays the copy".
+
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// A clone-on-write growable buffer: cloning is an `Arc` bump; the first
+/// mutation after a clone copies the storage (standard `Arc::make_mut`
+/// semantics — unique owners mutate in place with zero overhead).
+#[derive(Debug, Clone, Default)]
+pub struct CowVec<T: Clone>(Arc<Vec<T>>);
+
+impl<T: Clone> CowVec<T> {
+    pub fn new() -> Self {
+        CowVec(Arc::new(Vec::new()))
+    }
+
+    /// Mutable access to the underlying vector, copying it first iff the
+    /// storage is currently shared with another `CowVec` clone.
+    pub fn make_mut(&mut self) -> &mut Vec<T> {
+        Arc::make_mut(&mut self.0)
+    }
+
+    /// True when this buffer physically shares storage with another clone
+    /// (diagnostic; used by the sharing assertions in the prefix-cache
+    /// tests).
+    pub fn is_shared(&self) -> bool {
+        Arc::strong_count(&self.0) > 1
+    }
+}
+
+impl<T: Clone> Deref for CowVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.0
+    }
+}
+
+impl<T: Clone> From<Vec<T>> for CowVec<T> {
+    fn from(v: Vec<T>) -> Self {
+        CowVec(Arc::new(v))
+    }
+}
+
+impl<T: Clone + PartialEq> PartialEq for CowVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_until_first_mutation() {
+        let mut a: CowVec<u32> = vec![1, 2, 3].into();
+        let b = a.clone();
+        assert!(a.is_shared() && b.is_shared());
+        assert_eq!(&*a, &*b);
+        a.make_mut().push(4);
+        assert!(!a.is_shared() && !b.is_shared());
+        assert_eq!(&*a, &[1, 2, 3, 4]);
+        assert_eq!(&*b, &[1, 2, 3], "the other clone keeps the snapshot");
+    }
+
+    #[test]
+    fn unique_owner_mutates_in_place() {
+        let mut a: CowVec<u8> = vec![7].into();
+        let before = a.as_ptr();
+        a.make_mut()[0] = 9;
+        assert_eq!(a.as_ptr(), before, "no copy without a second owner");
+        assert_eq!(a[0], 9);
+    }
+
+    #[test]
+    fn deref_supports_slicing() {
+        let a: CowVec<f32> = vec![0.0, 1.0, 2.0, 3.0].into();
+        assert_eq!(&a[1..3], &[1.0, 2.0]);
+        assert_eq!(a.len(), 4);
+        assert!(!CowVec::<f32>::new().is_shared());
+    }
+}

@@ -17,14 +17,20 @@
 use crate::topology::NodeId;
 
 use super::block::KvBlock;
+use super::cow::CowVec;
 
 /// Per-head growable KV arrays.
+///
+/// The `k`/`v`/`pos` slabs are [`CowVec`]s so a prefix-cache snapshot
+/// shares them with every adopting sequence at zero copy cost; `maw` is
+/// rewritten by every append-time re-evaluation, so sharing it would
+/// only defer a copy that always happens — it stays a plain `Vec`.
 #[derive(Debug, Clone, Default)]
 pub struct HeadStore {
-    pub k: Vec<f32>,   // [n][dh] row-major
-    pub v: Vec<f32>,
+    pub k: CowVec<f32>,   // [n][dh] row-major
+    pub v: CowVec<f32>,
     pub maw: Vec<f32>, // [n]
-    pub pos: Vec<usize>,
+    pub pos: CowVec<usize>,
 }
 
 impl HeadStore {
@@ -139,12 +145,12 @@ impl CpuLayerStore {
             let start = self.full[h].len();
             let hk = &blk.k[h * blk.len * dh..(h + 1) * blk.len * dh];
             let hv = &blk.v[h * blk.len * dh..(h + 1) * blk.len * dh];
-            self.full[h].k.extend_from_slice(hk);
-            self.full[h].v.extend_from_slice(hv);
+            self.full[h].k.make_mut().extend_from_slice(hk);
+            self.full[h].v.make_mut().extend_from_slice(hv);
             self.full[h]
                 .maw
                 .extend_from_slice(&blk.maw[h * blk.len..(h + 1) * blk.len]);
-            self.full[h].pos.extend_from_slice(&blk.pos);
+            self.full[h].pos.make_mut().extend_from_slice(&blk.pos);
             // select salient newcomers into the contextual cache
             for t in 0..blk.len {
                 if blk.maw_at(h, t) > threshold {

@@ -16,6 +16,7 @@ use std::sync::Arc;
 use crate::topology::NodeId;
 
 use super::block::KvBlock;
+use super::cow::CowVec;
 
 /// Pool of GPU KV blocks with optional **per-NUMA-node** hard budgets.
 ///
@@ -317,6 +318,12 @@ impl Drop for BlockLease {
 }
 
 /// The per-(layer, sequence) GPU window: recent KV entries + MAW tracking.
+///
+/// The `k`/`v`/`pos` buffers are [`CowVec`]s: a prefix-cache snapshot and
+/// its adopters share one physical window until a sequence's own
+/// append/evict diverges it (copy-on-write against the snapshot — the
+/// "shared window blocks" half of the radix cache). `maw` is EMA-updated
+/// on every step, so it stays a plain `Vec`.
 #[derive(Debug, Clone)]
 pub struct GpuLayerCache {
     /// Attention heads.
@@ -328,12 +335,12 @@ pub struct GpuLayerCache {
     /// Blocks in the window (W = blk_num × blk_size).
     pub blk_num: usize,
     /// k/v laid out [H][W][dh] row-major — matches the artifact input.
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
+    pub k: CowVec<f32>,
+    pub v: CowVec<f32>,
     /// maw[h * W + slot]
     pub maw: Vec<f32>,
     /// global token position per slot
-    pub pos: Vec<usize>,
+    pub pos: CowVec<usize>,
     /// number of valid slots (prefix of the buffer)
     pub len: usize,
     /// moving-average factor α
@@ -349,10 +356,10 @@ impl GpuLayerCache {
             d_head,
             blk_size,
             blk_num,
-            k: vec![0.0; heads * w * d_head],
-            v: vec![0.0; heads * w * d_head],
+            k: vec![0.0; heads * w * d_head].into(),
+            v: vec![0.0; heads * w * d_head].into(),
             maw: vec![0.0; heads * w],
-            pos: vec![0; w],
+            pos: vec![0; w].into(),
             len: 0,
             alpha,
         }
@@ -406,12 +413,14 @@ impl GpuLayerCache {
             out.maw[h * n..(h + 1) * n]
                 .copy_from_slice(&self.maw[h * w..h * w + n]);
             // shift the survivors down
-            self.k.copy_within(base + n * dh..base + self.len * dh, base);
-            self.v.copy_within(base + n * dh..base + self.len * dh, base);
+            let len = self.len;
+            self.k.make_mut().copy_within(base + n * dh..base + len * dh, base);
+            self.v.make_mut().copy_within(base + n * dh..base + len * dh, base);
             self.maw.copy_within(h * w + n..h * w + self.len, h * w);
         }
         out.pos.copy_from_slice(&self.pos[..n]);
-        self.pos.copy_within(n..self.len, 0);
+        let len = self.len;
+        self.pos.make_mut().copy_within(n..len, 0);
         self.len -= n;
         out
     }
@@ -427,14 +436,17 @@ impl GpuLayerCache {
         assert_eq!(k_new.len(), self.heads * n * dh);
         for h in 0..self.heads {
             let dst = (h * w + self.len) * dh;
-            self.k[dst..dst + n * dh].copy_from_slice(&k_new[h * n * dh..(h + 1) * n * dh]);
-            self.v[dst..dst + n * dh].copy_from_slice(&v_new[h * n * dh..(h + 1) * n * dh]);
+            self.k.make_mut()[dst..dst + n * dh]
+                .copy_from_slice(&k_new[h * n * dh..(h + 1) * n * dh]);
+            self.v.make_mut()[dst..dst + n * dh]
+                .copy_from_slice(&v_new[h * n * dh..(h + 1) * n * dh]);
             // fresh entries start with zero MAW; first update seeds them
             for t in 0..n {
                 self.maw[h * w + self.len + t] = 0.0;
             }
         }
-        self.pos[self.len..self.len + n].copy_from_slice(positions);
+        let len = self.len;
+        self.pos.make_mut()[len..len + n].copy_from_slice(positions);
         self.len += n;
     }
 

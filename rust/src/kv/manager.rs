@@ -133,6 +133,52 @@ impl KvManager {
         self.lease.as_ref().map_or(0, BlockLease::blocks)
     }
 
+    /// A **lease-free** deep-shallow copy for the prefix cache: every
+    /// layer's KV state is cloned (an O(1) `Arc` bump per CowVec slab —
+    /// see [`super::cow::CowVec`]), but no lease is carried or acquired.
+    /// The derived `Clone` would force-acquire a fresh lease on the same
+    /// node ([`BlockLease::clone`]), silently oversubscribing a bounded
+    /// budget; the cache instead accounts its own storage explicitly
+    /// ([`super::prefix_cache::PrefixCache`]) and adopters acquire their
+    /// own full lease through normal capacity-gated admission.
+    pub fn snapshot(&self) -> KvManager {
+        KvManager {
+            layers: self.layers.clone(),
+            cfg: self.cfg.clone(),
+            seq_len: self.seq_len,
+            evict_bytes: self.evict_bytes,
+            node: self.node,
+            shard: self.shard.clone(),
+            lease: None,
+        }
+    }
+
+    /// GPU window blocks *actually occupied* across layers (block-aligned
+    /// ceiling of each window's valid length) — what a cached snapshot
+    /// costs the pool, as opposed to [`KvManager::blocks_needed`], the
+    /// full-window worst case a live sequence leases.
+    pub fn blocks_in_windows(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.gpu.len.div_ceil(l.gpu.blk_size))
+            .sum()
+    }
+
+    /// Re-anchor a snapshot's NUMA placement at `node` of `topo`: recompute
+    /// the head shard map and rewrite every layer's `node_of` record. Pure
+    /// placement metadata — slab contents are untouched (and still shared
+    /// with the snapshot), which is why adoption stays bitwise-identical
+    /// across topologies. Used when a sequence on node B adopts a prefix
+    /// cached from a sequence that lived on node A.
+    pub fn reanchor(&mut self, topo: &Topology, node: NodeId) {
+        let heads = self.shard.len();
+        self.node = node;
+        self.shard = topo.shard_heads(heads, node);
+        for l in &mut self.layers {
+            l.cpu.node_of = self.shard.clone();
+        }
+    }
+
     /// Make room in layer `li` for `n_new` entries, offloading evicted
     /// blocks to the CPU store with evict-time selection (Algorithm 1
     /// lines 10–14 + 23–25). Returns evicted byte count (for transfer
@@ -327,6 +373,35 @@ mod tests {
         assert_eq!(pool.in_use_on(0), 0);
         drop(m);
         assert_eq!(pool.in_use_on(1), 0, "retirement restores the home budget");
+    }
+
+    #[test]
+    fn snapshot_is_lease_free_and_reanchor_moves_placement_only() {
+        let pool = Arc::new(crate::kv::GpuBlockPool::with_capacity(4));
+        let mut m = mk();
+        let (k, v) = kv(1, 2, 32, 1.0);
+        for t in 0..3 {
+            m.make_room(0, 1);
+            m.append(0, &k, &v, &[t]);
+        }
+        m.advance(3);
+        m.attach_lease(pool.try_acquire(m.blocks_needed()).unwrap());
+        let snap = m.snapshot();
+        assert_eq!(snap.leased_blocks(), 0, "snapshots never hold pool blocks");
+        assert_eq!(pool.in_use(), 4, "snapshotting acquires nothing");
+        assert_eq!(snap.seq_len, 3);
+        assert_eq!(&*snap.layers[0].gpu.k, &*m.layers[0].gpu.k);
+        // occupied: layer 0 has 3 entries (blk_size 2 → 2 blocks), layer 1 none
+        assert_eq!(snap.blocks_in_windows(), 2);
+        // re-anchoring rewrites the shard map but not the slabs
+        let mut moved = snap.snapshot();
+        moved.reanchor(&Topology::synthetic(2), 1);
+        assert_eq!(moved.node, 1);
+        assert_eq!(moved.shard(), &[1, 0]);
+        assert_eq!(moved.layers[1].cpu.node_of, vec![1, 0]);
+        assert_eq!(&*moved.layers[0].gpu.k, &*snap.layers[0].gpu.k);
+        drop(m);
+        assert_eq!(pool.in_use(), 0, "only the live sequence held blocks");
     }
 
     #[test]

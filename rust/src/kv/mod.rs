@@ -9,11 +9,15 @@
 //! bookkeeping (make-room, append, MAW advance).
 
 pub mod block;
+pub mod cow;
 pub mod cpu_store;
 pub mod gpu_pool;
 pub mod manager;
+pub mod prefix_cache;
 
 pub use block::KvBlock;
+pub use cow::CowVec;
 pub use cpu_store::CpuLayerStore;
 pub use gpu_pool::{BlockLease, GpuBlockPool, GpuLayerCache};
 pub use manager::KvManager;
+pub use prefix_cache::{PrefixCache, PrefixStats};

@@ -29,6 +29,11 @@ USAGE:
                                           # from HGCA_NUMA_NODES / sysfs; 1 = flat).
                                           # Shards the attention pool, KV stores,
                                           # and block budgets per node
+                [--prefix-cache]          # cross-request prefix KV reuse (radix
+                                          # cache); tokens are bitwise identical
+                                          # either way — pair with --kv-blocks or
+                                          # --kv-headroom > 1 so spare blocks exist
+                [--prefix-cache-entries N]  # resident cached prefixes cap (default 32)
                 # admission is earliest-deadline-first, gated on KV block
                 # availability; POST /v1/generate accepts "stream": true for
                 # chunked-transfer token streaming, "deadline_ms" per request,
@@ -39,11 +44,14 @@ USAGE:
   hgca analyze  [--model tiny] [--len 256]      # attention-pattern stats (Figs. 3-5)
   hgca simulate [--system hgca|flexgen|h2o|infinigen|hf] [--model opt-6.7b] [--batch 4]
   hgca replay   FILE.scn ... [--nodes N] [--seed N] [--json PATH] [--verify]
+                [--prefix-cache] [--no-prefix-cache]
                 # replay scenario-DSL workload traces (docs/SCENARIOS.md)
                 # against the real serving stack; --verify re-runs each
                 # scenario (same seed twice, then 1/2/4 synthetic NUMA
                 # nodes) and fails unless outcomes are bitwise identical;
-                # --json writes the gate-ready report (tools/scenario_gate.rs)
+                # --json writes the gate-ready report (tools/scenario_gate.rs);
+                # the prefix cache auto-enables for scenarios that declare
+                # share_prefix/turns — the flags force it on or off
   hgca info                                     # manifest + artifact inventory
 
 COMMON FLAGS:
@@ -94,7 +102,7 @@ fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = argv[0].clone();
-    let args = Args::parse(&argv[1..], &["full", "verify"])?;
+    let args = Args::parse(&argv[1..], &["full", "verify", "prefix-cache", "no-prefix-cache"])?;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
 
     match cmd.as_str() {
@@ -234,6 +242,15 @@ fn run() -> Result<()> {
                 ),
                 None => None,
             };
+            // None lets replay() auto-enable the prefix cache for scenarios
+            // that declare share_prefix/turns; the flags force it either way
+            let prefix_cache = if args.flag("prefix-cache") {
+                Some(true)
+            } else if args.flag("no-prefix-cache") {
+                Some(false)
+            } else {
+                None
+            };
             let mut entries = Vec::new();
             for path in &args.positional {
                 let src = std::fs::read_to_string(path)
@@ -243,7 +260,7 @@ fn run() -> Result<()> {
                 // construction, which is what makes runs comparable at all
                 let run = |n: usize| -> Result<ReplayReport> {
                     let mut engine = Engine::new(&mr, cfg.clone(), policy.clone());
-                    replay(&mut engine, &scn, &ReplayOptions { nodes: n, seed })
+                    replay(&mut engine, &scn, &ReplayOptions { nodes: n, seed, prefix_cache })
                 };
                 let report = run(nodes)?;
                 if args.flag("verify") {
@@ -346,6 +363,8 @@ fn run() -> Result<()> {
                     None => None,
                 },
                 kv_headroom: args.f64("kv-headroom", 1.0)?,
+                prefix_cache: args.flag("prefix-cache"),
+                prefix_cache_entries: args.usize("prefix-cache-entries", 32)?,
             };
             serving.validate()?;
             // resolve the pool capacity once and pin it as the explicit

@@ -285,6 +285,16 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         ("kv_blocks_reclaimed", Json::num(engine.kv_pool.reclaimed_blocks() as f64)),
         ("kv_blocks_capacity", Json::num(engine.kv_pool.capacity().unwrap_or(0) as f64)),
     ];
+    // cross-request prefix KV reuse (radix cache); counters stay present —
+    // as zeros — when the cache is disabled, so scrapers never lose fields
+    let ps = engine.prefix_stats();
+    fields.push(("prefix_hits", Json::num(ps.hits as f64)));
+    fields.push(("prefix_misses", Json::num(ps.misses as f64)));
+    fields.push(("prefix_insertions", Json::num(ps.insertions as f64)));
+    fields.push(("prefix_evictions", Json::num(ps.evictions as f64)));
+    fields.push(("prefix_tokens_reused", Json::num(ps.tokens_reused as f64)));
+    fields.push(("prefix_entries", Json::num(ps.entries as f64)));
+    fields.push(("prefix_cached_blocks", Json::num(ps.cached_blocks as f64)));
     if let Some(b) = batcher {
         let s = b.stats();
         fields.push(("batch_rows", Json::num(b.batch as f64)));
@@ -382,6 +392,11 @@ pub fn engine_loop_with(
         engine.topology.nodes(),
     );
     engine.set_kv_node_budgets(budgets);
+    // after the budgets: enabling first would only have the cache rebound
+    // (and emptied) when the pool is replaced above
+    if serving.prefix_cache {
+        engine.enable_prefix_cache(serving.prefix_cache_entries);
+    }
     let mut next_id = 0u64;
     let mut waiters: HashMap<u64, Waiter> = HashMap::new();
     let mut groups: HashMap<u64, Group> = HashMap::new();

@@ -36,6 +36,17 @@ pub struct Scenario {
     pub prompt: Dist,
     /// Distribution of `max_new_tokens`.
     pub gen: Dist,
+    /// Shared-prefix structure: `(groups, len)` partitions the trace into
+    /// `groups` families whose prompts open with the same `len`-byte
+    /// prefix (`None` = fully independent prompts). Replay auto-enables
+    /// the prefix cache when set.
+    pub share_prefix: Option<(u64, u64)>,
+    /// Multi-turn structure: `(per_session, grow)` folds consecutive
+    /// requests into sessions of `per_session` turns; each turn re-sends
+    /// the session transcript plus `grow` fresh bytes (`None` = every
+    /// request is a fresh conversation). Replay auto-enables the prefix
+    /// cache when set.
+    pub turns: Option<(u64, u64)>,
     /// Distribution of per-request deadlines in milliseconds (`None` =
     /// no deadlines).
     pub deadline_ms: Option<Dist>,
@@ -168,6 +179,12 @@ impl fmt::Display for Scenario {
         writeln!(f, "  arrival {}", self.arrival)?;
         writeln!(f, "  prompt {}", self.prompt)?;
         writeln!(f, "  gen {}", self.gen)?;
+        if let Some((g, l)) = self.share_prefix {
+            writeln!(f, "  share_prefix(groups={g}, len={l})")?;
+        }
+        if let Some((t, l)) = self.turns {
+            writeln!(f, "  turns(per_session={t}, grow={l})")?;
+        }
         if let Some(d) = &self.deadline_ms {
             writeln!(f, "  deadline_ms {d}")?;
         }

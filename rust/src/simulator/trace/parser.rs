@@ -7,6 +7,8 @@
 //! statement  := "seed" INT | "requests" INT | "batch" INT
 //!             | "kv_slots" INT | "queue_bound" INT | "watermark" INT
 //!             | "arrival" arrival | "prompt" dist | "gen" dist
+//!             | "share_prefix" "(" "groups" "=" INT "," "len" "=" INT ")"
+//!             | "turns" "(" "per_session" "=" INT "," "grow" "=" INT ")"
 //!             | "deadline_ms" dist | "cancel" fault | "disconnect" fault
 //!             | "stream" PROB
 //! arrival    := "fixed" "(" "interval" "=" INT ")"
@@ -230,6 +232,36 @@ impl Parser {
         }
     }
 
+    /// `( k1 = INT , k2 = INT )` — the two-key paren form shared by
+    /// `share_prefix` and `turns` (same shape as `bursty`).
+    #[allow(clippy::too_many_arguments)]
+    fn pair(
+        &mut self,
+        k1: &str,
+        lo1: u64,
+        hi1: u64,
+        k2: &str,
+        lo2: u64,
+        hi2: u64,
+    ) -> Result<(u64, u64), ParseError> {
+        self.expect(&Tok::LParen, "'('")?;
+        let (key, kspan) = self.ident(&format!("'{k1}'"))?;
+        if key != k1 {
+            return Err(ParseError::at(kspan, format!("expected '{k1}', found '{key}'")));
+        }
+        self.expect(&Tok::Eq, "'='")?;
+        let a = self.int(k1, lo1, hi1)?;
+        self.expect(&Tok::Comma, "','")?;
+        let (key, kspan) = self.ident(&format!("'{k2}'"))?;
+        if key != k2 {
+            return Err(ParseError::at(kspan, format!("expected '{k2}', found '{key}'")));
+        }
+        self.expect(&Tok::Eq, "'='")?;
+        let b = self.int(k2, lo2, hi2)?;
+        self.expect(&Tok::RParen, "')'")?;
+        Ok((a, b))
+    }
+
     fn fault(&mut self, what: &str) -> Result<Fault, ParseError> {
         let prob = self.prob(&format!("{what} probability"))?;
         let (kw, span) = self.ident("'after'")?;
@@ -257,6 +289,8 @@ impl Parser {
         let mut arrival: Option<Arrival> = None;
         let mut prompt: Option<Dist> = None;
         let mut gen: Option<Dist> = None;
+        let mut share_prefix: Option<(u64, u64)> = None;
+        let mut turns: Option<(u64, u64)> = None;
         let mut deadline_ms: Option<Dist> = None;
         let mut cancel: Option<Fault> = None;
         let mut disconnect: Option<Fault> = None;
@@ -294,6 +328,24 @@ impl Parser {
                 "arrival" => once!(arrival, self.arrival(false)?),
                 "prompt" => once!(prompt, self.dist("prompt bytes", 1, MAX_PROMPT_BYTES)?),
                 "gen" => once!(gen, self.dist("gen tokens", 0, MAX_GEN_TOKENS)?),
+                "share_prefix" => once!(
+                    share_prefix,
+                    self.pair("groups", 1, 10_000, "len", 1, MAX_PROMPT_BYTES)?
+                ),
+                "turns" => once!(turns, {
+                    let (t, g) = self.pair("per_session", 1, 10_000, "grow", 1, MAX_PROMPT_BYTES)?;
+                    if t.saturating_mul(g) > MAX_PROMPT_BYTES {
+                        return Err(ParseError::at(
+                            span,
+                            format!(
+                                "turns: per_session × grow is the largest turn prompt and must \
+                                 be ≤ {MAX_PROMPT_BYTES}, got {}",
+                                t.saturating_mul(g)
+                            ),
+                        ));
+                    }
+                    (t, g)
+                }),
                 "deadline_ms" => {
                     once!(deadline_ms, self.dist("deadline_ms", 1, 86_400_000)?)
                 }
@@ -306,7 +358,7 @@ impl Parser {
                         format!(
                             "unknown statement '{other}' (expected one of seed, requests, \
                              batch, kv_slots, queue_bound, watermark, arrival, prompt, gen, \
-                             deadline_ms, cancel, disconnect, stream)"
+                             share_prefix, turns, deadline_ms, cancel, disconnect, stream)"
                         ),
                     ));
                 }
@@ -330,6 +382,12 @@ impl Parser {
         require("arrival", arrival.is_none())?;
         require("prompt", prompt.is_none())?;
         require("gen", gen.is_none())?;
+        if share_prefix.is_some() && turns.is_some() {
+            return Err(ParseError::at(
+                span,
+                "share_prefix and turns cannot combine (pick one prompt structure)",
+            ));
+        }
 
         Ok(Scenario {
             name,
@@ -342,6 +400,8 @@ impl Parser {
             arrival: arrival.expect("checked above"),
             prompt: prompt.expect("checked above"),
             gen: gen.expect("checked above"),
+            share_prefix,
+            turns,
             deadline_ms,
             cancel,
             disconnect,
@@ -388,6 +448,7 @@ mod tests {
   arrival phases(10: fixed(interval=1), 20: bursty(period=5, size=3))
   prompt choice(8, 16, 32)
   gen uniform(2, 6)
+  share_prefix(groups=3, len=32)
   deadline_ms uniform(30000, 60000)
   cancel 0.25 after uniform(1, 4)
   disconnect 0.5 after fixed(2)
@@ -396,6 +457,44 @@ mod tests {
 ";
         let s = parse(src).unwrap();
         assert_eq!(s.to_string(), src);
+    }
+
+    #[test]
+    fn turns_round_trips_and_prefix_structures_are_exclusive() {
+        let src = "scenario t {
+  arrival fixed(interval=1)
+  prompt fixed(8)
+  gen fixed(2)
+  turns(per_session=4, grow=16)
+  stream 0
+}
+";
+        let s = parse(src).unwrap();
+        assert_eq!(s.turns, Some((4, 16)));
+        assert_eq!(s.to_string(), src);
+
+        let e = parse(
+            "scenario t {\n  arrival fixed(interval=1)\n  prompt fixed(8)\n  gen fixed(2)\n  \
+             share_prefix(groups=2, len=8)\n  turns(per_session=2, grow=8)\n}",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("cannot combine"), "{e}");
+
+        // per_session × grow bounds the largest turn prompt
+        let e = parse(
+            "scenario t {\n  arrival fixed(interval=1)\n  prompt fixed(8)\n  gen fixed(2)\n  \
+             turns(per_session=100, grow=100)\n}",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("largest turn prompt"), "{e}");
+
+        // the two-key form rejects wrong key names with a span
+        let e = parse(
+            "scenario t {\n  arrival fixed(interval=1)\n  prompt fixed(8)\n  gen fixed(2)\n  \
+             share_prefix(count=2, len=8)\n}",
+        )
+        .unwrap_err();
+        assert!(e.msg.contains("expected 'groups'"), "{e}");
     }
 
     #[test]

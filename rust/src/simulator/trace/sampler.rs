@@ -123,15 +123,46 @@ fn fault_draw(fault: &Option<Fault>, rng: &mut Lcg) -> Option<u64> {
 /// disconnect — so adding a knob to a scenario changes only that knob's
 /// draws.
 pub fn sample_trace(scn: &Scenario, seed: u64) -> Vec<TraceRequest> {
-    let corpus_len = 65_536.max(scn.prompt.max() as usize + 1);
+    let mut corpus_len = 65_536.max(scn.prompt.max() as usize + 1);
+    // prefix structures slice extra corpus regions: every group prefix
+    // (share_prefix) and every session transcript (turns) must fit
+    if let Some((g, l)) = scn.share_prefix {
+        corpus_len = corpus_len.max((g as usize) * (l as usize) + 1);
+    }
+    if let Some((t, grow)) = scn.turns {
+        corpus_len = corpus_len.max((t as usize) * (grow as usize) + 1);
+    }
     let corpus = corpus::generate(corpus_len, seed);
     let mut rng = Lcg::new(seed);
     let ticks = arrival_ticks(&scn.arrival, scn.requests);
     let mut out = Vec::with_capacity(scn.requests);
     for (i, arrive_tick) in ticks.into_iter().enumerate() {
+        // the base draws always happen — prompt structure must not shift
+        // the draw stream of the knobs after it (deadline, faults, …)
         let prompt_len = scn.prompt.sample(&mut rng) as usize;
         let offset = rng.randint(0, (corpus.len() - prompt_len) as u64) as usize;
-        let prompt = corpus[offset..offset + prompt_len].to_vec();
+        let mut prompt = corpus[offset..offset + prompt_len].to_vec();
+        if let Some((groups, len)) = scn.share_prefix {
+            // request i belongs to group i % groups; the group prefix is
+            // a computed corpus slice (no draws), overwriting the front
+            // of the sampled prompt
+            let g = (i as u64 % groups) as usize;
+            let l = (len as usize).min(prompt.len());
+            let at = g * len as usize;
+            prompt[..l].copy_from_slice(&corpus[at..at + l]);
+        }
+        if let Some((per_session, grow)) = scn.turns {
+            // consecutive requests fold into sessions; turn t re-sends
+            // the transcript so far plus `grow` fresh bytes, all from a
+            // per-session corpus region picked arithmetically (no draws)
+            let session = i as u64 / per_session;
+            let turn = i as u64 % per_session;
+            let max_len = (per_session * grow) as usize;
+            let wrap = (corpus.len() - max_len).max(1);
+            let base = (session.wrapping_mul(8191) as usize) % wrap;
+            let len = ((turn + 1) * grow) as usize;
+            prompt = corpus[base..base + len].to_vec();
+        }
         let max_new_tokens = scn.gen.sample(&mut rng) as usize;
         let deadline_ms = scn.deadline_ms.as_ref().map(|d| d.sample(&mut rng));
         let stream = rng.frac() < scn.stream;
@@ -201,6 +232,52 @@ mod tests {
         let c = sample_trace(&scn, 8);
         assert_ne!(a, c);
         assert!(a.iter().all(|r| (8..=64).contains(&r.prompt.len())));
+    }
+
+    #[test]
+    fn share_prefix_groups_share_bytes_and_shift_no_draws() {
+        let base = "scenario s {\n  requests 6\n  arrival fixed(interval=1)\n  prompt uniform(32, 64)\n  gen uniform(2, 6)\nSTRUCT  stream 0.5\n}";
+        let plain = parse(&base.replace("STRUCT", "")).unwrap();
+        let shared =
+            parse(&base.replace("STRUCT", "  share_prefix(groups=2, len=16)\n")).unwrap();
+        let tp = sample_trace(&plain, 11);
+        let ts = sample_trace(&shared, 11);
+        // group structure: requests 0,2,4 share one 16-byte prefix,
+        // 1,3,5 another, and the two differ
+        assert_eq!(ts[0].prompt[..16], ts[2].prompt[..16]);
+        assert_eq!(ts[2].prompt[..16], ts[4].prompt[..16]);
+        assert_eq!(ts[1].prompt[..16], ts[3].prompt[..16]);
+        assert_ne!(ts[0].prompt[..16], ts[1].prompt[..16]);
+        // zero new draws: everything except the prompt bytes matches the
+        // structure-free trace exactly
+        for (p, s) in tp.iter().zip(&ts) {
+            assert_eq!(p.prompt.len(), s.prompt.len());
+            assert_eq!(p.max_new_tokens, s.max_new_tokens);
+            assert_eq!(p.stream, s.stream);
+            assert_eq!(p.prompt[16..], s.prompt[16..], "only the prefix is rewritten");
+        }
+    }
+
+    #[test]
+    fn turns_build_prefix_nested_session_transcripts() {
+        let scn = parse(
+            "scenario t {\n  requests 8\n  arrival fixed(interval=1)\n  prompt fixed(8)\n  gen fixed(2)\n  turns(per_session=4, grow=16)\n}",
+        )
+        .unwrap();
+        let t = sample_trace(&scn, 5);
+        // within a session every turn extends the previous transcript
+        for s in 0..2usize {
+            for turn in 0..4usize {
+                let r = &t[s * 4 + turn];
+                assert_eq!(r.prompt.len(), (turn + 1) * 16);
+                if turn > 0 {
+                    let prev = &t[s * 4 + turn - 1];
+                    assert_eq!(r.prompt[..prev.prompt.len()], prev.prompt[..]);
+                }
+            }
+        }
+        // distinct sessions draw from distinct corpus regions
+        assert_ne!(t[0].prompt, t[4].prompt);
     }
 
     #[test]

@@ -38,7 +38,7 @@ fn run(scn: &Scenario, nodes: usize, seed: Option<u64>) -> ReplayReport {
     let rt = runtime();
     let mr = rt.load_model("tiny").unwrap();
     let mut engine = Engine::new(&mr, HgcaConfig::default(), Policy::Hgca { beta: 1.0 });
-    replay(&mut engine, scn, &ReplayOptions { nodes, seed }).expect("replay")
+    replay(&mut engine, scn, &ReplayOptions { nodes, seed, ..Default::default() }).expect("replay")
 }
 
 const CHECKED_IN: &[&str] = &[
@@ -47,6 +47,8 @@ const CHECKED_IN: &[&str] = &[
     "deadline_edf.scn",
     "client_churn.scn",
     "diurnal_phases.scn",
+    "shared_prefix.scn",
+    "multi_turn.scn",
 ];
 
 #[test]
@@ -68,9 +70,10 @@ fn same_seed_runs_are_bitwise_identical_for_every_checked_in_scenario() {
 
 #[test]
 fn outcomes_are_invariant_across_1_2_4_synthetic_numa_nodes() {
-    // the two scenarios with the richest admission traffic; the full set
-    // is swept by `hgca replay --verify` in the CI scenario-replay job
-    for file in ["steady_decode.scn", "client_churn.scn"] {
+    // the scenarios with the richest admission traffic (shared_prefix
+    // runs with the prefix cache auto-enabled); the full set is swept by
+    // `hgca replay --verify` in the CI scenario-replay job
+    for file in ["steady_decode.scn", "client_churn.scn", "shared_prefix.scn"] {
         let scn = load(file);
         let one = run(&scn, 1, None);
         for nodes in [2usize, 4] {

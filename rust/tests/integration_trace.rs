@@ -54,6 +54,14 @@ fn gen_fault(r: &mut Lcg) -> Fault {
 }
 
 fn gen_scenario(r: &mut Lcg) -> Scenario {
+    // prompt structures are mutually exclusive (parser-enforced): draw one
+    // of {none, share_prefix, turns}; turns keeps per_session × grow
+    // within the 4096-byte prompt ceiling
+    let (share_prefix, turns) = match r.next() % 3 {
+        0 => (Some((r.randint(1, 100), r.randint(1, 4096))), None),
+        1 => (None, Some((r.randint(1, 16), r.randint(1, 256)))),
+        _ => (None, None),
+    };
     Scenario {
         name: format!("s{}", r.next() % 10_000),
         seed: r.next(),
@@ -65,6 +73,8 @@ fn gen_scenario(r: &mut Lcg) -> Scenario {
         arrival: gen_arrival(r, false),
         prompt: gen_dist(r, 1, 4096),
         gen: gen_dist(r, 0, 1000),
+        share_prefix,
+        turns,
         deadline_ms: (r.next() % 2 == 0).then(|| gen_dist(r, 1, 86_400_000)),
         cancel: (r.next() % 2 == 0).then(|| gen_fault(r)),
         disconnect: (r.next() % 2 == 0).then(|| gen_fault(r)),

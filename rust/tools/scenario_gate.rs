@@ -26,10 +26,18 @@
 //! Usage:
 //!   scenario_gate [--baseline SCENARIO_baseline.json] [--current SCENARIO_ci.json]
 //!                 [--check-digest]
+//!   scenario_gate --refresh [--slack-pct 25] [--baseline ...] [--current ...]
 //!
 //! Refresh after an intentional scheduling change with:
 //!   cargo run --release --bin hgca -- replay scenarios/*.scn --verify --json SCENARIO_ci.json
-//! then fold the printed values into SCENARIO_baseline.json.
+//!   cargo run --release --bin scenario_gate -- --refresh
+//! `--refresh` rewrites every `_max`/`_min` bound in the baseline from the
+//! report's observed values plus a slack factor (`--slack-pct`, default
+//! 25): `_max` bounds become `ceil(observed × (1 + slack))`, `_min` floors
+//! become `floor(observed × (1 − slack))` clamped at 0. Exact keys,
+//! digests, and `additive` markers are never touched — refresh re-derives
+//! the conservative envelope, it does not change what is pinned. Review
+//! the diff before committing.
 //!
 //! Exit codes: 0 pass, 1 drift, 2 usage/io error.
 
@@ -143,12 +151,127 @@ fn check(base: &Entry, cur: &Entry, check_digest: bool) -> Vec<String> {
     bad
 }
 
+/// `--refresh` bound math: `_max` bounds get head-room above the observed
+/// value, `_min` floors get foot-room below it, both integral (ceil/floor
+/// keep the bound on the conservative side) and never negative.
+fn refreshed_bound(key: &str, observed: f64, slack: f64) -> f64 {
+    if key.ends_with("_max") {
+        (observed * (1.0 + slack)).ceil()
+    } else {
+        (observed * (1.0 - slack)).floor().max(0.0)
+    }
+}
+
+/// Two-space pretty printer: the checked-in baseline is hand-edited and
+/// diffed, so `--refresh` must not flatten it to one line. (Key order is
+/// normalized alphabetically — `Json::Obj` is a BTreeMap.)
+fn pretty(v: &Json, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent + 1);
+    match v {
+        Json::Arr(a) if !a.is_empty() => {
+            out.push_str("[\n");
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&pad);
+                pretty(item, indent + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&"  ".repeat(indent));
+            out.push(']');
+        }
+        Json::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&pad);
+                out.push_str(&Json::str(k.clone()).to_string());
+                out.push_str(": ");
+                pretty(val, indent + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&"  ".repeat(indent));
+            out.push('}');
+        }
+        other => out.push_str(&other.to_string()),
+    }
+}
+
+/// Rewrite the baseline's `_max`/`_min` bounds from the current report
+/// (see the module docs). Bounds whose scenario or metric the report
+/// lacks are kept as-is, with a note.
+fn refresh_baseline(baseline_path: &str, current_path: &str, slack: f64) -> Result<(), String> {
+    let text = std::fs::read_to_string(baseline_path).map_err(|e| format!("{baseline_path}: {e}"))?;
+    let mut doc = Json::parse(&text).map_err(|e| format!("{baseline_path}: {e}"))?;
+    let current = load(current_path)?;
+    println!("scenario gate: refreshing {baseline_path} from {current_path}");
+    let scenarios = match &mut doc {
+        Json::Obj(top) => match top.get_mut("scenarios") {
+            Some(Json::Arr(s)) => s,
+            _ => return Err(format!("{baseline_path}: missing 'scenarios' array")),
+        },
+        _ => return Err(format!("{baseline_path}: not a json object")),
+    };
+    let mut changed = 0usize;
+    for s in scenarios.iter_mut() {
+        let Json::Obj(obj) = s else { continue };
+        let Some(name) = obj.get("name").and_then(|n| n.as_str()).map(String::from) else {
+            continue;
+        };
+        let Some(cur) = current.iter().find(|c| c.name == name) else {
+            println!("  {name}: not in the report, bounds kept");
+            continue;
+        };
+        let keys: Vec<String> = obj
+            .keys()
+            .filter(|k| k.ends_with("_max") || k.ends_with("_min"))
+            .cloned()
+            .collect();
+        for key in keys {
+            let metric = key.strip_suffix("_max").or_else(|| key.strip_suffix("_min"));
+            let metric = metric.expect("filtered on suffix above");
+            match cur.nums.get(metric) {
+                Some(&got) => {
+                    let new = refreshed_bound(&key, got, slack);
+                    let old = obj.get(&key).and_then(|v| v.as_f64());
+                    if old != Some(new) {
+                        changed += 1;
+                        println!(
+                            "  {name}.{key}: {} -> {new} (observed {got})",
+                            old.map(|v| v.to_string()).unwrap_or_else(|| "?".into()),
+                        );
+                    }
+                    obj.insert(key.clone(), Json::num(new));
+                }
+                None => println!("  {name}.{key}: report lacks '{metric}', bound kept"),
+            }
+        }
+    }
+    let mut out = String::new();
+    pretty(&doc, 0, &mut out);
+    out.push('\n');
+    std::fs::write(baseline_path, out).map_err(|e| format!("{baseline_path}: {e}"))?;
+    println!("refreshed {changed} bounds (slack {:.0}%) — review the diff before committing", slack * 100.0);
+    Ok(())
+}
+
 fn run() -> Result<bool, String> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["check-digest"]).map_err(|e| e.to_string())?;
+    let args = Args::parse(&argv, &["check-digest", "refresh"]).map_err(|e| e.to_string())?;
     let baseline_path = args.get_or("baseline", "SCENARIO_baseline.json");
     let current_path = args.get_or("current", "SCENARIO_ci.json");
     let check_digest = args.flag("check-digest");
+    if args.flag("refresh") {
+        let slack_pct = args.f64("slack-pct", 25.0).map_err(|e| e.to_string())?;
+        if !(0.0..100.0).contains(&slack_pct) {
+            return Err(format!("--slack-pct must be in [0, 100), got {slack_pct}"));
+        }
+        refresh_baseline(baseline_path, current_path, slack_pct / 100.0)?;
+        return Ok(true);
+    }
 
     let baseline = load(baseline_path)?;
     let current = load(current_path)?;
@@ -254,6 +377,34 @@ mod tests {
         cur.digest = Some("bb".into());
         assert!(check(&base, &cur, false).is_empty());
         assert_eq!(check(&base, &cur, true).len(), 1);
+    }
+
+    #[test]
+    fn refresh_slack_math() {
+        // _max: head-room above the observed value, rounded up
+        assert_eq!(refreshed_bound("ticks_max", 100.0, 0.25), 125.0);
+        assert_eq!(refreshed_bound("ticks_max", 10.0, 0.25), 13.0); // ceil(12.5)
+        assert_eq!(refreshed_bound("ticks_max", 0.0, 0.25), 0.0);
+        // _min: foot-room below, rounded down, clamped at zero
+        assert_eq!(refreshed_bound("completed_min", 100.0, 0.25), 75.0);
+        assert_eq!(refreshed_bound("completed_min", 10.0, 0.25), 7.0); // floor(7.5)
+        assert_eq!(refreshed_bound("completed_min", 0.0, 0.25), 0.0);
+        assert_eq!(refreshed_bound("completed_min", 3.0, 0.9), 0.0); // floor(0.3)
+        // zero slack pins the observed value exactly on both sides
+        assert_eq!(refreshed_bound("x_max", 42.0, 0.0), 42.0);
+        assert_eq!(refreshed_bound("x_min", 42.0, 0.0), 42.0);
+    }
+
+    #[test]
+    fn pretty_output_reparses_identically() {
+        let doc = Json::parse(
+            r#"{"schema":1,"note":"n","scenarios":[{"name":"s","ticks_max":10,"empty":[],"nested":{"a":1.5}}]}"#,
+        )
+        .unwrap();
+        let mut out = String::new();
+        pretty(&doc, 0, &mut out);
+        assert_eq!(Json::parse(&out).unwrap(), doc);
+        assert!(out.contains("\n  \"scenarios\""), "objects are indented:\n{out}");
     }
 
     #[test]
