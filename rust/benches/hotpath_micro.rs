@@ -294,6 +294,102 @@ fn main() {
     }
     println!();
 
+    // ---- int8-tiered sparse attention vs f32 (the tiered-KV tentpole) ----
+    // Same submission through the tiered pool path with every payload
+    // int8-quantized vs all-f32: speedup = f32_p50 / int8_p50. The int8
+    // kernel trades per-entry multiplies for i8 dots + one scale multiply;
+    // on a scalar build the two are within ~2x of each other either way,
+    // so the baseline speedup is set low — the gate trips only if the
+    // quantized path collapses relative to f32. The win the tier buys is
+    // resident bytes (~4x, printed below), not per-call latency.
+    println!("== int8-tiered vs f32 sparse attention (full-store shape) ==");
+    {
+        use hgca::attention::{JobPayload, OwnedJobs, OwnedTieredJobs};
+        use hgca::kv::{QuantSlab, QUANT_BLOCK};
+        let (jobs_n, n, threads) = (8usize, 4096usize, 4usize);
+        let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..jobs_n)
+            .map(|_| {
+                let mut k = vec![0.0f32; n * dh];
+                let mut v = vec![0.0f32; n * dh];
+                rng.fill_normal(&mut k, 1.0);
+                rng.fill_normal(&mut v, 1.0);
+                (k, v, n)
+            })
+            .collect();
+        let mut q = vec![0.0f32; jobs_n * dh];
+        rng.fill_normal(&mut q, 0.2);
+        let quant: Vec<(QuantSlab, QuantSlab)> = kvs
+            .iter()
+            .map(|(k, v, _)| {
+                (QuantSlab::from_f32(k, dh, QUANT_BLOCK), QuantSlab::from_f32(v, dh, QUANT_BLOCK))
+            })
+            .collect();
+        let pool = AttnPool::new(threads);
+        let split = TaskSplit::EvenJobs { max_parallel: threads };
+        let s_f32 = bench(3, 20, || {
+            let input = OwnedJobs { kvs: kvs.clone(), q: q.clone(), q_valid: None };
+            let _ = pool.submit_placed(input, 1, dh, split, false, None).wait();
+        });
+        let s_int8 = bench(3, 20, || {
+            let input = OwnedTieredJobs {
+                kvs: quant
+                    .iter()
+                    .map(|(k, v)| JobPayload::Int8 { k: k.clone(), v: v.clone() })
+                    .collect(),
+                q: q.clone(),
+                q_valid: None,
+            };
+            let _ = pool.submit_tiered(input, 1, dh, split, false, None).wait();
+        });
+        let f32_bytes = 2 * n * dh * 4;
+        let quant_bytes = quant[0].0.size_bytes() + quant[0].1.size_bytes();
+        println!(
+            "jobs={jobs_n:>3} n={n:>5} t={threads}: int8 p50 {:>9.1} µs | f32 p50 {:>9.1} µs | ratio {:>5.2}x | {:.2}x fewer KV bytes",
+            s_int8.p50 * 1e6,
+            s_f32.p50 * 1e6,
+            s_f32.p50 / s_int8.p50,
+            f32_bytes as f64 / quant_bytes as f64
+        );
+        gate_cases.push(Json::obj(vec![
+            ("jobs", Json::num(jobs_n as f64)),
+            ("n", Json::num(n as f64)),
+            ("threads", Json::num(threads as f64)),
+            // gated path = the int8-tiered submit; baseline = all-f32
+            ("pool_p50_us", Json::num(s_int8.p50 * 1e6)),
+            ("spawn_p50_us", Json::num(s_f32.p50 * 1e6)),
+            ("pool_calls_per_sec", Json::num(1.0 / s_int8.p50)),
+            ("speedup", Json::num(s_f32.p50 / s_int8.p50)),
+        ]));
+        // the tier's contract, checked on this shape too: ≥3x compression
+        // and the quantized output tracks the f32 oracle within 1e-2
+        assert!(
+            f32_bytes >= 3 * quant_bytes,
+            "int8 tier must compress ≥3x ({quant_bytes} vs {f32_bytes} bytes)"
+        );
+        let reference = {
+            let input = OwnedJobs { kvs: kvs.clone(), q: q.clone(), q_valid: None };
+            pool.submit_placed(input, 1, dh, split, false, None).wait()
+        };
+        let quant_out = {
+            let input = OwnedTieredJobs {
+                kvs: quant
+                    .iter()
+                    .map(|(k, v)| JobPayload::Int8 { k: k.clone(), v: v.clone() })
+                    .collect(),
+                q: q.clone(),
+                q_valid: None,
+            };
+            pool.submit_tiered(input, 1, dh, split, false, None).wait()
+        };
+        for (i, (a, b)) in reference.o.iter().zip(quant_out.o.iter()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-2,
+                "int8 output drifted past the oracle bound at {i}: {a} vs {b}"
+            );
+        }
+    }
+    println!();
+
     // ---- CI gate dump (BENCH_*.json; see tools/bench_gate.rs) ----
     if let Ok(path) = std::env::var("HGCA_BENCH_JSON") {
         let doc = Json::obj(vec![

@@ -58,6 +58,31 @@ fn main() {
         }
         println!("(* = matches or beats full attention, as Table 1 highlights)");
     }
+    // ---- int8 CPU-KV tier: quality delta vs the f32 store ----
+    // Informational (not CI-gated): the same HGCA config with the whole
+    // CPU store int8-quantized (`--kv-tier int8`) vs the default f32
+    // store. The oracle bound lives in tests/integration_quant.rs; this
+    // shows the end-to-end perplexity cost of the tier on real numerics.
+    println!("\n=== int8 CPU-KV tier vs f32 store (model {}, len {len}) ===", models[0]);
+    {
+        let mr = rt.load_model(models[0]).unwrap();
+        let window = ((((len as f64) * 0.5) / 8.0).ceil() as usize).max(1) * 8;
+        let mk = |tier: hgca::kv::TierMode| HgcaConfig {
+            blk_size: 8,
+            blk_num: (window / 8).max(1),
+            kv_tier: tier,
+            ..Default::default()
+        };
+        let mut f = Engine::new(&mr, mk(hgca::kv::TierMode::F32), Policy::Hgca { beta: 1.0 });
+        let p_f32 = f.perplexity(text, 32).unwrap();
+        let mut q = Engine::new(&mr, mk(hgca::kv::TierMode::Int8), Policy::Hgca { beta: 1.0 });
+        let p_int8 = q.perplexity(text, 32).unwrap();
+        println!(
+            "HGCA β=1.0 ratio=0.5: f32-store PPL = {p_f32:.4} | int8-store PPL = {p_int8:.4} | delta {:+.4}",
+            p_int8 - p_f32
+        );
+    }
+
     println!("\n[shape check] HGCA tracks the full-attention baseline within a few");
     println!("percent across the grid; the GPU-KV ratio has no systematic effect");
     println!("(the paper's Table 1 observation).");

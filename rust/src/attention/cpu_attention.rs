@@ -19,6 +19,7 @@
 //! LSE merge, and optionally the per-slot attention mass (A_cpu) used by
 //! MAW re-evaluation (Algorithm 1 line 19).
 
+use crate::kv::quant::{dot_i8, quantize_row, QuantSlab};
 use crate::tensor::ops::{axpy, dot, softmax_lse};
 
 use super::pool::{AttnPool, TaskSplit};
@@ -30,6 +31,27 @@ pub struct HeadJob<'a> {
     pub k: &'a [f32],
     pub v: &'a [f32],
     pub n: usize,
+}
+
+/// One (row, head) unit of work on the **tiered** path: either a plain
+/// f32 job (identical numerics to [`HeadJob`] by construction — the F32
+/// branch of [`run_job_range_tiered`] is the [`run_job_range`] loop body
+/// verbatim) or an int8 job over quantized slabs. The task split and
+/// placement plan treat both identically (only `n()` matters).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum KernelJob<'a> {
+    F32(HeadJob<'a>),
+    Quant { k: &'a QuantSlab, v: &'a QuantSlab },
+}
+
+impl KernelJob<'_> {
+    /// KV entries this job attends (the task-split sizing input).
+    pub(crate) fn n(&self) -> usize {
+        match self {
+            KernelJob::F32(j) => j.n,
+            KernelJob::Quant { k, .. } => k.len(),
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -321,6 +343,94 @@ pub(crate) fn run_job_range(
     }
 }
 
+/// Tiered twin of [`run_job_range`]: the `F32` arm is that function's loop
+/// body verbatim (so f32 jobs on the tiered path are bitwise-identical to
+/// the plain path), and the `Quant` arm quantizes the query row once per
+/// (job, query), dots int8 bytes with a single i32 accumulation, and
+/// applies `scale_q * scale_k` once per entry — no dequantized K/V copy is
+/// ever materialized. Same LSE-merge contract: empty jobs leave `lse` at
+/// `EMPTY_LSE` and `o` at zero.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_job_range_tiered(
+    jobs: &[KernelJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    o: &mut [f32],
+    lse: &mut [f32],
+    probs: &mut [Vec<f32>],
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+) {
+    // reused score + quantized-query buffers — zero allocation per job in
+    // the steady state
+    let max_n = jobs.iter().map(|j| j.n()).max().unwrap_or(0);
+    let mut scores = vec![0.0f32; max_n];
+    let mut q_i8 = vec![0i8; d_head];
+    for (ji, job) in jobs.iter().enumerate() {
+        if job.n() == 0 {
+            continue; // lse stays EMPTY, o stays zero
+        }
+        let nq_limit = q_valid.map(|v| v[ji].min(n_query)).unwrap_or(n_query);
+        match job {
+            KernelJob::F32(job) => {
+                debug_assert_eq!(job.k.len(), job.n * d_head);
+                for nq in 0..nq_limit {
+                    let qv = &q[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
+                    let sc = &mut scores[..job.n];
+                    for (t, sv) in sc.iter_mut().enumerate() {
+                        *sv = dot(qv, &job.k[t * d_head..(t + 1) * d_head]);
+                    }
+                    let l = softmax_lse(sc);
+                    lse[ji * n_query + nq] = l;
+                    let orow =
+                        &mut o[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
+                    for (t, &w) in sc.iter().enumerate() {
+                        if w != 0.0 {
+                            axpy(w, &job.v[t * d_head..(t + 1) * d_head], orow);
+                        }
+                    }
+                    if want_probs {
+                        for (t, &w) in sc.iter().enumerate() {
+                            probs[ji][t] += w;
+                        }
+                    }
+                }
+            }
+            KernelJob::Quant { k, v } => {
+                let n = k.len();
+                debug_assert_eq!(v.len(), n);
+                debug_assert_eq!(k.d_head(), d_head);
+                for nq in 0..nq_limit {
+                    let qv = &q[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
+                    let sq = quantize_row(qv, &mut q_i8);
+                    let sc = &mut scores[..n];
+                    for (t, sv) in sc.iter_mut().enumerate() {
+                        *sv = dot_i8(&q_i8, k.entry(t)) as f32 * (sq * k.scale_of(t));
+                    }
+                    let l = softmax_lse(sc);
+                    lse[ji * n_query + nq] = l;
+                    let orow =
+                        &mut o[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
+                    for (t, &w) in sc.iter().enumerate() {
+                        if w != 0.0 {
+                            let ws = w * v.scale_of(t);
+                            for (oj, &b) in orow.iter_mut().zip(v.entry(t)) {
+                                *oj += ws * b as f32;
+                            }
+                        }
+                    }
+                    if want_probs {
+                        for (t, &w) in sc.iter().enumerate() {
+                            probs[ji][t] += w;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -564,5 +674,82 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn tiered_f32_arm_is_bitwise_identical_to_plain_kernel() {
+        let mut rng = Rng::new(21);
+        let dh = 8;
+        let kvs: Vec<(Vec<f32>, Vec<f32>, usize)> = (0..6)
+            .map(|i| {
+                let n = if i == 2 { 0 } else { 3 + i * 5 };
+                let (k, v) = rand_kv(&mut rng, n, dh);
+                (k, v, n)
+            })
+            .collect();
+        let jobs: Vec<HeadJob> = kvs
+            .iter()
+            .map(|(k, v, n)| HeadJob { k, v, n: *n })
+            .collect();
+        let tiered: Vec<KernelJob> = jobs.iter().map(|j| KernelJob::F32(*j)).collect();
+        let nq = 2;
+        let mut q = vec![0.0; jobs.len() * nq * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let mut o_a = vec![0.0; jobs.len() * nq * dh];
+        let mut o_b = o_a.clone();
+        let mut lse_a = vec![EMPTY_LSE; jobs.len() * nq];
+        let mut lse_b = lse_a.clone();
+        let mut p_a: Vec<Vec<f32>> = kvs.iter().map(|(_, _, n)| vec![0.0; *n]).collect();
+        let mut p_b = p_a.clone();
+        run_job_range(&jobs, &q, nq, dh, &mut o_a, &mut lse_a, &mut p_a, true, None);
+        run_job_range_tiered(&tiered, &q, nq, dh, &mut o_b, &mut lse_b, &mut p_b, true, None);
+        assert_eq!(o_a, o_b);
+        assert_eq!(lse_a, lse_b);
+        assert_eq!(p_a, p_b);
+    }
+
+    #[test]
+    fn quant_arm_tracks_f32_oracle() {
+        use crate::kv::quant::QuantSlab;
+        let mut rng = Rng::new(22);
+        let dh = 8;
+        let n = 48;
+        let (k, v) = rand_kv(&mut rng, n, dh);
+        let qk = QuantSlab::from_f32(&k, dh, 32);
+        let qv = QuantSlab::from_f32(&v, dh, 32);
+        let mut q = vec![0.0; dh];
+        rng.fill_normal(&mut q, 1.0);
+        let f32_jobs = [HeadJob { k: &k, v: &v, n }];
+        let quant_jobs = [KernelJob::Quant { k: &qk, v: &qv }];
+        let mut o_a = vec![0.0; dh];
+        let mut o_b = vec![0.0; dh];
+        let mut lse_a = vec![EMPTY_LSE; 1];
+        let mut lse_b = vec![EMPTY_LSE; 1];
+        let mut p_a = vec![vec![0.0; n]];
+        let mut p_b = vec![vec![0.0; n]];
+        run_job_range(&f32_jobs, &q, 1, dh, &mut o_a, &mut lse_a, &mut p_a, true, None);
+        run_job_range_tiered(&quant_jobs, &q, 1, dh, &mut o_b, &mut lse_b, &mut p_b, true, None);
+        for (a, b) in o_a.iter().zip(o_b.iter()) {
+            assert!((a - b).abs() <= 1e-2, "output drift: {a} vs {b}");
+        }
+        assert!((lse_a[0] - lse_b[0]).abs() <= 1e-2, "lse drift");
+        let mass: f32 = p_b[0].iter().sum();
+        assert!((mass - 1.0).abs() < 1e-4, "quant probs still a distribution");
+    }
+
+    #[test]
+    fn empty_quant_job_leaves_empty_lse() {
+        use crate::kv::quant::QuantSlab;
+        let dh = 4;
+        let qk = QuantSlab::new(dh, 1);
+        let qv = QuantSlab::new(dh, 1);
+        let jobs = [KernelJob::Quant { k: &qk, v: &qv }];
+        let q = vec![1.0; dh];
+        let mut o = vec![0.0; dh];
+        let mut lse = vec![EMPTY_LSE; 1];
+        let mut probs = vec![vec![]];
+        run_job_range_tiered(&jobs, &q, 1, dh, &mut o, &mut lse, &mut probs, true, None);
+        assert_eq!(lse[0], EMPTY_LSE);
+        assert!(o.iter().all(|&x| x == 0.0));
     }
 }

@@ -20,4 +20,6 @@ pub use cpu_attention::{
     CpuAttnOutput, HeadJob,
 };
 pub use merge::{is_empty_lse, merge_head, merge_states, EMPTY_LSE};
-pub use pool::{AttnPool, OwnedJobs, PendingAttn, PoolStats, TaskSplit};
+pub use pool::{
+    AttnPool, JobPayload, OwnedJobs, OwnedTieredJobs, PendingAttn, PoolStats, TaskSplit,
+};

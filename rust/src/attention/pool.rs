@@ -63,9 +63,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::kv::QuantSlab;
 use crate::topology::{NodeId, Topology};
 
-use super::cpu_attention::{run_job_range, CpuAttnOutput, HeadJob, EMPTY_LSE};
+use super::cpu_attention::{
+    run_job_range, run_job_range_tiered, CpuAttnOutput, HeadJob, KernelJob, EMPTY_LSE,
+};
 
 /// How a submission's (row, head) jobs are packed into contiguous pool
 /// tasks. The plan depends only on the job list and the split parameters —
@@ -101,7 +104,17 @@ pub enum TaskSplit {
 impl TaskSplit {
     /// Contiguous per-task job counts (in job order; sums to `jobs.len()`).
     pub(crate) fn plan(&self, jobs: &[HeadJob<'_>]) -> Vec<usize> {
-        let nj = jobs.len();
+        let ns: Vec<usize> = jobs.iter().map(|j| j.n).collect();
+        self.plan_counts(&ns)
+    }
+
+    /// [`TaskSplit::plan`] over bare per-job entry counts — the plan never
+    /// looks at anything but `n`, so the f32 and tiered paths share one
+    /// packing (a tiered job and an f32 job with equal `n` split
+    /// identically, which is what keeps placement and determinism
+    /// tier-independent).
+    pub(crate) fn plan_counts(&self, ns: &[usize]) -> Vec<usize> {
+        let nj = ns.len();
         if nj == 0 {
             return Vec::new();
         }
@@ -122,14 +135,14 @@ impl TaskSplit {
                 let per_task = per_task.max(1);
                 let mut counts = Vec::new();
                 let (mut cur_jobs, mut cur_entries) = (0usize, 0usize);
-                for job in jobs {
-                    if cur_jobs > 0 && cur_entries + job.n > per_task {
+                for &n in ns {
+                    if cur_jobs > 0 && cur_entries + n > per_task {
                         counts.push(cur_jobs);
                         cur_jobs = 0;
                         cur_entries = 0;
                     }
                     cur_jobs += 1;
-                    cur_entries += job.n;
+                    cur_entries += n;
                 }
                 if cur_jobs > 0 {
                     counts.push(cur_jobs);
@@ -337,6 +350,47 @@ pub struct OwnedJobs {
     pub q_valid: Option<Vec<usize>>,
 }
 
+/// One job's owned KV payload on the tiered submission path
+/// ([`AttnPool::submit_tiered`]): the f32 shape [`OwnedJobs`] uses, or a
+/// pair of quantized slabs for an int8-tiered head. The task split and
+/// placement only ever read [`JobPayload::n`].
+pub enum JobPayload {
+    /// Contiguous `[n][d_head]` K and V copies + entry count `n` —
+    /// identical layout (and, through the kernel's F32 arm, identical
+    /// numerics) to the plain f32 path.
+    F32(Vec<f32>, Vec<f32>, usize),
+    /// Quantized K and V slabs for an int8-tiered head.
+    Int8 { k: QuantSlab, v: QuantSlab },
+}
+
+impl JobPayload {
+    /// KV entries in this job.
+    pub fn n(&self) -> usize {
+        match self {
+            JobPayload::F32(_, _, n) => *n,
+            JobPayload::Int8 { k, .. } => k.len(),
+        }
+    }
+}
+
+/// Owned inputs for a tiered non-blocking submission
+/// ([`AttnPool::submit_tiered`]) — [`OwnedJobs`] with per-job tier choice.
+pub struct OwnedTieredJobs {
+    /// Per-job payloads (f32 or quantized), in job order.
+    pub kvs: Vec<JobPayload>,
+    /// `[jobs][n_query][d_head]` flat queries, aligned with `kvs`
+    pub q: Vec<f32>,
+    /// per-job count of valid query rows (`None` = all rows valid)
+    pub q_valid: Option<Vec<usize>>,
+}
+
+/// The owned-input variants a [`PendingStorage`] can hold (tasks borrow
+/// into whichever is present).
+enum OwnedAny {
+    F32(OwnedJobs),
+    Tiered(OwnedTieredJobs),
+}
+
 /// Output buffers the tasks of one submission write into (disjoint slices
 /// handed out at submit time).
 struct OutBufs {
@@ -353,7 +407,7 @@ struct OutBufs {
 /// when — or whether — the submitter waits. This owned storage is what
 /// lets `submit_placed` return without blocking.
 struct PendingStorage {
-    owned: Option<OwnedJobs>,
+    owned: Option<OwnedAny>,
     out: UnsafeCell<OutBufs>,
 }
 
@@ -802,10 +856,12 @@ impl AttnPool {
             },
         };
         let storage = Arc::new(PendingStorage {
-            owned: Some(input),
+            owned: Some(OwnedAny::F32(input)),
             out: UnsafeCell::new(out),
         });
-        let owned = storage.owned.as_ref().expect("owned input just stored");
+        let Some(OwnedAny::F32(owned)) = storage.owned.as_ref() else {
+            unreachable!("owned f32 input just stored");
+        };
         let jobs: Vec<HeadJob<'_>> = owned
             .kvs
             .iter()
@@ -903,6 +959,200 @@ impl AttnPool {
                 let hold = Arc::clone(&storage);
                 let run: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     run_job_range(
+                        task_jobs, task_q, n_query, d_head, o_task, lse_task, p_task, want_probs,
+                        task_valid,
+                    );
+                    drop(hold);
+                });
+                // SAFETY: the 'static promotion is sound under this
+                // function's contract — see `# Safety` above.
+                let run: Box<dyn FnOnce() + Send + 'static> = std::mem::transmute(run);
+                // placement: the first job's node owns the task's slabs;
+                // unplaced submissions spread round-robin by task index
+                let node = match nodes {
+                    Some(map) => map[start] % nqueues,
+                    None => ti % nqueues,
+                };
+                if ti == 0 {
+                    home = node;
+                }
+                // count BEFORE publishing the task: a racing worker's pop
+                // (and its decrement) must never observe a task the counter
+                // hasn't seen, or `queued` wraps below zero
+                let depth = self.shared.queued.fetch_add(1, Ordering::Relaxed) + 1;
+                c.queue_peak.fetch_max(depth, Ordering::Relaxed);
+                self.shared.node_tasks[node].fetch_add(1, Ordering::Relaxed);
+                self.shared.queues[node].queue.lock().unwrap().push_back(Task {
+                    run,
+                    batch: Arc::clone(&batch),
+                });
+                start += count;
+            }
+            self.shared.signal_work();
+        }
+
+        PendingAttn {
+            shared: Arc::clone(&self.shared),
+            batch,
+            storage: Some(storage),
+            home,
+            n_tasks,
+            want_probs,
+        }
+    }
+
+    /// [`submit_placed`](AttnPool::submit_placed) for tiered KV: per-job
+    /// payloads may be f32 copies or quantized int8 slabs
+    /// ([`JobPayload`]). Same non-blocking contract, same [`TaskSplit`]
+    /// plan (packing reads only each job's entry count, see
+    /// [`TaskSplit::plan_counts`]), same placement and counters, same
+    /// LSE-merge output shape — an all-f32 payload list produces bitwise
+    /// the same bits as [`submit_placed`](AttnPool::submit_placed), and a
+    /// quantized job's output is deterministic across pool sizes and
+    /// topologies exactly like the f32 path.
+    pub fn submit_tiered(
+        &self,
+        input: OwnedTieredJobs,
+        n_query: usize,
+        d_head: usize,
+        split: TaskSplit,
+        want_probs: bool,
+        nodes: Option<&[NodeId]>,
+    ) -> PendingAttn {
+        let nj = input.kvs.len();
+        assert_eq!(input.q.len(), nj * n_query * d_head, "q layout mismatch");
+        if let Some(v) = &input.q_valid {
+            assert_eq!(v.len(), nj, "q_valid must align with jobs");
+        }
+        if let Some(map) = nodes {
+            assert_eq!(map.len(), nj, "node map must align with jobs");
+        }
+        for p in &input.kvs {
+            match p {
+                JobPayload::F32(k, v, n) => {
+                    debug_assert_eq!(k.len(), *n * d_head, "k layout mismatch");
+                    debug_assert_eq!(v.len(), *n * d_head, "v layout mismatch");
+                }
+                JobPayload::Int8 { k, v } => {
+                    debug_assert_eq!(k.d_head(), d_head, "quant k width mismatch");
+                    debug_assert_eq!(v.len(), k.len(), "quant k/v length mismatch");
+                }
+            }
+        }
+        let out = OutBufs {
+            o: vec![0.0f32; nj * n_query * d_head],
+            lse: vec![EMPTY_LSE; nj * n_query],
+            probs: if want_probs {
+                input.kvs.iter().map(|p| vec![0.0; p.n()]).collect()
+            } else {
+                Vec::new()
+            },
+        };
+        let storage = Arc::new(PendingStorage {
+            owned: Some(OwnedAny::Tiered(input)),
+            out: UnsafeCell::new(out),
+        });
+        let Some(OwnedAny::Tiered(owned)) = storage.owned.as_ref() else {
+            unreachable!("owned tiered input just stored");
+        };
+        let jobs: Vec<KernelJob<'_>> = owned
+            .kvs
+            .iter()
+            .map(|p| match p {
+                JobPayload::F32(k, v, n) => KernelJob::F32(HeadJob { k, v, n: *n }),
+                JobPayload::Int8 { k, v } => KernelJob::Quant { k, v },
+            })
+            .collect();
+        // SAFETY: every borrow the tasks capture points into `storage`,
+        // which each task closure keeps alive via its own Arc clone — the
+        // data outlives the batch regardless of when (or whether) the
+        // caller waits, even if this handle is dropped immediately.
+        unsafe {
+            self.submit_core_tiered(
+                &jobs,
+                &owned.q,
+                n_query,
+                d_head,
+                split,
+                want_probs,
+                owned.q_valid.as_deref(),
+                nodes,
+                Arc::clone(&storage),
+            )
+        }
+    }
+
+    /// Tiered twin of `submit_core`: identical planning, placement,
+    /// counters, and buffer-splitting — the tasks run
+    /// [`run_job_range_tiered`] instead of [`run_job_range`]. Kept as a
+    /// separate body so the f32 hot path's codegen (and its bitwise
+    /// conformance suites) are untouched by tiering.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as `submit_core`: every borrow reachable through
+    /// `jobs` / `q` / `q_valid` must stay valid until the returned
+    /// handle's batch completes (here they always point into `storage`,
+    /// the owned `submit_tiered` path).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn submit_core_tiered(
+        &self,
+        jobs: &[KernelJob<'_>],
+        q: &[f32],
+        n_query: usize,
+        d_head: usize,
+        split: TaskSplit,
+        want_probs: bool,
+        q_valid: Option<&[usize]>,
+        nodes: Option<&[NodeId]>,
+        storage: Arc<PendingStorage>,
+    ) -> PendingAttn {
+        let nj = jobs.len();
+        debug_assert!(nj > 0, "callers early-out empty submissions");
+
+        // contiguous job ranges per task — the "adjacent head packing";
+        // depends only on the job shapes, never on worker availability
+        let ns: Vec<usize> = jobs.iter().map(|j| j.n()).collect();
+        let counts = split.plan_counts(&ns);
+        let n_tasks = counts.len();
+        let batch = BatchState::new(n_tasks);
+        let nqueues = self.shared.queues.len();
+
+        let c = &self.shared.counters;
+        c.submissions.fetch_add(1, Ordering::Relaxed);
+        c.tasks.fetch_add(n_tasks as u64, Ordering::Relaxed);
+        c.jobs.fetch_add(nj as u64, Ordering::Relaxed);
+
+        // the caller assists on the node of the batch's first task
+        let mut home = 0usize;
+        {
+            // the one &mut to the output buffers; split below into
+            // disjoint per-task slices before any task is published
+            let bufs: &mut OutBufs = &mut *storage.out.get();
+            let mut o_rest: &mut [f32] = &mut bufs.o;
+            let mut lse_rest: &mut [f32] = &mut bufs.lse;
+            let mut probs_rest: &mut [Vec<f32>] = &mut bufs.probs;
+            let mut start = 0;
+            for (ti, &count) in counts.iter().enumerate() {
+                let (o_task, o_next) = o_rest.split_at_mut(count * n_query * d_head);
+                let (lse_task, lse_next) = lse_rest.split_at_mut(count * n_query);
+                let (p_task, p_next) = if want_probs {
+                    probs_rest.split_at_mut(count)
+                } else {
+                    (&mut [][..], &mut [][..])
+                };
+                o_rest = o_next;
+                lse_rest = lse_next;
+                probs_rest = p_next;
+                let task_jobs = &jobs[start..start + count];
+                let task_q = &q[start * n_query * d_head..(start + count) * n_query * d_head];
+                let task_valid = q_valid.map(|v| &v[start..start + count]);
+                // each task keeps the storage alive until it finishes; the
+                // clone is dropped when the closure is consumed, strictly
+                // before the task's batch slot completes (see `run_task`)
+                let hold = Arc::clone(&storage);
+                let run: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    run_job_range_tiered(
                         task_jobs, task_q, n_query, d_head, o_task, lse_task, p_task, want_probs,
                         task_valid,
                     );
@@ -1198,6 +1448,125 @@ mod tests {
             let s = pool.stats();
             assert_eq!(s.submissions, 2, "submit counts like a blocking call");
             assert_eq!(s.queue_depth, 0, "both batches fully drained");
+        }
+    }
+
+    #[test]
+    fn submit_tiered_all_f32_matches_submit_placed_bitwise() {
+        // an all-f32 tiered submission must be indistinguishable from the
+        // plain owned path: same plan, same kernel arithmetic, same bits
+        let mut rng = Rng::new(0xF66);
+        let dh = 8;
+        let kvs = rand_jobs(&mut rng, 9, dh, 24);
+        let nq = 2;
+        let mut q = vec![0.0; kvs.len() * nq * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let q_valid: Vec<usize> = (0..kvs.len()).map(|i| i % (nq + 1)).collect();
+        let split = TaskSplit::EvenJobs { max_parallel: 4 };
+        let pool = AttnPool::new(2);
+        let plain = pool
+            .submit_placed(
+                OwnedJobs {
+                    kvs: kvs.clone(),
+                    q: q.clone(),
+                    q_valid: Some(q_valid.clone()),
+                },
+                nq,
+                dh,
+                split,
+                true,
+                None,
+            )
+            .wait();
+        let tiered = pool
+            .submit_tiered(
+                OwnedTieredJobs {
+                    kvs: kvs
+                        .iter()
+                        .map(|(k, v, n)| JobPayload::F32(k.clone(), v.clone(), *n))
+                        .collect(),
+                    q: q.clone(),
+                    q_valid: Some(q_valid.clone()),
+                },
+                nq,
+                dh,
+                split,
+                true,
+                None,
+            )
+            .wait();
+        assert_eq!(plain.o, tiered.o);
+        assert_eq!(plain.lse, tiered.lse);
+        assert_eq!(plain.probs, tiered.probs);
+        assert_eq!(plain.tasks, tiered.tasks);
+    }
+
+    #[test]
+    fn tiered_quant_output_bitwise_stable_across_pools_topologies_and_splits() {
+        // mixed f32 + int8 jobs: the quantized kernel must be exactly as
+        // schedule-independent as the f32 one
+        let mut rng = Rng::new(0xF77);
+        let dh = 8;
+        let kvs = rand_jobs(&mut rng, 10, dh, 40);
+        let mut q = vec![0.0; kvs.len() * dh];
+        rng.fill_normal(&mut q, 1.0);
+        let payloads = |kvs: &[(Vec<f32>, Vec<f32>, usize)]| -> Vec<JobPayload> {
+            kvs.iter()
+                .enumerate()
+                .map(|(i, (k, v, n))| {
+                    if i % 2 == 0 {
+                        JobPayload::Int8 {
+                            k: QuantSlab::from_f32(k, dh, 4),
+                            v: QuantSlab::from_f32(v, dh, 4),
+                        }
+                    } else {
+                        JobPayload::F32(k.clone(), v.clone(), *n)
+                    }
+                })
+                .collect()
+        };
+        let reference = AttnPool::new(0)
+            .submit_tiered(
+                OwnedTieredJobs {
+                    kvs: payloads(&kvs),
+                    q: q.clone(),
+                    q_valid: None,
+                },
+                1,
+                dh,
+                TaskSplit::EvenJobs { max_parallel: 1 },
+                true,
+                None,
+            )
+            .wait();
+        for nodes in [1usize, 2, 4] {
+            for workers in [0usize, 3] {
+                let pool = AttnPool::with_topology(workers, Topology::synthetic(nodes));
+                let map: Vec<usize> = (0..kvs.len()).map(|j| j % nodes).collect();
+                for split in [
+                    TaskSplit::EvenJobs { max_parallel: 7 },
+                    TaskSplit::EvenJobs { max_parallel: 64 },
+                    TaskSplit::ByEntries { per_task: 16, max_tasks: 8 },
+                ] {
+                    let out = pool
+                        .submit_tiered(
+                            OwnedTieredJobs {
+                                kvs: payloads(&kvs),
+                                q: q.clone(),
+                                q_valid: None,
+                            },
+                            1,
+                            dh,
+                            split,
+                            true,
+                            Some(&map),
+                        )
+                        .wait();
+                    assert_eq!(out.o, reference.o, "nodes={nodes} workers={workers}");
+                    assert_eq!(out.lse, reference.lse, "nodes={nodes} workers={workers}");
+                    assert_eq!(out.probs, reference.probs, "nodes={nodes} workers={workers}");
+                }
+            }
         }
     }
 

@@ -29,6 +29,13 @@ pub struct HgcaConfig {
     /// Disable the CPU side entirely (GPU-only full attention; "GPU KV
     /// ratio 1" configuration in Figs. 13/14).
     pub gpu_only: bool,
+    /// CPU KV storage tier override (`--kv-tier {f32,int8,auto}`): `F32`
+    /// (default) keeps every head on the f32 path — bitwise-identical
+    /// tokens to the pre-tier engine; `Int8` quantizes every head's
+    /// CPU-resident KV; `Auto` picks per head from the observed attention
+    /// mass (see [`crate::kv::TierPolicy`]). Only the HGCA policy tiers
+    /// its store.
+    pub kv_tier: crate::kv::TierMode,
 }
 
 impl Default for HgcaConfig {
@@ -47,6 +54,7 @@ impl Default for HgcaConfig {
             chunk: 64,
             max_batch: 4,
             gpu_only: false,
+            kv_tier: crate::kv::TierMode::F32,
         }
     }
 }

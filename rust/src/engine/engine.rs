@@ -10,10 +10,11 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::attention::{
-    merge_states, AttnPool, CpuAttnOutput, OwnedJobs, PendingAttn, TaskSplit, EMPTY_LSE,
+    merge_states, AttnPool, CpuAttnOutput, JobPayload, OwnedJobs, OwnedTieredJobs, PendingAttn,
+    TaskSplit, EMPTY_LSE,
 };
 use crate::config::{HgcaConfig, ModelConfig};
-use crate::kv::{GpuBlockPool, KvManager, PrefixCache, PrefixStats};
+use crate::kv::{GpuBlockPool, KvManager, PrefixCache, PrefixStats, TierMode, TierPolicy};
 use crate::metrics::{Metrics, Timer};
 use crate::model::Sampler;
 use crate::runtime::{Executor, ModelRuntime};
@@ -472,7 +473,12 @@ impl<'m> Engine<'m> {
             let mut cpu_done: Option<(CpuAttnOutput, f64)> = None;
             let mut cpu_jobs = 0u64;
             let mut sel_total = 0usize;
-            if self.policy.uses_cpu_side() {
+            // the tiered submission path only engages for HGCA with a
+            // non-default --kv-tier; every other combination runs the f32
+            // path below, literally unchanged
+            let kv_tiered =
+                self.cfg.kv_tier != TierMode::F32 && matches!(self.policy, Policy::Hgca { .. });
+            if self.policy.uses_cpu_side() && !kv_tiered {
                 // per-(row, head) jobs; on append attend the FULL store so
                 // re-evaluation sees complete scores (§3.2.2). `job_nodes`
                 // (built once above) aligns with this gather: the pool
@@ -535,6 +541,58 @@ impl<'m> Engine<'m> {
                 } else {
                     // forced-sequential reference path: finish the sparse
                     // side before bookkeeping (the pre-overlap engine)
+                    let done = p.wait();
+                    let secs = t.secs();
+                    cpu_done = Some((done, secs));
+                }
+            } else if self.policy.uses_cpu_side() {
+                // tiered twin of the block above: the gather hands each
+                // head's payload in its stored form — f32 copies, or the
+                // int8 slabs themselves (bytes + scales move, nothing is
+                // dequantized host-side). Same placement, same TaskSplit
+                // selection (packing reads only entry counts), same
+                // LSE-merge contract downstream.
+                let mut gathered: Vec<JobPayload> = Vec::with_capacity(batch * h_n);
+                for seq in seqs.iter() {
+                    let store = &seq.kv.layers[li].cpu;
+                    let full = is_append && !store.is_empty();
+                    let g = self.policy.gather_payloads(store, seq.kv.seq_len, full);
+                    debug_assert_eq!(g.len(), h_n);
+                    gathered.extend(g);
+                }
+                for _ in nactive..batch {
+                    for _ in 0..h_n {
+                        gathered.push(JobPayload::F32(Vec::new(), Vec::new(), 0));
+                    }
+                }
+                cpu_jobs = gathered.len() as u64;
+                sel_total = gathered.iter().map(JobPayload::n).sum();
+                let mut q_valid = Vec::with_capacity(gathered.len());
+                for b in 0..batch {
+                    let v = if b < nactive { valid[b] } else { 0 };
+                    for _ in 0..h_n {
+                        q_valid.push(v);
+                    }
+                }
+                let split = if is_append || self.policy.decode_attends_full_store() {
+                    TaskSplit::ByEntries {
+                        per_task: self.cfg.append_entries_per_task,
+                        max_tasks: self.cfg.cpu_threads.saturating_mul(4).max(1),
+                    }
+                } else {
+                    TaskSplit::EvenJobs { max_parallel: self.cfg.cpu_threads }
+                };
+                let input = OwnedTieredJobs {
+                    kvs: gathered,
+                    q: std::mem::take(&mut out.q),
+                    q_valid: Some(q_valid),
+                };
+                let t = Timer::start();
+                let p = AttnPool::global()
+                    .submit_tiered(input, n, dh, split, is_append, Some(&job_nodes));
+                if self.overlap_cpu_attn {
+                    pending = Some((p, t));
+                } else {
                     let done = p.wait();
                     let secs = t.secs();
                     cpu_done = Some((done, secs));
@@ -687,6 +745,18 @@ impl<'m> Engine<'m> {
                     seqs[b].kv.layers[li].cpu.add_evicted(&blk, beta, denom);
                     seqs[b].kv.evict_bytes += blk_bytes(&blk);
                 }
+                // tier selection rides the eviction path: re-decide per
+                // head now that new entries (and refreshed MAW) are in the
+                // store — the one-way ratchet means this only tightens
+                if kv_tiered {
+                    let tp = TierPolicy::new(self.cfg.kv_tier);
+                    for seq in seqs.iter_mut() {
+                        let store = &mut seq.kv.layers[li].cpu;
+                        if !store.is_empty() {
+                            tp.apply(store);
+                        }
+                    }
+                }
                 // H2O/Static: discard unselected permanently
                 if self.policy.discards_unselected() {
                     for seq in seqs.iter_mut() {
@@ -753,6 +823,17 @@ impl<'m> Engine<'m> {
         let gpu_b: usize = seqs.iter().map(|s| s.kv.gpu_bytes()).sum();
         let cpu_b: usize = seqs.iter().map(|s| s.kv.cpu_bytes()).sum();
         self.metrics.observe_memory(gpu_b, cpu_b);
+        let (mut t_f32, mut t_int8, mut t_win, mut saved) = (0u64, 0u64, 0u64, 0u64);
+        for seq in seqs.iter() {
+            for layer in &seq.kv.layers {
+                let (f, i, w) = layer.cpu.tier_counts();
+                t_f32 += f as u64;
+                t_int8 += i as u64;
+                t_win += w as u64;
+                saved += layer.cpu.quant_bytes_saved();
+            }
+        }
+        self.metrics.observe_kv_tiers(t_f32, t_int8, t_win, saved);
         self.metrics
             .record_step(wall.secs(), sim_secs, if is_append { 0 } else { nactive as u64 });
 

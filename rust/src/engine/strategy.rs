@@ -4,8 +4,9 @@
 //! (b) how the step is charged on the simulated testbed (→ performance
 //! results, Figs. 6/10–14).
 
+use crate::attention::JobPayload;
 use crate::config::ModelConfig;
-use crate::kv::cpu_store::CpuLayerStore;
+use crate::kv::cpu_store::{CpuLayerStore, HeadTier};
 use crate::simulator::{AttnWork, Breakdown, Testbed};
 use crate::sparse::{SelectInput, SparsePolicy, StaticWindow, TopK};
 
@@ -112,6 +113,60 @@ impl Policy {
                     })
                     .collect()
             }
+        }
+    }
+
+    /// Tier-aware twin of [`Policy::gather_jobs`] for the engine's tiered
+    /// submission path ([`crate::attention::AttnPool::submit_tiered`]):
+    /// int8-tiered heads hand the pool their quantized slabs (bytes +
+    /// scales move, nothing dequantizes), `WindowOnly` heads yield empty
+    /// jobs (their CPU side contributes nothing — the LSE merge then
+    /// reduces to the GPU window), and f32 heads produce exactly the
+    /// payload `gather_jobs` would.
+    ///
+    /// `full_store` selects the append-time re-evaluation gather (whole
+    /// store per head, the `FullOffload`-shaped working set) instead of
+    /// the policy's decode selection; under HGCA the decode set is the
+    /// pre-packed contextual cache, whose quantized twin was packed at
+    /// selection time.
+    pub fn gather_payloads(
+        &self,
+        store: &CpuLayerStore,
+        seq_len: usize,
+        full_store: bool,
+    ) -> Vec<JobPayload> {
+        if full_store {
+            return store
+                .full
+                .iter()
+                .map(|h| match h.tier {
+                    HeadTier::F32 => JobPayload::F32(h.k.to_vec(), h.v.to_vec(), h.len()),
+                    HeadTier::Int8 => JobPayload::Int8 {
+                        k: h.qk.clone().expect("int8 head has quant k slab"),
+                        v: h.qv.clone().expect("int8 head has quant v slab"),
+                    },
+                    HeadTier::WindowOnly => JobPayload::F32(Vec::new(), Vec::new(), 0),
+                })
+                .collect();
+        }
+        match self {
+            Policy::Hgca { .. } => store
+                .ctx
+                .iter()
+                .map(|c| match (&c.qk, &c.qv) {
+                    (Some(qk), Some(qv)) => JobPayload::Int8 {
+                        k: qk.clone(),
+                        v: qv.clone(),
+                    },
+                    _ => JobPayload::F32(c.k.clone(), c.v.clone(), c.len()),
+                })
+                .collect(),
+            // no other policy tiers its store; fall back to the f32 gather
+            _ => self
+                .gather_jobs(store, seq_len)
+                .into_iter()
+                .map(|(k, v, n)| JobPayload::F32(k, v, n))
+                .collect(),
         }
     }
 
@@ -281,6 +336,37 @@ mod tests {
         assert!(!Policy::H2o { frac: 0.2 }.decode_attends_full_store());
         assert!(!Policy::Static { sinks: 4, recent: 64 }.decode_attends_full_store());
         assert!(!Policy::GpuOnly.decode_attends_full_store());
+    }
+
+    #[test]
+    fn gather_payloads_respects_tiers() {
+        let maw = [0.5f32; 32];
+        let mut s = store_with(&[&maw[..], &maw[..]]);
+        s.set_tier(0, HeadTier::Int8);
+        s.set_tier(1, HeadTier::WindowOnly);
+        let p = Policy::Hgca { beta: 1.0 };
+        // append-time gather: whole store per head
+        let full = p.gather_payloads(&s, 64, true);
+        assert!(matches!(&full[0], JobPayload::Int8 { k, .. } if k.len() == 32));
+        assert_eq!(full[1].n(), 0, "window-only head offers no CPU job");
+        // decode gather: the packed ctx, quantized twin for the int8 head
+        let dec = p.gather_payloads(&s, 64, false);
+        assert!(matches!(&dec[0], JobPayload::Int8 { .. }));
+        assert_eq!(dec[1].n(), 0);
+    }
+
+    #[test]
+    fn gather_payloads_matches_gather_jobs_when_untiered() {
+        let s = store_with(&[&[0.9, 0.01, 0.8, 0.01]]);
+        let p = Policy::Hgca { beta: 1.0 };
+        let jobs = p.gather_jobs(&s, 10);
+        let payloads = p.gather_payloads(&s, 10, false);
+        match &payloads[0] {
+            JobPayload::F32(k, v, n) => {
+                assert_eq!((k, v, *n), (&jobs[0].0, &jobs[0].1, jobs[0].2));
+            }
+            _ => panic!("untiered head must gather f32"),
+        }
     }
 
     #[test]

@@ -18,6 +18,27 @@ use crate::topology::NodeId;
 
 use super::block::KvBlock;
 use super::cow::CowVec;
+use super::quant::{QuantSlab, QUANT_BLOCK};
+
+/// Storage tier of one head's CPU-resident KV (the tiered-KV tentpole).
+/// Tiers only ever *tighten* (`F32 → Int8 → WindowOnly`) — see
+/// [`CpuLayerStore::set_tier`] — so a head's numerics never silently gain
+/// precision mid-sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HeadTier {
+    /// Full-precision f32 slabs — today's path, bitwise unchanged.
+    #[default]
+    F32,
+    /// Symmetric int8 with per-block scales ([`QuantSlab`]); dot products
+    /// run against the quantized bytes (one i32 accumulation + one scale
+    /// multiply — no dequantized copy).
+    Int8,
+    /// Entries beyond the GPU window are dropped for this head: MAW/pos
+    /// bookkeeping is kept (so the store's per-head length invariant and
+    /// re-evaluation shapes survive) but no K/V bytes are stored and the
+    /// contextual cache stays empty.
+    WindowOnly,
+}
 
 /// Per-head growable KV arrays.
 ///
@@ -31,6 +52,13 @@ pub struct HeadStore {
     pub v: CowVec<f32>,
     pub maw: Vec<f32>, // [n]
     pub pos: CowVec<usize>,
+    /// Storage tier ([`HeadTier::F32`] keeps this head on the pre-tier
+    /// path bit for bit).
+    pub tier: HeadTier,
+    /// Int8 K slab (`Some` iff `tier == Int8`; `k` is empty then).
+    pub qk: Option<QuantSlab>,
+    /// Int8 V slab (`Some` iff `tier == Int8`; `v` is empty then).
+    pub qv: Option<QuantSlab>,
 }
 
 impl HeadStore {
@@ -53,6 +81,12 @@ pub struct HeadCtx {
     pub v: Vec<f32>,
     /// re-normalized MAW (sums to 1 per head when non-empty)
     pub maw: Vec<f32>,
+    /// Packed int8 K for an `Int8`-tier head (per-entry scales — the
+    /// bytes/scales are copied from the full-store slab, so packing adds
+    /// no quantization error). `k`/`v` stay empty then.
+    pub qk: Option<QuantSlab>,
+    /// Packed int8 V for an `Int8`-tier head.
+    pub qv: Option<QuantSlab>,
 }
 
 impl HeadCtx {
@@ -145,20 +179,50 @@ impl CpuLayerStore {
             let start = self.full[h].len();
             let hk = &blk.k[h * blk.len * dh..(h + 1) * blk.len * dh];
             let hv = &blk.v[h * blk.len * dh..(h + 1) * blk.len * dh];
-            self.full[h].k.make_mut().extend_from_slice(hk);
-            self.full[h].v.make_mut().extend_from_slice(hv);
+            match self.full[h].tier {
+                HeadTier::F32 => {
+                    self.full[h].k.make_mut().extend_from_slice(hk);
+                    self.full[h].v.make_mut().extend_from_slice(hv);
+                }
+                HeadTier::Int8 => {
+                    // push_entries re-quantizes the partial tail block from
+                    // its staged f32 originals, so the block scale always
+                    // covers every entry it spans (never stale)
+                    self.full[h].qk.as_mut().expect("int8 slab").push_entries(hk);
+                    self.full[h].qv.as_mut().expect("int8 slab").push_entries(hv);
+                }
+                HeadTier::WindowOnly => {} // bytes dropped; bookkeeping below
+            }
             self.full[h]
                 .maw
                 .extend_from_slice(&blk.maw[h * blk.len..(h + 1) * blk.len]);
             self.full[h].pos.make_mut().extend_from_slice(&blk.pos);
             // select salient newcomers into the contextual cache
-            for t in 0..blk.len {
-                if blk.maw_at(h, t) > threshold {
-                    let i = start + t;
-                    self.ctx[h].idx.push(i as u32);
-                    self.ctx[h].k.extend_from_slice(&hk[t * dh..(t + 1) * dh]);
-                    self.ctx[h].v.extend_from_slice(&hv[t * dh..(t + 1) * dh]);
-                    self.ctx[h].maw.push(blk.maw_at(h, t));
+            if self.full[h].tier != HeadTier::WindowOnly {
+                for t in 0..blk.len {
+                    if blk.maw_at(h, t) > threshold {
+                        let i = start + t;
+                        self.ctx[h].idx.push(i as u32);
+                        match self.full[h].tier {
+                            HeadTier::F32 => {
+                                self.ctx[h].k.extend_from_slice(&hk[t * dh..(t + 1) * dh]);
+                                self.ctx[h].v.extend_from_slice(&hv[t * dh..(t + 1) * dh]);
+                            }
+                            HeadTier::Int8 => {
+                                // copy the just-quantized bytes + scales so
+                                // the packed ctx serves the exact values the
+                                // full store serves
+                                let qk = self.full[h].qk.as_ref().expect("int8 slab");
+                                let qv = self.full[h].qv.as_ref().expect("int8 slab");
+                                let ck = self.ctx[h].qk.as_mut().expect("int8 ctx");
+                                ck.push_quantized(qk.entry(i), qk.scale_of(i));
+                                let cv = self.ctx[h].qv.as_mut().expect("int8 ctx");
+                                cv.push_quantized(qv.entry(i), qv.scale_of(i));
+                            }
+                            HeadTier::WindowOnly => unreachable!(),
+                        }
+                        self.ctx[h].maw.push(blk.maw_at(h, t));
+                    }
                 }
             }
             Self::renormalize(&mut self.ctx[h].maw);
@@ -176,18 +240,43 @@ impl CpuLayerStore {
         let threshold = beta / n.max(1) as f32;
         for h in 0..self.heads {
             let store = &self.full[h];
+            let tier = store.tier;
             let ctx = &mut self.ctx[h];
             ctx.idx.clear();
             ctx.k.clear();
             ctx.v.clear();
             ctx.maw.clear();
-            for i in 0..n {
-                let a = a_cpu[h * n + i];
-                if a > threshold {
-                    ctx.idx.push(i as u32);
-                    ctx.k.extend_from_slice(&store.k[i * dh..(i + 1) * dh]);
-                    ctx.v.extend_from_slice(&store.v[i * dh..(i + 1) * dh]);
-                    ctx.maw.push(a);
+            if let Some(q) = ctx.qk.as_mut() {
+                *q = QuantSlab::new(dh, 1);
+            }
+            if let Some(q) = ctx.qv.as_mut() {
+                *q = QuantSlab::new(dh, 1);
+            }
+            if tier != HeadTier::WindowOnly {
+                for i in 0..n {
+                    let a = a_cpu[h * n + i];
+                    if a > threshold {
+                        ctx.idx.push(i as u32);
+                        match tier {
+                            HeadTier::F32 => {
+                                ctx.k.extend_from_slice(&store.k[i * dh..(i + 1) * dh]);
+                                ctx.v.extend_from_slice(&store.v[i * dh..(i + 1) * dh]);
+                            }
+                            HeadTier::Int8 => {
+                                // rebuild from the *current* store bytes +
+                                // scales, so re-evaluation never leaves the
+                                // packed ctx behind a re-quantized tail
+                                let qk = store.qk.as_ref().expect("int8 slab");
+                                let qv = store.qv.as_ref().expect("int8 slab");
+                                let ck = ctx.qk.as_mut().expect("int8 ctx");
+                                ck.push_quantized(qk.entry(i), qk.scale_of(i));
+                                let cv = ctx.qv.as_mut().expect("int8 ctx");
+                                cv.push_quantized(qv.entry(i), qv.scale_of(i));
+                            }
+                            HeadTier::WindowOnly => unreachable!(),
+                        }
+                        ctx.maw.push(a);
+                    }
                 }
             }
             // also refresh the stored MAW so future re-evals see history
@@ -196,6 +285,101 @@ impl CpuLayerStore {
             }
             Self::renormalize(&mut self.ctx[h].maw);
         }
+    }
+
+    /// Move head `h` to `tier`. Tiers are a **one-way ratchet**
+    /// (`F32 → Int8 → WindowOnly`): a request that would loosen the tier
+    /// is ignored, because the dropped precision (or the dropped bytes)
+    /// cannot be recovered. Existing slab contents migrate: `Int8`
+    /// quantizes the current f32 slabs (and re-packs the contextual cache
+    /// from the quantized bytes); `WindowOnly` drops K/V outright and
+    /// empties the contextual cache, keeping MAW/pos so the store's
+    /// per-head length invariant survives.
+    pub fn set_tier(&mut self, h: usize, tier: HeadTier) {
+        let rank = |t: HeadTier| match t {
+            HeadTier::F32 => 0,
+            HeadTier::Int8 => 1,
+            HeadTier::WindowOnly => 2,
+        };
+        let cur = self.full[h].tier;
+        if rank(tier) <= rank(cur) && tier != cur {
+            return; // never loosen
+        }
+        if tier == cur {
+            return;
+        }
+        let dh = self.d_head;
+        match tier {
+            HeadTier::F32 => unreachable!("ratchet checked above"),
+            HeadTier::Int8 => {
+                assert_eq!(cur, HeadTier::F32);
+                let hs = &mut self.full[h];
+                hs.qk = Some(QuantSlab::from_f32(&hs.k, dh, QUANT_BLOCK));
+                hs.qv = Some(QuantSlab::from_f32(&hs.v, dh, QUANT_BLOCK));
+                hs.k = CowVec::default();
+                hs.v = CowVec::default();
+                hs.tier = HeadTier::Int8;
+                // re-pack the contextual cache from the quantized bytes so
+                // the serving path and the store agree on every value
+                let qk = self.full[h].qk.as_ref().expect("just set");
+                let qv = self.full[h].qv.as_ref().expect("just set");
+                let ctx = &mut self.ctx[h];
+                let mut ck = QuantSlab::new(dh, 1);
+                let mut cv = QuantSlab::new(dh, 1);
+                for &i in &ctx.idx {
+                    let i = i as usize;
+                    ck.push_quantized(qk.entry(i), qk.scale_of(i));
+                    cv.push_quantized(qv.entry(i), qv.scale_of(i));
+                }
+                ctx.k.clear();
+                ctx.v.clear();
+                ctx.qk = Some(ck);
+                ctx.qv = Some(cv);
+            }
+            HeadTier::WindowOnly => {
+                let hs = &mut self.full[h];
+                hs.k = CowVec::default();
+                hs.v = CowVec::default();
+                hs.qk = None;
+                hs.qv = None;
+                hs.tier = HeadTier::WindowOnly;
+                self.ctx[h] = HeadCtx::default();
+            }
+        }
+    }
+
+    /// The tier of head `h`.
+    pub fn tier(&self, h: usize) -> HeadTier {
+        self.full[h].tier
+    }
+
+    /// Heads per tier: `(f32, int8, window_only)`.
+    pub fn tier_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0usize, 0usize, 0usize);
+        for hs in &self.full {
+            match hs.tier {
+                HeadTier::F32 => c.0 += 1,
+                HeadTier::Int8 => c.1 += 1,
+                HeadTier::WindowOnly => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Bytes saved by int8-tiered heads vs holding the same entries in
+    /// f32: Σ over Int8 heads of `2·n·d_head·4 − (qk + qv actual bytes)`.
+    pub fn quant_bytes_saved(&self) -> u64 {
+        let dh = self.d_head;
+        self.full
+            .iter()
+            .filter(|hs| hs.tier == HeadTier::Int8)
+            .map(|hs| {
+                let f32_equiv = 2 * hs.len() * dh * 4;
+                let actual = hs.qk.as_ref().map_or(0, QuantSlab::size_bytes)
+                    + hs.qv.as_ref().map_or(0, QuantSlab::size_bytes);
+                f32_equiv.saturating_sub(actual) as u64
+            })
+            .sum()
     }
 
     fn renormalize(maw: &mut [f32]) {
@@ -214,17 +398,29 @@ impl CpuLayerStore {
     }
 
     /// Resident bytes (full store + contextual cache; the paper's peak
-    /// CPU-KV metric).
+    /// CPU-KV metric). Tiered heads account their quantized buffers +
+    /// scales exactly ([`QuantSlab::size_bytes`]); f32 heads are the
+    /// pre-tier arithmetic unchanged.
     pub fn size_bytes(&self) -> usize {
         let full: usize = self
             .full
             .iter()
-            .map(|h| (h.k.len() + h.v.len() + h.maw.len()) * 4 + h.pos.len() * 8)
+            .map(|h| {
+                (h.k.len() + h.v.len() + h.maw.len()) * 4
+                    + h.pos.len() * 8
+                    + h.qk.as_ref().map_or(0, QuantSlab::size_bytes)
+                    + h.qv.as_ref().map_or(0, QuantSlab::size_bytes)
+            })
             .sum();
         let ctx: usize = self
             .ctx
             .iter()
-            .map(|c| (c.k.len() + c.v.len() + c.maw.len()) * 4 + c.idx.len() * 4)
+            .map(|c| {
+                (c.k.len() + c.v.len() + c.maw.len()) * 4
+                    + c.idx.len() * 4
+                    + c.qk.as_ref().map_or(0, QuantSlab::size_bytes)
+                    + c.qv.as_ref().map_or(0, QuantSlab::size_bytes)
+            })
             .sum();
         full + ctx
     }
@@ -356,5 +552,134 @@ mod tests {
         assert_eq!(s.len(), 4);
         assert_eq!(s.ctx[0].len(), 4);
         assert_eq!(s.ctx[0].idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn int8_tier_migrates_slabs_and_saves_bytes() {
+        // a full scale block (32 entries) so compression dominates the
+        // staged-tail overhead
+        let maw = [0.5f32; 32];
+        let mut s = CpuLayerStore::new(2, 2);
+        let blk = blk_with_maw(2, 2, &[&maw, &maw]);
+        s.add_evicted(&blk, 1.0, 4);
+        let f32_bytes = s.size_bytes();
+        s.set_tier(0, HeadTier::Int8);
+        assert_eq!(s.tier(0), HeadTier::Int8);
+        assert_eq!(s.tier(1), HeadTier::F32);
+        assert_eq!(s.tier_counts(), (1, 1, 0));
+        // the f32 slabs are gone; the quant slabs cover the same entries
+        assert!(s.full[0].k.is_empty());
+        assert_eq!(s.full[0].qk.as_ref().unwrap().len(), 32);
+        // the ctx re-packed with matching selection (all 32 pass 1/4)
+        assert_eq!(s.ctx[0].idx.len(), 32);
+        assert_eq!(s.ctx[0].qk.as_ref().unwrap().len(), 32);
+        assert!(s.ctx[0].k.is_empty());
+        assert!(s.size_bytes() < f32_bytes);
+        // ≥ 3× compression on the int8 slabs: saved ≥ 2 × resident
+        let resident = s.full[0].qk.as_ref().unwrap().size_bytes()
+            + s.full[0].qv.as_ref().unwrap().size_bytes();
+        assert!(
+            s.quant_bytes_saved() as usize >= 2 * resident,
+            "saved {} vs resident {resident}",
+            s.quant_bytes_saved()
+        );
+        // and later evictions keep flowing into the quant slabs
+        s.add_evicted(&blk_with_maw(2, 2, &[&[0.9, 0.0, 0.0], &[0.0; 3]]), 1.0, 4);
+        assert_eq!(s.full[0].qk.as_ref().unwrap().len(), 35);
+        assert_eq!(s.full[1].k.len(), 35 * 2, "f32 head untouched");
+    }
+
+    #[test]
+    fn window_only_tier_drops_bytes_keeps_bookkeeping() {
+        let mut s = CpuLayerStore::new(2, 2);
+        s.add_evicted(&blk_with_maw(2, 2, &[&[0.5, 0.5], &[0.5, 0.5]]), 1.0, 4);
+        s.set_tier(0, HeadTier::WindowOnly);
+        assert!(s.full[0].k.is_empty() && s.full[0].qk.is_none());
+        assert!(s.ctx[0].is_empty());
+        // length invariant survives (maw/pos kept) so reevaluate's shape
+        // assertion and cross-head accounting still hold
+        assert_eq!(s.full[0].len(), 2);
+        assert_eq!(s.len(), 2);
+        s.add_evicted(&blk_with_maw(2, 2, &[&[0.9, 0.9], &[0.9, 0.9]]), 1.0, 4);
+        assert_eq!(s.full[0].len(), 4);
+        assert!(s.ctx[0].is_empty(), "window-only head never selects");
+        assert_eq!(s.ctx[1].len(), 4);
+        // reevaluation runs with zeroed scores for the dropped head
+        s.reevaluate(&vec![0.1; 2 * 4], 1.0);
+        assert!(s.ctx[0].is_empty());
+    }
+
+    #[test]
+    fn tier_is_a_one_way_ratchet() {
+        let mut s = CpuLayerStore::new(1, 2);
+        s.add_evicted(&blk_with_maw(1, 2, &[&[0.5, 0.5]]), 1.0, 4);
+        s.set_tier(0, HeadTier::Int8);
+        s.set_tier(0, HeadTier::F32); // ignored
+        assert_eq!(s.tier(0), HeadTier::Int8);
+        s.set_tier(0, HeadTier::WindowOnly);
+        s.set_tier(0, HeadTier::Int8); // ignored
+        assert_eq!(s.tier(0), HeadTier::WindowOnly);
+    }
+
+    /// Regression: before the tail-staging fix, appending to an int8 head
+    /// re-used the tail block's *old* scale for entries whose block now
+    /// holds a larger-magnitude newcomer, so dequantized values clipped at
+    /// the stale max. `add_evicted` must re-quantize the tail block from
+    /// f32 originals on every mutation.
+    #[test]
+    fn int8_append_never_serves_stale_scales() {
+        let dh = 2;
+        let mut s = CpuLayerStore::new(1, dh);
+        s.set_tier(0, HeadTier::Int8); // tier first: all appends quantized
+        // first block: small magnitudes → small scale
+        let mut blk = KvBlock::new(1, dh, 1);
+        blk.k.copy_from_slice(&[0.5, -0.5]);
+        blk.v.copy_from_slice(&[0.25, 0.25]);
+        blk.maw[0] = 0.9;
+        s.add_evicted(&blk, 1.0, 4);
+        // second entry lands in the same scale block with 100× magnitude
+        let mut blk2 = KvBlock::new(1, dh, 1);
+        blk2.k.copy_from_slice(&[50.0, -50.0]);
+        blk2.v.copy_from_slice(&[25.0, 25.0]);
+        blk2.maw[0] = 0.9;
+        s.add_evicted(&blk2, 1.0, 4);
+        let qk = s.full[0].qk.as_ref().unwrap();
+        // with a stale 0.5-max scale the newcomer would clip at ±0.5;
+        // with the re-quantized block scale both entries round-trip
+        let mut out = [0.0f32; 2];
+        qk.dequantize_entry(1, &mut out);
+        let scale = qk.scale_of(1);
+        assert!((out[0] - 50.0).abs() <= scale / 2.0 + 1e-6, "{out:?} scale {scale}");
+        qk.dequantize_entry(0, &mut out);
+        assert!((out[0] - 0.5).abs() <= scale / 2.0 + 1e-6, "{out:?} scale {scale}");
+        // the ctx packed at first-append time kept its copy-time scale —
+        // also not stale (bytes + scale always travel together)
+        let ck = s.ctx[0].qk.as_ref().unwrap();
+        ck.dequantize_entry(0, &mut out);
+        assert!((out[0] - 0.5).abs() <= 0.5 / 127.0 / 2.0 + 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn tiered_size_bytes_is_exact() {
+        let dh = 4;
+        let mut s = CpuLayerStore::new(2, dh);
+        let blk = blk_with_maw(2, 4, &[&[0.5, 0.5, 0.5], &[0.5, 0.5, 0.5]]);
+        s.add_evicted(&blk, 1.0, 4);
+        s.set_tier(0, HeadTier::Int8);
+        let h0 = &s.full[0];
+        let c0 = &s.ctx[0];
+        let expect_h0 = h0.maw.len() * 4
+            + h0.pos.len() * 8
+            + h0.qk.as_ref().unwrap().size_bytes()
+            + h0.qv.as_ref().unwrap().size_bytes();
+        let expect_c0 = c0.maw.len() * 4
+            + c0.idx.len() * 4
+            + c0.qk.as_ref().unwrap().size_bytes()
+            + c0.qv.as_ref().unwrap().size_bytes();
+        let h1 = &s.full[1];
+        let c1 = &s.ctx[1];
+        let expect_h1 = (h1.k.len() + h1.v.len() + h1.maw.len()) * 4 + h1.pos.len() * 8;
+        let expect_c1 = (c1.k.len() + c1.v.len() + c1.maw.len()) * 4 + c1.idx.len() * 4;
+        assert_eq!(s.size_bytes(), expect_h0 + expect_c0 + expect_h1 + expect_c1);
     }
 }

@@ -14,10 +14,14 @@ pub mod cpu_store;
 pub mod gpu_pool;
 pub mod manager;
 pub mod prefix_cache;
+pub mod quant;
+pub mod tier;
 
 pub use block::KvBlock;
 pub use cow::CowVec;
-pub use cpu_store::CpuLayerStore;
+pub use cpu_store::{CpuLayerStore, HeadTier};
 pub use gpu_pool::{BlockLease, GpuBlockPool, GpuLayerCache};
 pub use manager::KvManager;
 pub use prefix_cache::{PrefixCache, PrefixStats};
+pub use quant::{QuantSlab, QUANT_BLOCK};
+pub use tier::{TierMode, TierPolicy};

@@ -1,0 +1,283 @@
+//! Int8 KV quantization for the CPU-side store (the tiered-KV tentpole).
+//!
+//! A [`QuantSlab`] holds one head's K (or V) entries as symmetric int8
+//! with one f32 scale per block of [`QUANT_BLOCK`] entries:
+//! `q = round(x / scale).clamp(-127, 127)`, `scale = max_abs / 127`
+//! (0 for an all-zero block), so the round-trip error is ≤ `scale / 2`
+//! elementwise. The attention kernel dots quantized bytes with a single
+//! i32 accumulation and multiplies by the scales once per (query, entry)
+//! — no dequantized f32 copy is ever materialized (see
+//! `attention/cpu_attention.rs::run_job_range_tiered` and the accelerator
+//! guide's int8 + per-block-scale recipe).
+//!
+//! **Stale-scale safety:** the f32 originals of the current *partial*
+//! tail block are staged in the slab (`tail_f32`), so every append
+//! re-quantizes the tail block from originals — the block's scale always
+//! reflects every entry it covers, and quantization error never
+//! compounds across appends. Mutation sites in `kv/cpu_store.rs`
+//! (`add_evicted`, `reevaluate`) go through [`QuantSlab::push_entries`],
+//! which is what pins the "never serve stale scales" regression test.
+
+/// Entries per scale block in the full-store slabs. The contextual cache
+/// uses per-entry scales (`block = 1`) because its entries are gathered
+/// from arbitrary store positions.
+pub const QUANT_BLOCK: usize = 32;
+
+/// One head's K or V slab, quantized to int8 with per-block scales.
+#[derive(Debug, Clone, Default)]
+pub struct QuantSlab {
+    /// Quantized entries, `len() * d_head` bytes, block-major in time.
+    data: Vec<i8>,
+    /// One scale per block of `block` entries (last block may be partial).
+    scales: Vec<f32>,
+    /// f32 originals of the current partial tail block
+    /// (`(len() % block) * d_head` values) — appends re-quantize the tail
+    /// from these, never from already-rounded bytes.
+    tail_f32: Vec<f32>,
+    /// Values per entry.
+    d_head: usize,
+    /// Entries per scale block (≥ 1).
+    block: usize,
+    /// Entries stored.
+    n: usize,
+}
+
+impl QuantSlab {
+    /// An empty slab with the given entry width and scale-block length.
+    pub fn new(d_head: usize, block: usize) -> QuantSlab {
+        assert!(block >= 1, "scale block must hold at least one entry");
+        QuantSlab {
+            data: Vec::new(),
+            scales: Vec::new(),
+            tail_f32: Vec::new(),
+            d_head,
+            block,
+            n: 0,
+        }
+    }
+
+    /// Quantize a whole f32 slab (`n * d_head` values) in one call.
+    pub fn from_f32(rows: &[f32], d_head: usize, block: usize) -> QuantSlab {
+        let mut s = QuantSlab::new(d_head, block);
+        s.push_entries(rows);
+        s
+    }
+
+    /// Entries stored.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Values per entry.
+    pub fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    /// Entries per scale block.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    fn tail_entries(&self) -> usize {
+        self.tail_f32.len() / self.d_head.max(1)
+    }
+
+    /// Append `rows.len() / d_head` entries, re-quantizing the partial
+    /// tail block from its staged f32 originals so its scale covers every
+    /// entry in the block (the stale-scale fix).
+    pub fn push_entries(&mut self, rows: &[f32]) {
+        let dh = self.d_head;
+        assert_eq!(rows.len() % dh.max(1), 0, "rows must be whole entries");
+        if rows.is_empty() {
+            return;
+        }
+        // drop the previously-emitted partial tail; it re-emits below from
+        // the retained originals together with the new entries
+        let tail = self.tail_entries();
+        self.data.truncate((self.n - tail) * dh);
+        self.scales.truncate((self.n - tail) / self.block);
+        self.tail_f32.extend_from_slice(rows);
+        self.n += rows.len() / dh;
+        let bw = self.block * dh;
+        let mut start = 0usize;
+        while self.tail_f32.len() - start >= bw {
+            let (q, scale) = quantize_block(&self.tail_f32[start..start + bw]);
+            self.data.extend_from_slice(&q);
+            self.scales.push(scale);
+            start += bw;
+        }
+        self.tail_f32.drain(..start);
+        if !self.tail_f32.is_empty() {
+            let (q, scale) = quantize_block(&self.tail_f32);
+            self.data.extend_from_slice(&q);
+            self.scales.push(scale);
+        }
+        debug_assert_eq!(self.data.len(), self.n * dh);
+        debug_assert_eq!(self.scales.len(), self.n.div_ceil(self.block));
+    }
+
+    /// Append one already-quantized entry with its own scale. Only valid
+    /// on per-entry-scale slabs (`block == 1`) — the contextual cache's
+    /// gather path, which copies bytes + scales from the full-store slab
+    /// so packing adds no quantization error.
+    pub fn push_quantized(&mut self, bytes: &[i8], scale: f32) {
+        assert_eq!(self.block, 1, "per-entry push needs block == 1");
+        assert_eq!(bytes.len(), self.d_head);
+        self.data.extend_from_slice(bytes);
+        self.scales.push(scale);
+        self.n += 1;
+    }
+
+    /// The quantized bytes of entry `t`.
+    pub fn entry(&self, t: usize) -> &[i8] {
+        &self.data[t * self.d_head..(t + 1) * self.d_head]
+    }
+
+    /// The scale of entry `t`'s block.
+    pub fn scale_of(&self, t: usize) -> f32 {
+        self.scales[t / self.block]
+    }
+
+    /// Dequantize entry `t` into `out` (tests + oracle comparisons).
+    pub fn dequantize_entry(&self, t: usize, out: &mut [f32]) {
+        let s = self.scale_of(t);
+        for (o, &q) in out.iter_mut().zip(self.entry(t)) {
+            *o = q as f32 * s;
+        }
+    }
+
+    /// Dequantize the whole slab (tests only — the serving path never
+    /// materializes this).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n * self.d_head];
+        for t in 0..self.n {
+            let dh = self.d_head;
+            self.dequantize_entry(t, &mut out[t * dh..(t + 1) * dh]);
+        }
+        out
+    }
+
+    /// Exact heap bytes of the tiered buffers: quantized data (1 B/value),
+    /// scales (4 B each), and the staged f32 tail originals (4 B each).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4 + self.tail_f32.len() * 4
+    }
+}
+
+/// Quantize one block of f32 values: returns the int8 bytes and the
+/// block scale (`max_abs / 127`; 0 for an all-zero block).
+fn quantize_block(vals: &[f32]) -> (Vec<i8>, f32) {
+    let max_abs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        return (vec![0i8; vals.len()], 0.0);
+    }
+    let scale = max_abs / 127.0;
+    let inv = 127.0 / max_abs;
+    let q = vals
+        .iter()
+        .map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+/// Quantize one f32 row (a query) to int8 in `out`, returning its scale.
+pub fn quantize_row(row: &[f32], out: &mut [i8]) -> f32 {
+    let (q, scale) = quantize_block(row);
+    out.copy_from_slice(&q);
+    scale
+}
+
+/// Integer dot product of two int8 rows (one i32 accumulation; the
+/// caller applies `scale_a * scale_b` once on the result).
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_within_half_scale() {
+        let rows: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let s = QuantSlab::from_f32(&rows, 8, 4);
+        let deq = s.dequantize();
+        for (t, (a, b)) in rows.chunks(8).zip(deq.chunks(8)).enumerate() {
+            let scale = s.scale_of(t);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert!(
+                    (x - y).abs() <= scale / 2.0 + 1e-7,
+                    "entry {t}: {x} vs {y} (scale {scale})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_block_has_zero_scale() {
+        let s = QuantSlab::from_f32(&[0.0; 16], 4, 4);
+        assert_eq!(s.scale_of(0), 0.0);
+        assert!(s.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn incremental_push_matches_one_shot() {
+        // appends re-quantize the tail from originals, so pushing entry by
+        // entry must yield byte-identical data + scales to one big push
+        let rows: Vec<f32> = (0..40).map(|i| (i as f32).cos() * 2.0).collect();
+        let dh = 4;
+        let whole = QuantSlab::from_f32(&rows, dh, 3);
+        let mut inc = QuantSlab::new(dh, 3);
+        for chunk in rows.chunks(dh) {
+            inc.push_entries(chunk);
+        }
+        assert_eq!(whole.len(), inc.len());
+        for t in 0..whole.len() {
+            assert_eq!(whole.entry(t), inc.entry(t), "entry {t}");
+            assert_eq!(whole.scale_of(t), inc.scale_of(t), "scale of {t}");
+        }
+    }
+
+    #[test]
+    fn size_bytes_is_exact() {
+        let rows: Vec<f32> = (0..28).map(|i| i as f32).collect(); // 7 entries, dh 4
+        let s = QuantSlab::from_f32(&rows, 4, 2);
+        // 7 entries × 4 B data + 4 scale blocks × 4 B + 1-entry tail × 4 vals × 4 B
+        assert_eq!(s.size_bytes(), 28 + 4 * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn integer_dot_matches_scaled_f32_dot() {
+        let a: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let b: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).cos()).collect();
+        let mut qa = vec![0i8; 16];
+        let mut qb = vec![0i8; 16];
+        let sa = quantize_row(&a, &mut qa);
+        let sb = quantize_row(&b, &mut qb);
+        let exact: f32 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+        let quant = dot_i8(&qa, &qb) as f32 * (sa * sb);
+        assert!((exact - quant).abs() < 0.05, "{exact} vs {quant}");
+    }
+
+    #[test]
+    fn per_entry_scale_push() {
+        let mut s = QuantSlab::new(2, 1);
+        s.push_quantized(&[127, -127], 0.5);
+        s.push_quantized(&[10, 0], 0.25);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.scale_of(0), 0.5);
+        assert_eq!(s.scale_of(1), 0.25);
+        let mut out = [0.0f32; 2];
+        s.dequantize_entry(0, &mut out);
+        assert_eq!(out, [63.5, -63.5]);
+    }
+}

@@ -1,0 +1,226 @@
+//! Per-head KV tier selection (the HeadInfer-style half of the tiered-KV
+//! tentpole): pick, per head, how its CPU-resident KV is stored —
+//! [`HeadTier::F32`], [`HeadTier::Int8`], or [`HeadTier::WindowOnly`] —
+//! from the head's observed attention-mass distribution, reusing the
+//! saliency statistics of `analysis/attn_stats.rs` (`coverage_per_head`,
+//! `top_decile_mass`) over the store's MAW rows.
+//!
+//! The global override (`hgca serve --kv-tier {f32,int8,auto}`) maps to
+//! [`TierMode`]: `F32` disables tiering entirely (the default — bitwise
+//! identical to the pre-tier engine), `Int8` quantizes every head, and
+//! `Auto` decides per head:
+//!
+//! * **diffuse** heads (high 90%-mass coverage — attention spread over
+//!   many entries) go `Int8`: per-entry rounding error washes out across
+//!   the many attended entries, and diffuse heads are exactly the ones
+//!   whose stores grow largest, so they buy the most capacity;
+//! * **extremely peaked** heads (tiny coverage *and* top-decile mass ≈
+//!   everything) go `WindowOnly`: their old-context mass rides on a
+//!   handful of entries already favored by the β-selection window, so
+//!   dropping the long tail costs the least;
+//! * everything else stays `F32`.
+//!
+//! Decisions defer until a head has seen [`TierPolicy::min_entries`]
+//! evicted entries — tiering on a near-empty store would read noise.
+//! Applied tiers ratchet one way ([`CpuLayerStore::set_tier`]).
+
+use crate::analysis::{coverage_per_head, top_decile_mass};
+
+use super::cpu_store::{CpuLayerStore, HeadTier};
+
+/// Global tier override (the `--kv-tier` flag; see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TierMode {
+    /// No tiering: every head stays on the f32 path (bitwise-identical
+    /// tokens to the pre-tier engine).
+    #[default]
+    F32,
+    /// Quantize every head's CPU-resident KV to int8.
+    Int8,
+    /// Per-head decisions from the saliency stats (module docs).
+    Auto,
+}
+
+impl TierMode {
+    /// Parse the `--kv-tier` flag value.
+    pub fn parse(s: &str) -> anyhow::Result<TierMode> {
+        Ok(match s {
+            "f32" => TierMode::F32,
+            "int8" => TierMode::Int8,
+            "auto" => TierMode::Auto,
+            other => anyhow::bail!("unknown kv tier '{other}' (expected f32|int8|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TierMode::F32 => "f32",
+            TierMode::Int8 => "int8",
+            TierMode::Auto => "auto",
+        }
+    }
+}
+
+/// Per-head tier chooser. Stateless: [`TierPolicy::decide`] reads the
+/// store's MAW rows fresh every call, and [`TierPolicy::apply`] feeds the
+/// decisions through the store's one-way ratchet.
+#[derive(Debug, Clone)]
+pub struct TierPolicy {
+    pub mode: TierMode,
+    /// Entries a head must hold before `Auto` decides (noise gate).
+    pub min_entries: usize,
+    /// `Auto`: coverage-to-reach-90%-mass above this ⇒ diffuse ⇒ `Int8`.
+    pub diffuse_coverage: f32,
+    /// `Auto`: coverage below this *and* top-decile mass above
+    /// [`TierPolicy::peak_mass`] ⇒ `WindowOnly`.
+    pub peak_coverage: f32,
+    /// `Auto`: top-decile mass threshold for the `WindowOnly` branch.
+    pub peak_mass: f32,
+}
+
+impl Default for TierPolicy {
+    fn default() -> Self {
+        TierPolicy {
+            mode: TierMode::F32,
+            min_entries: 64,
+            diffuse_coverage: 0.5,
+            peak_coverage: 0.05,
+            peak_mass: 0.95,
+        }
+    }
+}
+
+impl TierPolicy {
+    pub fn new(mode: TierMode) -> TierPolicy {
+        TierPolicy {
+            mode,
+            ..TierPolicy::default()
+        }
+    }
+
+    /// The target tier per head. `F32` mode returns all-`F32`; `Int8`
+    /// returns all-`Int8` once past the noise gate; `Auto` maps each
+    /// head's normalized MAW row through the saliency stats.
+    pub fn decide(&self, store: &CpuLayerStore) -> Vec<HeadTier> {
+        let n = store.len();
+        if self.mode == TierMode::F32 || n < self.min_entries {
+            return vec![HeadTier::F32; store.heads];
+        }
+        if self.mode == TierMode::Int8 {
+            return vec![HeadTier::Int8; store.heads];
+        }
+        store
+            .full
+            .iter()
+            .map(|hs| {
+                // normalize a copy so the 90%-mass target is meaningful on
+                // raw (un-normalized) MAW rows
+                let sum: f32 = hs.maw.iter().sum();
+                if sum <= 0.0 {
+                    // no recorded mass: the diffuse case by convention
+                    return HeadTier::Int8;
+                }
+                let row: Vec<f32> = hs.maw.iter().map(|m| m / sum).collect();
+                let head_probs = vec![vec![row]];
+                let cov = coverage_per_head(&head_probs, 0.9)[0];
+                let peak = top_decile_mass(&head_probs);
+                if cov > self.diffuse_coverage {
+                    HeadTier::Int8
+                } else if cov < self.peak_coverage && peak > self.peak_mass {
+                    HeadTier::WindowOnly
+                } else {
+                    HeadTier::F32
+                }
+            })
+            .collect()
+    }
+
+    /// Decide and apply through [`CpuLayerStore::set_tier`] (the one-way
+    /// ratchet drops any decision that would loosen an earlier one).
+    pub fn apply(&self, store: &mut CpuLayerStore) {
+        if self.mode == TierMode::F32 {
+            return; // fast path: never touches the store
+        }
+        for (h, tier) in self.decide(store).into_iter().enumerate() {
+            store.set_tier(h, tier);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::KvBlock;
+
+    fn store_with_maw(maws: &[Vec<f32>]) -> CpuLayerStore {
+        let heads = maws.len();
+        let dh = 2;
+        let len = maws[0].len();
+        let mut blk = KvBlock::new(heads, dh, len);
+        for h in 0..heads {
+            for t in 0..len {
+                blk.maw[h * len + t] = maws[h][t];
+                blk.k[(h * len + t) * dh] = (t + 1) as f32;
+                blk.v[(h * len + t) * dh] = -((t + 1) as f32);
+            }
+        }
+        let mut s = CpuLayerStore::new(heads, dh);
+        s.add_evicted(&blk, 1.0, len * 2);
+        s
+    }
+
+    fn diffuse_row(n: usize) -> Vec<f32> {
+        vec![1.0 / n as f32; n]
+    }
+
+    fn peaked_row(n: usize) -> Vec<f32> {
+        let mut r = vec![1e-6; n];
+        r[0] = 1.0;
+        r
+    }
+
+    #[test]
+    fn f32_mode_never_tiers() {
+        let mut s = store_with_maw(&[diffuse_row(128)]);
+        TierPolicy::new(TierMode::F32).apply(&mut s);
+        assert_eq!(s.tier_counts(), (1, 0, 0));
+    }
+
+    #[test]
+    fn int8_mode_tiers_every_head_past_gate() {
+        let mut s = store_with_maw(&[diffuse_row(128), peaked_row(128)]);
+        TierPolicy::new(TierMode::Int8).apply(&mut s);
+        assert_eq!(s.tier_counts(), (0, 2, 0));
+    }
+
+    #[test]
+    fn min_entries_gates_decisions() {
+        let s = store_with_maw(&[diffuse_row(8)]);
+        let p = TierPolicy::new(TierMode::Int8);
+        assert_eq!(p.decide(&s), vec![HeadTier::F32]);
+    }
+
+    #[test]
+    fn auto_maps_diffuse_to_int8_and_peaked_to_window() {
+        let n = 256;
+        // middle head: ~95% of mass on 32 entries — coverage ≈ 0.12 sits
+        // between the diffuse and peaked thresholds, so neither fires
+        let mut mid = vec![0.05 / 224.0; n];
+        for m in mid.iter_mut().take(32) {
+            *m = 0.95 / 32.0;
+        }
+        let s = store_with_maw(&[diffuse_row(n), peaked_row(n), mid]);
+        let p = TierPolicy::new(TierMode::Auto);
+        let tiers = p.decide(&s);
+        assert_eq!(tiers[0], HeadTier::Int8, "uniform head is diffuse");
+        assert_eq!(tiers[1], HeadTier::WindowOnly, "single-spike head");
+        assert_eq!(tiers[2], HeadTier::F32, "in-between head stays f32");
+    }
+
+    #[test]
+    fn zero_mass_head_defaults_to_int8() {
+        let s = store_with_maw(&[vec![0.0; 128]]);
+        let p = TierPolicy::new(TierMode::Auto);
+        assert_eq!(p.decide(&s), vec![HeadTier::Int8]);
+    }
+}

@@ -34,6 +34,10 @@ USAGE:
                                           # either way — pair with --kv-blocks or
                                           # --kv-headroom > 1 so spare blocks exist
                 [--prefix-cache-entries N]  # resident cached prefixes cap (default 32)
+                [--kv-tier f32|int8|auto] # CPU KV storage tier: f32 (default,
+                                          # bitwise-identical to the untiered
+                                          # engine), int8 (quantize every head),
+                                          # auto (per-head from attention stats)
                 # admission is earliest-deadline-first, gated on KV block
                 # availability; POST /v1/generate accepts "stream": true for
                 # chunked-transfer token streaming, "deadline_ms" per request,
@@ -44,7 +48,7 @@ USAGE:
   hgca analyze  [--model tiny] [--len 256]      # attention-pattern stats (Figs. 3-5)
   hgca simulate [--system hgca|flexgen|h2o|infinigen|hf] [--model opt-6.7b] [--batch 4]
   hgca replay   FILE.scn ... [--nodes N] [--seed N] [--json PATH] [--verify]
-                [--prefix-cache] [--no-prefix-cache]
+                [--prefix-cache] [--no-prefix-cache] [--kv-tier f32|int8|auto]
                 # replay scenario-DSL workload traces (docs/SCENARIOS.md)
                 # against the real serving stack; --verify re-runs each
                 # scenario (same seed twice, then 1/2/4 synthetic NUMA
@@ -88,6 +92,7 @@ fn engine_config(args: &Args) -> Result<HgcaConfig> {
         beta: args.f64("beta", 1.0)? as f32,
         cpu_threads: args.usize("threads", 4)?,
         alpha: args.f64("alpha", 0.3)? as f32,
+        kv_tier: hgca::kv::TierMode::parse(args.get_or("kv-tier", "f32"))?,
         ..Default::default()
     };
     cfg = cfg.with_window(args.usize("window", 256)?);
@@ -262,7 +267,13 @@ fn run() -> Result<()> {
                     let mut engine = Engine::new(&mr, cfg.clone(), policy.clone());
                     replay(&mut engine, &scn, &ReplayOptions { nodes: n, seed, prefix_cache })
                 };
-                let report = run(nodes)?;
+                let mut report = run(nodes)?;
+                // a tiered run is a different workload for gating purposes:
+                // suffix the scenario name so its report row matches a
+                // distinct baseline entry (e.g. steady_decode_int8)
+                if cfg.kv_tier != hgca::kv::TierMode::F32 {
+                    report.scenario = format!("{}_{}", report.scenario, cfg.kv_tier.name());
+                }
                 if args.flag("verify") {
                     let again = run(nodes)?;
                     anyhow::ensure!(

@@ -58,6 +58,19 @@ pub struct Metrics {
     /// pool's total capacity — unlike a shed, retrying cannot succeed
     /// without a larger `--kv-blocks` (the "won't-ever-fit" 429)
     pub requests_rejected_capacity: u64,
+    /// (sequence, layer, head) CPU stores currently on each tier — gauges,
+    /// refreshed every engine step (`--kv-tier`; f32 is the only non-zero
+    /// one under the default mode)
+    pub kv_tier_f32: u64,
+    pub kv_tier_int8: u64,
+    pub kv_tier_window: u64,
+    /// heads currently holding int8-quantized CPU KV (== `kv_tier_int8`;
+    /// kept as its own counter so dashboards keying on quantization don't
+    /// have to know the tier taxonomy)
+    pub kv_quant_heads: u64,
+    /// bytes the int8 tiers currently save vs f32 storage of the same
+    /// entries (gauge; Σ over int8 heads of `f32_bytes − quant_bytes`)
+    pub kv_quant_bytes_saved: u64,
 }
 
 impl Metrics {
@@ -90,6 +103,23 @@ impl Metrics {
     /// flight (the overlap win; 0 under forced-sequential stepping).
     pub fn observe_cpu_attn_overlap(&mut self, secs: f64) {
         self.cpu_attn_overlap_secs += secs;
+    }
+
+    /// Refresh the KV-tier gauges (per engine step: current per-head tier
+    /// census across every sequence × layer, and the bytes the int8 tiers
+    /// save right now).
+    pub fn observe_kv_tiers(
+        &mut self,
+        f32_heads: u64,
+        int8_heads: u64,
+        window_heads: u64,
+        bytes_saved: u64,
+    ) {
+        self.kv_tier_f32 = f32_heads;
+        self.kv_tier_int8 = int8_heads;
+        self.kv_tier_window = window_heads;
+        self.kv_quant_heads = int8_heads;
+        self.kv_quant_bytes_saved = bytes_saved;
     }
 
     pub fn tbt_summary(&self) -> Option<Summary> {
@@ -163,5 +193,17 @@ mod tests {
     #[test]
     fn empty_summary_none() {
         assert!(Metrics::new().tbt_summary().is_none());
+    }
+
+    #[test]
+    fn kv_tier_gauges_overwrite_not_accumulate() {
+        let mut m = Metrics::new();
+        m.observe_kv_tiers(4, 3, 1, 1000);
+        m.observe_kv_tiers(2, 5, 1, 900);
+        assert_eq!(m.kv_tier_f32, 2);
+        assert_eq!(m.kv_tier_int8, 5);
+        assert_eq!(m.kv_tier_window, 1);
+        assert_eq!(m.kv_quant_heads, 5, "quant-head gauge mirrors the int8 tier");
+        assert_eq!(m.kv_quant_bytes_saved, 900);
     }
 }

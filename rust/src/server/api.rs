@@ -284,6 +284,13 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         ("kv_blocks_in_use", Json::num(engine.kv_pool.in_use() as f64)),
         ("kv_blocks_reclaimed", Json::num(engine.kv_pool.reclaimed_blocks() as f64)),
         ("kv_blocks_capacity", Json::num(engine.kv_pool.capacity().unwrap_or(0) as f64)),
+        // tiered CPU KV store (--kv-tier): per-head tier census gauges and
+        // the bytes the int8 tiers currently save vs f32 storage
+        ("kv_tier_f32", Json::num(m.kv_tier_f32 as f64)),
+        ("kv_tier_int8", Json::num(m.kv_tier_int8 as f64)),
+        ("kv_tier_window", Json::num(m.kv_tier_window as f64)),
+        ("kv_quant_heads", Json::num(m.kv_quant_heads as f64)),
+        ("kv_quant_bytes_saved", Json::num(m.kv_quant_bytes_saved as f64)),
     ];
     // cross-request prefix KV reuse (radix cache); counters stay present —
     // as zeros — when the cache is disabled, so scrapers never lose fields

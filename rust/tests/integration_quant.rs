@@ -1,0 +1,241 @@
+//! f32-oracle quality harness for the tiered CPU KV store (ISSUE 9
+//! acceptance):
+//!
+//! * **Oracle error bound** — int8-tiered attention over a store vs the
+//!   f32 path over a bitwise-identical store: per-head max-abs error of
+//!   the LSE-merged output stays ≤ 1e-2.
+//! * **Bitwise determinism** — the quantized kernel's output is bitwise
+//!   identical across pool worker counts {1, 2, 7, 64} and across
+//!   1/2/4-node synthetic NUMA topologies (same contract the f32 path
+//!   has always had).
+//! * **Compression floor** — every int8-tiered head stores its K/V in at
+//!   most 1/3 of the f32 bytes (`quant_bytes_saved` ≥ 2× the resident
+//!   quantized bytes).
+//!
+//! The harness drives the real gather → pool → LSE-merge pipeline
+//! (`Policy::gather_payloads` → `AttnPool::submit_tiered` →
+//! `merge_states`) against plain `CpuLayerStore`s, so it needs no model
+//! artifacts and pins exactly the layers the engine composes.
+
+use hgca::attention::{merge_states, AttnPool, JobPayload, OwnedJobs, OwnedTieredJobs, TaskSplit};
+use hgca::engine::Policy;
+use hgca::kv::{CpuLayerStore, HeadTier, KvBlock};
+use hgca::topology::Topology;
+use hgca::util::rng::Rng;
+
+const HEADS: usize = 4;
+const DH: usize = 8;
+const ENTRIES: usize = 128;
+
+/// A store with `ENTRIES` seeded-random evicted entries per head. Same
+/// seed → bitwise-identical store, which is what makes the quantized vs
+/// f32 comparison an apples-to-apples oracle.
+fn build_store(seed: u64) -> CpuLayerStore {
+    let mut rng = Rng::new(seed);
+    let mut blk = KvBlock::new(HEADS, DH, ENTRIES);
+    rng.fill_normal(&mut blk.k, 0.7);
+    rng.fill_normal(&mut blk.v, 0.7);
+    for m in blk.maw.iter_mut() {
+        *m = 0.1 + 0.9 * rng.f32();
+    }
+    for (t, p) in blk.pos.iter_mut().enumerate() {
+        *p = t;
+    }
+    let mut s = CpuLayerStore::new(HEADS, DH);
+    s.add_evicted(&blk, 1.0, ENTRIES * 2);
+    s
+}
+
+fn queries(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut q = vec![0.0f32; HEADS * DH];
+    rng.fill_normal(&mut q, 0.7);
+    q
+}
+
+/// Synthetic GPU-side partial state to merge the CPU side into (the
+/// engine's window attention output). Finite lse of comparable magnitude
+/// so the merge weights both sides.
+fn gpu_partial(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut o = vec![0.0f32; HEADS * DH];
+    rng.fill_normal(&mut o, 0.7);
+    let lse: Vec<f32> = (0..HEADS).map(|h| 3.0 + 0.25 * h as f32).collect();
+    (o, lse)
+}
+
+fn tiered_payloads(store: &CpuLayerStore) -> Vec<JobPayload> {
+    Policy::Hgca { beta: 1.0 }.gather_payloads(store, ENTRIES * 2, true)
+}
+
+#[test]
+fn int8_tier_tracks_f32_oracle_within_1e2_after_merge() {
+    let f32_store = build_store(42);
+    let mut quant_store = build_store(42);
+    for h in 0..HEADS {
+        quant_store.set_tier(h, HeadTier::Int8);
+    }
+    let q = queries(7);
+    let pool = AttnPool::new(2);
+
+    // f32 reference over the identical store
+    let f32_jobs: Vec<(Vec<f32>, Vec<f32>, usize)> =
+        Policy::FullOffload.gather_jobs(&f32_store, ENTRIES * 2);
+    let oracle = pool
+        .submit_placed(
+            OwnedJobs { kvs: f32_jobs, q: q.clone(), q_valid: None },
+            1,
+            DH,
+            TaskSplit::EvenJobs { max_parallel: 4 },
+            false,
+            None,
+        )
+        .wait();
+
+    let quant = pool
+        .submit_tiered(
+            OwnedTieredJobs { kvs: tiered_payloads(&quant_store), q, q_valid: None },
+            1,
+            DH,
+            TaskSplit::EvenJobs { max_parallel: 4 },
+            false,
+            None,
+        )
+        .wait();
+    for p in tiered_payloads(&quant_store) {
+        assert!(matches!(p, JobPayload::Int8 { .. }), "every head must be int8-tiered");
+    }
+
+    // merge each into the same synthetic GPU partial state, then compare
+    let (o_ref, lse_ref) = gpu_partial(99);
+    let (mut o_a, mut lse_a) = (o_ref.clone(), lse_ref.clone());
+    let (mut o_b, mut lse_b) = (o_ref, lse_ref);
+    merge_states(&mut o_a, &mut lse_a, &oracle.o, &oracle.lse, DH);
+    merge_states(&mut o_b, &mut lse_b, &quant.o, &quant.lse, DH);
+    for h in 0..HEADS {
+        let max_abs = (0..DH)
+            .map(|j| (o_a[h * DH + j] - o_b[h * DH + j]).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_abs <= 1e-2,
+            "head {h}: merged-output max-abs error {max_abs} exceeds 1e-2"
+        );
+        assert!(
+            (lse_a[h] - lse_b[h]).abs() <= 1e-2,
+            "head {h}: merged lse drift {}",
+            (lse_a[h] - lse_b[h]).abs()
+        );
+    }
+}
+
+#[test]
+fn quantized_path_bitwise_deterministic_across_workers_and_topologies() {
+    let mut store = build_store(11);
+    // mixed tiers: two int8 heads, one window-only, one f32
+    store.set_tier(0, HeadTier::Int8);
+    store.set_tier(1, HeadTier::Int8);
+    store.set_tier(2, HeadTier::WindowOnly);
+    let q = queries(13);
+    let split = TaskSplit::ByEntries { per_task: 48, max_tasks: 16 };
+
+    let reference = AttnPool::new(1)
+        .submit_tiered(
+            OwnedTieredJobs { kvs: tiered_payloads(&store), q: q.clone(), q_valid: None },
+            1,
+            DH,
+            split,
+            true,
+            None,
+        )
+        .wait();
+    assert!(
+        hgca::attention::is_empty_lse(reference.lse[2]),
+        "window-only head must produce the empty-LSE sentinel"
+    );
+
+    for workers in [1usize, 2, 7, 64] {
+        let pool = AttnPool::new(workers);
+        let out = pool
+            .submit_tiered(
+                OwnedTieredJobs { kvs: tiered_payloads(&store), q: q.clone(), q_valid: None },
+                1,
+                DH,
+                split,
+                true,
+                None,
+            )
+            .wait();
+        assert_eq!(out.o, reference.o, "workers={workers}");
+        assert_eq!(out.lse, reference.lse, "workers={workers}");
+        assert_eq!(out.probs, reference.probs, "workers={workers}");
+    }
+    for nodes in [1usize, 2, 4] {
+        let pool = AttnPool::with_topology(3, Topology::synthetic(nodes));
+        let map: Vec<usize> = (0..HEADS).map(|h| h % nodes).collect();
+        let out = pool
+            .submit_tiered(
+                OwnedTieredJobs { kvs: tiered_payloads(&store), q: q.clone(), q_valid: None },
+                1,
+                DH,
+                split,
+                true,
+                Some(&map),
+            )
+            .wait();
+        assert_eq!(out.o, reference.o, "nodes={nodes}");
+        assert_eq!(out.lse, reference.lse, "nodes={nodes}");
+        assert_eq!(out.probs, reference.probs, "nodes={nodes}");
+    }
+}
+
+#[test]
+fn window_only_head_contributes_nothing_and_merge_keeps_gpu_state() {
+    let mut store = build_store(21);
+    store.set_tier(3, HeadTier::WindowOnly);
+    let q = queries(23);
+    let out = AttnPool::new(0)
+        .submit_tiered(
+            OwnedTieredJobs { kvs: tiered_payloads(&store), q, q_valid: None },
+            1,
+            DH,
+            TaskSplit::EvenJobs { max_parallel: 4 },
+            false,
+            None,
+        )
+        .wait();
+    // the dropped head's CPU partial is the empty sentinel → merging it
+    // into the GPU state must leave that state untouched
+    let (o_ref, lse_ref) = gpu_partial(31);
+    let (mut o, mut lse) = (o_ref.clone(), lse_ref.clone());
+    merge_states(&mut o, &mut lse, &out.o, &out.lse, DH);
+    assert_eq!(&o[3 * DH..4 * DH], &o_ref[3 * DH..4 * DH]);
+    assert_eq!(lse[3], lse_ref[3]);
+    // the untiered heads DID contribute
+    assert_ne!(&o[..DH], &o_ref[..DH]);
+}
+
+#[test]
+fn int8_tier_compresses_at_least_three_fold() {
+    let mut store = build_store(33);
+    for h in 0..HEADS {
+        store.set_tier(h, HeadTier::Int8);
+    }
+    let mut resident = 0usize;
+    for h in 0..HEADS {
+        let hs = &store.full[h];
+        let qk = hs.qk.as_ref().expect("int8 head has quant k");
+        let qv = hs.qv.as_ref().expect("int8 head has quant v");
+        let actual = qk.size_bytes() + qv.size_bytes();
+        let f32_equiv = 2 * ENTRIES * DH * 4;
+        assert!(
+            f32_equiv >= 3 * actual,
+            "head {h}: {actual} quant bytes vs {f32_equiv} f32 bytes (< 3x)"
+        );
+        resident += actual;
+    }
+    assert!(
+        store.quant_bytes_saved() as usize >= 2 * resident,
+        "saved {} vs resident {resident}",
+        store.quant_bytes_saved()
+    );
+}

@@ -3,7 +3,7 @@
 //! state transitions, sparsification algebra. These run without artifacts.
 
 use hgca::config::{HgcaConfig, ModelConfig};
-use hgca::kv::{KvBlock, KvManager};
+use hgca::kv::{KvBlock, KvManager, QuantSlab, QUANT_BLOCK};
 use hgca::util::proptest::{check, ensure};
 use hgca::util::rng::Rng;
 
@@ -209,5 +209,80 @@ fn prop_merge_then_split_roundtrip_random_layouts() {
         let lm = merge_head(&mut oa, la, &ob, lb);
         hgca::util::proptest::ensure_all_close(&oa, &of, 2e-4, "o")?;
         hgca::util::proptest::ensure_close(lm, lf, 2e-4, "lse")
+    });
+}
+
+#[test]
+fn prop_int8_roundtrip_error_within_half_scale() {
+    // symmetric int8: |x - dequant(quant(x))| ≤ scale/2 elementwise, for
+    // every slab shape — all-zero, single-element, ±max-magnitude blocks,
+    // and generic normals — at several scale-block lengths
+    check("int8_roundtrip", 60, |rng| {
+        let shape = rng.range(0, 4);
+        let (n, dh) = if shape == 3 {
+            (1usize, 1usize) // single-element slab
+        } else {
+            (1 + rng.range(0, 3 * QUANT_BLOCK), 1 + rng.range(0, 16))
+        };
+        let mut rows = vec![0.0f32; n * dh];
+        match shape {
+            0 => {} // all-zero blocks → scale 0, exact round-trip
+            2 => {
+                // ±max-magnitude entries mixed with small ones
+                for v in rows.iter_mut() {
+                    let r = rng.f32();
+                    *v = if r < 0.25 {
+                        1e30
+                    } else if r < 0.5 {
+                        -1e30
+                    } else {
+                        rng.normal()
+                    };
+                }
+            }
+            _ => rng.fill_normal(&mut rows, 2.0),
+        }
+        let block = *rng.choice(&[1usize, 2, 5, QUANT_BLOCK]);
+        let s = QuantSlab::from_f32(&rows, dh, block);
+        ensure(s.len() == n, format!("slab len {} vs {n}", s.len()))?;
+        let deq = s.dequantize();
+        for t in 0..n {
+            let scale = s.scale_of(t);
+            // a hair of slack for the f32 divide/multiply in scale itself
+            let bound = scale / 2.0 + scale * 1e-5 + 1e-7;
+            for j in 0..dh {
+                let (x, y) = (rows[t * dh + j], deq[t * dh + j]);
+                ensure(
+                    (x - y).abs() <= bound,
+                    format!("entry {t}[{j}]: {x} vs {y} exceeds scale/2 ({scale})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_size_bytes_exactly_accounts_tiered_buffers() {
+    // size_bytes() = quantized data (1 B/value) + per-block scales
+    // (4 B each) + staged f32 tail originals (4 B each), exactly —
+    // across random incremental append patterns
+    check("quant_size_exact", 40, |rng| {
+        let dh = 1 + rng.range(0, 12);
+        let block = 1 + rng.range(0, 40);
+        let mut s = QuantSlab::new(dh, block);
+        let mut n = 0usize;
+        for _ in 0..rng.range(1, 6) {
+            let add = rng.range(0, 50);
+            let mut rows = vec![0.0f32; add * dh];
+            rng.fill_normal(&mut rows, 1.0);
+            s.push_entries(&rows);
+            n += add;
+        }
+        let expect = n * dh + n.div_ceil(block) * 4 + (n % block) * dh * 4;
+        ensure(
+            s.size_bytes() == expect,
+            format!("size {} vs {expect} (n={n} dh={dh} block={block})", s.size_bytes()),
+        )
     });
 }

@@ -28,6 +28,11 @@
 //!                 [--check-digest]
 //!   scenario_gate --refresh [--slack-pct 25] [--baseline ...] [--current ...]
 //!
+//! `--current` accepts a comma-separated list of reports (e.g.
+//! `SCENARIO_ci.json,SCENARIO_int8_ci.json` — one replay per engine
+//! config); their scenario entries are concatenated and gated against the
+//! one baseline.
+//!
 //! Refresh after an intentional scheduling change with:
 //!   cargo run --release --bin hgca -- replay scenarios/*.scn --verify --json SCENARIO_ci.json
 //!   cargo run --release --bin scenario_gate -- --refresh
@@ -84,6 +89,20 @@ fn load(path: &str) -> Result<Vec<Entry>, String> {
             name,
             nums,
         });
+    }
+    Ok(out)
+}
+
+/// Load one or more reports: `--current` accepts a comma-separated list
+/// of paths (the CI job replays the scenario suite once per engine
+/// config — default and `--kv-tier int8` — into separate reports); the
+/// scenario entries are concatenated in order. Replay suffixes tiered
+/// runs' scenario names (`steady_decode_int8`), so entries from the two
+/// reports never collide.
+fn load_many(paths: &str) -> Result<Vec<Entry>, String> {
+    let mut out = Vec::new();
+    for p in paths.split(',').filter(|p| !p.is_empty()) {
+        out.extend(load(p)?);
     }
     Ok(out)
 }
@@ -206,7 +225,7 @@ fn pretty(v: &Json, indent: usize, out: &mut String) {
 fn refresh_baseline(baseline_path: &str, current_path: &str, slack: f64) -> Result<(), String> {
     let text = std::fs::read_to_string(baseline_path).map_err(|e| format!("{baseline_path}: {e}"))?;
     let mut doc = Json::parse(&text).map_err(|e| format!("{baseline_path}: {e}"))?;
-    let current = load(current_path)?;
+    let current = load_many(current_path)?;
     println!("scenario gate: refreshing {baseline_path} from {current_path}");
     let scenarios = match &mut doc {
         Json::Obj(top) => match top.get_mut("scenarios") {
@@ -274,7 +293,7 @@ fn run() -> Result<bool, String> {
     }
 
     let baseline = load(baseline_path)?;
-    let current = load(current_path)?;
+    let current = load_many(current_path)?;
     println!("scenario gate: {current_path} vs {baseline_path}");
 
     let (errors, warnings) = drift(&baseline, &current);
@@ -405,6 +424,26 @@ mod tests {
         pretty(&doc, 0, &mut out);
         assert_eq!(Json::parse(&out).unwrap(), doc);
         assert!(out.contains("\n  \"scenarios\""), "objects are indented:\n{out}");
+    }
+
+    #[test]
+    fn load_many_concatenates_comma_separated_reports() {
+        let dir = std::env::temp_dir();
+        let a = dir.join("scenario_gate_load_many_a.json");
+        let b = dir.join("scenario_gate_load_many_b.json");
+        std::fs::write(&a, r#"{"scenarios":[{"name":"steady","completed":18}]}"#).unwrap();
+        std::fs::write(&b, r#"{"scenarios":[{"name":"steady_int8","completed":18}]}"#).unwrap();
+        let joined = format!("{},{}", a.display(), b.display());
+        let entries = load_many(&joined).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].name, "steady");
+        assert_eq!(entries[1].name, "steady_int8");
+        assert_eq!(entries[1].nums["completed"], 18.0);
+        // a single path still works, and a missing file is a load error
+        assert_eq!(load_many(&a.display().to_string()).unwrap().len(), 1);
+        assert!(load_many("definitely_missing.json").is_err());
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
     }
 
     #[test]
