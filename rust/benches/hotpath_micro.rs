@@ -390,6 +390,165 @@ fn main() {
     }
     println!();
 
+    // ---- SIMD kernel dispatch vs scalar (the dispatch-layer tentpole) ----
+    // Conformance before timing: dot_i8 must match scalar bitwise and the
+    // f32 kernels within 1e-5 (tests/integration_simd.rs pins the full
+    // contract; the asserts here keep a broken table from publishing
+    // numbers). On a host where detection picks scalar the cases are
+    // skipped entirely — their baselines are flagged additive, so the gate
+    // tolerates their absence and scalar-only runners stay green.
+    println!("== simd kernels vs scalar (runtime dispatch) ==");
+    {
+        use hgca::attention::{run_tiered_at_level, JobPayload};
+        use hgca::kv::{QuantSlab, QUANT_BLOCK};
+        use hgca::tensor::simd::{detect, Kernels, SimdLevel};
+        use std::hint::black_box;
+        let level = detect();
+        println!("detected dispatch level: {level}");
+        if level == SimdLevel::Scalar {
+            println!("(scalar-only host: simd-vs-scalar cases skipped)");
+        } else {
+            let kn = Kernels::for_level(level);
+            let sc = Kernels::for_level(SimdLevel::Scalar);
+
+            // f32 dot on decode-score shapes: 64 rows of length 2048
+            let (rows, len) = (64usize, 2048usize);
+            let mut a = vec![0.0f32; rows * len];
+            let mut b = vec![0.0f32; rows * len];
+            rng.fill_normal(&mut a, 1.0);
+            rng.fill_normal(&mut b, 1.0);
+            for r in 0..rows {
+                let (x, y) = (&a[r * len..(r + 1) * len], &b[r * len..(r + 1) * len]);
+                let (want, got) = ((sc.dot)(x, y), (kn.dot)(x, y));
+                assert!(
+                    (want - got).abs() <= 1e-5 * want.abs().max(1.0),
+                    "f32 dot drifted at row {r}: {got} vs {want}"
+                );
+            }
+            let time_dot = |k: &'static Kernels| {
+                bench(10, 200, || {
+                    let mut acc = 0.0f32;
+                    for r in 0..rows {
+                        acc += (k.dot)(&a[r * len..(r + 1) * len], &b[r * len..(r + 1) * len]);
+                    }
+                    black_box(acc);
+                })
+            };
+            let s_simd = time_dot(kn);
+            let s_scalar = time_dot(sc);
+            println!(
+                "dot f32  rows={rows} len={len}: {level} p50 {:>8.1} µs | scalar p50 {:>8.1} µs | speedup {:>5.2}x",
+                s_simd.p50 * 1e6,
+                s_scalar.p50 * 1e6,
+                s_scalar.p50 / s_simd.p50
+            );
+            gate_cases.push(Json::obj(vec![
+                ("jobs", Json::num(1.0)),
+                ("n", Json::num(len as f64)),
+                ("threads", Json::num(1.0)),
+                // gated path = dispatched f32 dot; baseline = scalar table
+                ("pool_p50_us", Json::num(s_simd.p50 * 1e6)),
+                ("spawn_p50_us", Json::num(s_scalar.p50 * 1e6)),
+                ("pool_calls_per_sec", Json::num(1.0 / s_simd.p50)),
+                ("speedup", Json::num(s_scalar.p50 / s_simd.p50)),
+            ]));
+
+            // int8 dot on the quantized-tier shape — bitwise conformance
+            let qa: Vec<i8> =
+                (0..rows * len).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+            let qb: Vec<i8> =
+                (0..rows * len).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+            for r in 0..rows {
+                let (x, y) = (&qa[r * len..(r + 1) * len], &qb[r * len..(r + 1) * len]);
+                assert_eq!((sc.dot_i8)(x, y), (kn.dot_i8)(x, y), "dot_i8 drifted at row {r}");
+            }
+            let time_dot_i8 = |k: &'static Kernels| {
+                bench(10, 200, || {
+                    let mut acc = 0i32;
+                    for r in 0..rows {
+                        let x = &qa[r * len..(r + 1) * len];
+                        let y = &qb[r * len..(r + 1) * len];
+                        acc = acc.wrapping_add((k.dot_i8)(x, y));
+                    }
+                    black_box(acc);
+                })
+            };
+            let s_simd = time_dot_i8(kn);
+            let s_scalar = time_dot_i8(sc);
+            println!(
+                "dot int8 rows={rows} len={len}: {level} p50 {:>8.1} µs | scalar p50 {:>8.1} µs | speedup {:>5.2}x",
+                s_simd.p50 * 1e6,
+                s_scalar.p50 * 1e6,
+                s_scalar.p50 / s_simd.p50
+            );
+            gate_cases.push(Json::obj(vec![
+                ("jobs", Json::num(2.0)),
+                ("n", Json::num(len as f64)),
+                ("threads", Json::num(1.0)),
+                // gated path = dispatched int8 dot; baseline = scalar table
+                ("pool_p50_us", Json::num(s_simd.p50 * 1e6)),
+                ("spawn_p50_us", Json::num(s_scalar.p50 * 1e6)),
+                ("pool_calls_per_sec", Json::num(1.0 / s_simd.p50)),
+                ("speedup", Json::num(s_scalar.p50 / s_simd.p50)),
+            ]));
+
+            // end-to-end tiered job range at the dispatch level vs the
+            // scalar table: two f32 + two int8 payloads, single worker so
+            // the comparison is kernel-bound, tolerance-checked first
+            let (jobs_n, n) = (4usize, 4096usize);
+            let payloads: Vec<JobPayload> = (0..jobs_n)
+                .map(|j| {
+                    let mut k = vec![0.0f32; n * dh];
+                    let mut v = vec![0.0f32; n * dh];
+                    rng.fill_normal(&mut k, 1.0);
+                    rng.fill_normal(&mut v, 1.0);
+                    if j % 2 == 0 {
+                        JobPayload::F32(k, v, n)
+                    } else {
+                        JobPayload::Int8 {
+                            k: QuantSlab::from_f32(&k, dh, QUANT_BLOCK),
+                            v: QuantSlab::from_f32(&v, dh, QUANT_BLOCK),
+                        }
+                    }
+                })
+                .collect();
+            let mut q = vec![0.0f32; jobs_n * dh];
+            rng.fill_normal(&mut q, 0.2);
+            let (o_ref, lse_ref) = run_tiered_at_level(SimdLevel::Scalar, &payloads, &q, 1, dh);
+            let (o, lse) = run_tiered_at_level(level, &payloads, &q, 1, dh);
+            for (i, (x, y)) in o.iter().zip(o_ref.iter()).enumerate() {
+                assert!((x - y).abs() <= 1e-4, "tiered output drifted at {i}: {x} vs {y}");
+            }
+            for (i, (x, y)) in lse.iter().zip(lse_ref.iter()).enumerate() {
+                assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0), "tiered lse drifted at {i}");
+            }
+            let s_simd = bench(3, 30, || {
+                let _ = run_tiered_at_level(level, &payloads, &q, 1, dh);
+            });
+            let s_scalar = bench(3, 30, || {
+                let _ = run_tiered_at_level(SimdLevel::Scalar, &payloads, &q, 1, dh);
+            });
+            println!(
+                "tiered   jobs={jobs_n} n={n}: {level} p50 {:>8.1} µs | scalar p50 {:>8.1} µs | speedup {:>5.2}x",
+                s_simd.p50 * 1e6,
+                s_scalar.p50 * 1e6,
+                s_scalar.p50 / s_simd.p50
+            );
+            gate_cases.push(Json::obj(vec![
+                ("jobs", Json::num(jobs_n as f64)),
+                ("n", Json::num(n as f64)),
+                ("threads", Json::num(1.0)),
+                // gated path = tiered step at the dispatch level; baseline
+                // = the same step forced through the scalar table
+                ("pool_p50_us", Json::num(s_simd.p50 * 1e6)),
+                ("spawn_p50_us", Json::num(s_scalar.p50 * 1e6)),
+                ("pool_calls_per_sec", Json::num(1.0 / s_simd.p50)),
+                ("speedup", Json::num(s_scalar.p50 / s_simd.p50)),
+            ]));
+        }
+    }
+    println!();
+
     // ---- CI gate dump (BENCH_*.json; see tools/bench_gate.rs) ----
     if let Ok(path) = std::env::var("HGCA_BENCH_JSON") {
         let doc = Json::obj(vec![

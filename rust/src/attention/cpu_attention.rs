@@ -19,10 +19,10 @@
 //! LSE merge, and optionally the per-slot attention mass (A_cpu) used by
 //! MAW re-evaluation (Algorithm 1 line 19).
 
-use crate::kv::quant::{dot_i8, quantize_row, QuantSlab};
-use crate::tensor::ops::{axpy, dot, softmax_lse};
+use crate::kv::quant::{quantize_row, QuantSlab};
+use crate::tensor::simd::{self, Kernels, SimdLevel};
 
-use super::pool::{AttnPool, TaskSplit};
+use super::pool::{AttnPool, JobPayload, TaskSplit};
 
 /// One (row, head) unit of work: attention over `n` KV entries stored
 /// contiguously ([n][d_head] row-major).
@@ -298,9 +298,39 @@ pub fn sparse_attention_spawn_masked(
 /// Shared per-range kernel: attention for a contiguous job range, writing a
 /// disjoint output slice. Both the pool tasks and the spawn path call this,
 /// so the two execution strategies are numerically identical by
-/// construction.
+/// construction. Runs on the process-wide SIMD dispatch table
+/// ([`crate::tensor::simd::kernels`]) — hoisted once per range, so the hot
+/// loops pay one indirect call per kernel invocation and every thread in
+/// the pool uses the same table (the per-level determinism contract).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_job_range(
+    jobs: &[HeadJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    o: &mut [f32],
+    lse: &mut [f32],
+    probs: &mut [Vec<f32>],
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+) {
+    run_job_range_with(
+        simd::kernels(),
+        jobs,
+        q,
+        n_query,
+        d_head,
+        o,
+        lse,
+        probs,
+        want_probs,
+        q_valid,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_job_range_with(
+    kn: &Kernels,
     jobs: &[HeadJob<'_>],
     q: &[f32],
     n_query: usize,
@@ -324,14 +354,14 @@ pub(crate) fn run_job_range(
             let qv = &q[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
             let sc = &mut scores[..job.n];
             for (t, sv) in sc.iter_mut().enumerate() {
-                *sv = dot(qv, &job.k[t * d_head..(t + 1) * d_head]);
+                *sv = (kn.dot)(qv, &job.k[t * d_head..(t + 1) * d_head]);
             }
-            let l = softmax_lse(sc);
+            let l = (kn.softmax_lse)(sc);
             lse[ji * n_query + nq] = l;
             let orow = &mut o[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
             for (t, &w) in sc.iter().enumerate() {
                 if w != 0.0 {
-                    axpy(w, &job.v[t * d_head..(t + 1) * d_head], orow);
+                    (kn.axpy)(w, &job.v[t * d_head..(t + 1) * d_head], orow);
                 }
             }
             if want_probs {
@@ -362,6 +392,33 @@ pub(crate) fn run_job_range_tiered(
     want_probs: bool,
     q_valid: Option<&[usize]>,
 ) {
+    run_job_range_tiered_with(
+        simd::kernels(),
+        jobs,
+        q,
+        n_query,
+        d_head,
+        o,
+        lse,
+        probs,
+        want_probs,
+        q_valid,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_job_range_tiered_with(
+    kn: &Kernels,
+    jobs: &[KernelJob<'_>],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+    o: &mut [f32],
+    lse: &mut [f32],
+    probs: &mut [Vec<f32>],
+    want_probs: bool,
+    q_valid: Option<&[usize]>,
+) {
     // reused score + quantized-query buffers — zero allocation per job in
     // the steady state
     let max_n = jobs.iter().map(|j| j.n()).max().unwrap_or(0);
@@ -379,15 +436,15 @@ pub(crate) fn run_job_range_tiered(
                     let qv = &q[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
                     let sc = &mut scores[..job.n];
                     for (t, sv) in sc.iter_mut().enumerate() {
-                        *sv = dot(qv, &job.k[t * d_head..(t + 1) * d_head]);
+                        *sv = (kn.dot)(qv, &job.k[t * d_head..(t + 1) * d_head]);
                     }
-                    let l = softmax_lse(sc);
+                    let l = (kn.softmax_lse)(sc);
                     lse[ji * n_query + nq] = l;
                     let orow =
                         &mut o[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
                     for (t, &w) in sc.iter().enumerate() {
                         if w != 0.0 {
-                            axpy(w, &job.v[t * d_head..(t + 1) * d_head], orow);
+                            (kn.axpy)(w, &job.v[t * d_head..(t + 1) * d_head], orow);
                         }
                     }
                     if want_probs {
@@ -406,9 +463,9 @@ pub(crate) fn run_job_range_tiered(
                     let sq = quantize_row(qv, &mut q_i8);
                     let sc = &mut scores[..n];
                     for (t, sv) in sc.iter_mut().enumerate() {
-                        *sv = dot_i8(&q_i8, k.entry(t)) as f32 * (sq * k.scale_of(t));
+                        *sv = (kn.dot_i8)(&q_i8, k.entry(t)) as f32 * (sq * k.scale_of(t));
                     }
-                    let l = softmax_lse(sc);
+                    let l = (kn.softmax_lse)(sc);
                     lse[ji * n_query + nq] = l;
                     let orow =
                         &mut o[(ji * n_query + nq) * d_head..(ji * n_query + nq + 1) * d_head];
@@ -431,9 +488,55 @@ pub(crate) fn run_job_range_tiered(
     }
 }
 
+/// Single-threaded tiered-kernel reference at an **explicit** dispatch
+/// level — the conformance surface for the SIMD layer. Benches and tests
+/// use it to run the exact `run_job_range_tiered` loop under two levels
+/// side by side in one process (the process-global dispatch freezes once,
+/// so it cannot be switched in-process; this bypasses it via
+/// [`Kernels::for_level`]). The serving path never calls this — it always
+/// goes through the frozen global table.
+///
+/// `q` is `[jobs][n_query][d_head]` flat, aligned with `payloads`.
+/// Returns `(o, lse)` with the same layout and `EMPTY_LSE` contract as
+/// [`CpuAttnOutput`]. Panics if `level` is unsupported on this host.
+pub fn run_tiered_at_level(
+    level: SimdLevel,
+    payloads: &[JobPayload],
+    q: &[f32],
+    n_query: usize,
+    d_head: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let jobs: Vec<KernelJob<'_>> = payloads
+        .iter()
+        .map(|p| match p {
+            JobPayload::F32(k, v, n) => KernelJob::F32(HeadJob { k, v, n: *n }),
+            JobPayload::Int8 { k, v } => KernelJob::Quant { k, v },
+        })
+        .collect();
+    let nj = jobs.len();
+    assert_eq!(q.len(), nj * n_query * d_head, "q layout mismatch");
+    let mut o = vec![0.0f32; nj * n_query * d_head];
+    let mut lse = vec![EMPTY_LSE; nj * n_query];
+    let mut probs: Vec<Vec<f32>> = Vec::new();
+    run_job_range_tiered_with(
+        Kernels::for_level(level),
+        &jobs,
+        q,
+        n_query,
+        d_head,
+        &mut o,
+        &mut lse,
+        &mut probs,
+        false,
+        None,
+    );
+    (o, lse)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::ops::{axpy, dot, softmax_lse};
     use crate::util::proptest::{check, ensure_all_close, ensure_close};
     use crate::util::rng::Rng;
 

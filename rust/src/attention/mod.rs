@@ -15,9 +15,9 @@ pub mod merge;
 pub mod pool;
 
 pub use cpu_attention::{
-    sparse_attention, sparse_attention_append, sparse_attention_append_placed,
-    sparse_attention_masked, sparse_attention_masked_placed, sparse_attention_spawn,
-    CpuAttnOutput, HeadJob,
+    run_tiered_at_level, sparse_attention, sparse_attention_append,
+    sparse_attention_append_placed, sparse_attention_masked, sparse_attention_masked_placed,
+    sparse_attention_spawn, CpuAttnOutput, HeadJob,
 };
 pub use merge::{is_empty_lse, merge_head, merge_states, EMPTY_LSE};
 pub use pool::{

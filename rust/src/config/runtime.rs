@@ -36,6 +36,14 @@ pub struct HgcaConfig {
     /// mass (see [`crate::kv::TierPolicy`]). Only the HGCA policy tiers
     /// its store.
     pub kv_tier: crate::kv::TierMode,
+    /// SIMD kernel dispatch override (`--simd {auto,avx2,sse4,neon,scalar}`):
+    /// `None` (= `auto`, the default) lets runtime feature detection pick
+    /// the best table; an explicit level forces it for the whole process
+    /// (applied before the first kernel call — see
+    /// [`crate::tensor::simd::configure`]). Results are bitwise-stable
+    /// within a level; across levels `dot_i8` is bitwise-identical and the
+    /// f32 kernels are within 1e-5 per element.
+    pub simd: Option<crate::tensor::simd::SimdLevel>,
 }
 
 impl Default for HgcaConfig {
@@ -55,6 +63,7 @@ impl Default for HgcaConfig {
             max_batch: 4,
             gpu_only: false,
             kv_tier: crate::kv::TierMode::F32,
+            simd: None,
         }
     }
 }
@@ -85,6 +94,9 @@ impl HgcaConfig {
             "append_entries_per_task must be positive"
         );
         anyhow::ensure!(self.chunk > 0 && self.max_batch > 0, "chunk/batch positive");
+        if let Some(level) = self.simd {
+            anyhow::ensure!(level.supported(), "--simd {level}: unsupported on this host");
+        }
         Ok(())
     }
 }

@@ -105,15 +105,17 @@ impl QuantSlab {
         let bw = self.block * dh;
         let mut start = 0usize;
         while self.tail_f32.len() - start >= bw {
-            let (q, scale) = quantize_block(&self.tail_f32[start..start + bw]);
-            self.data.extend_from_slice(&q);
+            let dstart = self.data.len();
+            self.data.resize(dstart + bw, 0);
+            let scale = quantize_into(&self.tail_f32[start..start + bw], &mut self.data[dstart..]);
             self.scales.push(scale);
             start += bw;
         }
         self.tail_f32.drain(..start);
         if !self.tail_f32.is_empty() {
-            let (q, scale) = quantize_block(&self.tail_f32);
-            self.data.extend_from_slice(&q);
+            let dstart = self.data.len();
+            self.data.resize(dstart + self.tail_f32.len(), 0);
+            let scale = quantize_into(&self.tail_f32, &mut self.data[dstart..]);
             self.scales.push(scale);
         }
         debug_assert_eq!(self.data.len(), self.n * dh);
@@ -168,38 +170,43 @@ impl QuantSlab {
     }
 }
 
-/// Quantize one block of f32 values: returns the int8 bytes and the
-/// block scale (`max_abs / 127`; 0 for an all-zero block).
-fn quantize_block(vals: &[f32]) -> (Vec<i8>, f32) {
-    let max_abs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+/// Quantize one block of f32 values directly into `out` (same length —
+/// no temporary allocation), returning the block scale (`max_abs / 127`;
+/// 0 for an all-zero block). The max-abs scan goes through the dispatched
+/// SIMD kernel layer ([`crate::tensor::simd`]); it is exact at every
+/// level, so block scales never depend on the dispatch level. The
+/// round-to-nearest itself stays scalar deliberately: SSE/AVX `roundps`
+/// is round-half-to-even while `f32::round` is round-half-away-from-zero,
+/// and quantized bytes must be bit-identical across levels.
+fn quantize_into(vals: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(vals.len(), out.len());
+    let max_abs = crate::tensor::simd::max_abs(vals);
     if max_abs == 0.0 {
-        return (vec![0i8; vals.len()], 0.0);
+        out.fill(0);
+        return 0.0;
     }
     let scale = max_abs / 127.0;
     let inv = 127.0 / max_abs;
-    let q = vals
-        .iter()
-        .map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8)
-        .collect();
-    (q, scale)
+    for (o, &v) in out.iter_mut().zip(vals.iter()) {
+        *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
 }
 
 /// Quantize one f32 row (a query) to int8 in `out`, returning its scale.
+/// Writes in place — this runs once per (job, query) on the tiered
+/// attention path, so it must not allocate.
 pub fn quantize_row(row: &[f32], out: &mut [i8]) -> f32 {
-    let (q, scale) = quantize_block(row);
-    out.copy_from_slice(&q);
-    scale
+    assert_eq!(row.len(), out.len(), "quantize_row length mismatch");
+    quantize_into(row, out)
 }
 
 /// Integer dot product of two int8 rows (one i32 accumulation; the
 /// caller applies `scale_a * scale_b` once on the result).
+/// Runtime-dispatched ([`crate::tensor::simd`]); i32 adds are
+/// associative, so every dispatch level is bitwise-identical.
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0i32;
-    for (&x, &y) in a.iter().zip(b.iter()) {
-        acc += x as i32 * y as i32;
-    }
-    acc
+    crate::tensor::simd::dot_i8(a, b)
 }
 
 #[cfg(test)]

@@ -62,6 +62,12 @@ COMMON FLAGS:
   --artifacts DIR   artifact directory (default: ./artifacts)
   --window N        GPU KV window (must match a compiled artifact; default 256)
   --threads N       CPU attention threads (default 4)
+  --simd LEVEL      SIMD kernel dispatch: auto (default; runtime feature
+                    detection), avx2, sse4, neon, or scalar. Applies
+                    process-wide and freezes at startup; HGCA_SIMD env is
+                    the same override with lower precedence. dot_i8 is
+                    bitwise-identical across levels, f32 kernels within
+                    1e-5; tokens are bitwise-stable within a level
 ";
 
 fn main() {
@@ -93,6 +99,7 @@ fn engine_config(args: &Args) -> Result<HgcaConfig> {
         cpu_threads: args.usize("threads", 4)?,
         alpha: args.f64("alpha", 0.3)? as f32,
         kv_tier: hgca::kv::TierMode::parse(args.get_or("kv-tier", "f32"))?,
+        simd: hgca::tensor::simd::SimdLevel::parse(args.get_or("simd", "auto"))?,
         ..Default::default()
     };
     cfg = cfg.with_window(args.usize("window", 256)?);
@@ -108,12 +115,20 @@ fn run() -> Result<()> {
     }
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..], &["full", "verify", "prefix-cache", "no-prefix-cache"])?;
+    // Freeze the SIMD dispatch level before anything can touch a kernel
+    // (model warmup and the attention pool both hit the hot loops):
+    // --simd flag > HGCA_SIMD env > runtime feature detection. The table
+    // freezes exactly once per process, so this must precede model/pool
+    // setup or a later override would be rejected.
+    let simd_request = hgca::tensor::simd::SimdLevel::parse(args.get_or("simd", "auto"))?;
+    let simd_level = hgca::tensor::simd::configure(simd_request)?;
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
 
     match cmd.as_str() {
         "info" => {
             let rt = PjrtRuntime::new(&dir)?;
             println!("platform: {}", rt.client.platform_name());
+            println!("simd dispatch: {simd_level}");
             println!("models:");
             for (name, cfg) in &rt.manifest.models {
                 println!(
@@ -351,7 +366,10 @@ fn run() -> Result<()> {
             let addr = args.get_or("addr", "127.0.0.1:8471").to_string();
             let (tx, rx) = std::sync::mpsc::channel();
             let (local, _handle) = hgca::server::serve(&addr, tx)?;
-            println!("hgca serving on http://{local} (policy={})", engine.policy.name());
+            println!(
+                "hgca serving on http://{local} (policy={}, simd={simd_level})",
+                engine.policy.name()
+            );
             let mut batcher = hgca::engine::Batcher::new(args.usize("batch", 4)?);
             if let Some(budget) = args.get("prefill-budget") {
                 batcher = batcher.with_prefill_budget(budget.parse()?);

@@ -291,6 +291,10 @@ pub fn handle_metrics(engine: &Engine<'_>, batcher: Option<&Batcher>) -> HttpRes
         ("kv_tier_window", Json::num(m.kv_tier_window as f64)),
         ("kv_quant_heads", Json::num(m.kv_quant_heads as f64)),
         ("kv_quant_bytes_saved", Json::num(m.kv_quant_bytes_saved as f64)),
+        // frozen SIMD kernel dispatch level (scalar=0, sse4=1, avx2=2,
+        // neon=3 — see tensor/simd); a gauge so dashboards can tell
+        // heterogeneous fleets apart when comparing latency
+        ("simd_level", Json::num(crate::tensor::simd::active_level().code() as f64)),
     ];
     // cross-request prefix KV reuse (radix cache); counters stay present —
     // as zeros — when the cache is disabled, so scrapers never lose fields

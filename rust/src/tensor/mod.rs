@@ -1,6 +1,7 @@
 //! f32 tensor substrate: storage, dense kernels, `.hgw` weight I/O.
 
 pub mod ops;
+pub mod simd;
 pub mod tensor;
 pub mod weights;
 

@@ -47,49 +47,23 @@ pub fn affine(x: &[f32], w: &Tensor, b: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Dot product of two f32 slices — the single hottest loop in CPU sparse
+/// attention. Routed through the runtime-dispatched kernel layer
+/// ([`super::simd`]); the portable baseline (the original 4-way-unrolled
+/// scalar loop) lives in `tensor/simd/scalar.rs`.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled: the single hottest loop in CPU sparse attention
-    let mut s0 = 0.0f32;
-    let mut s1 = 0.0f32;
-    let mut s2 = 0.0f32;
-    let mut s3 = 0.0f32;
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..a.len() {
-        s += a[j] * b[j];
-    }
-    s
+    super::simd::dot(a, b)
 }
 
-/// out += scale * v
+/// out += scale * v (runtime-dispatched; see [`super::simd`]).
 pub fn axpy(scale: f32, v: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(v.len(), out.len());
-    for (o, &x) in out.iter_mut().zip(v.iter()) {
-        *o += scale * x;
-    }
+    super::simd::axpy(scale, v, out)
 }
 
-/// In-place softmax over a slice; returns the log-sum-exp.
+/// In-place softmax over a slice; returns the log-sum-exp
+/// (runtime-dispatched; see [`super::simd`]).
 pub fn softmax_lse(x: &mut [f32]) -> f32 {
-    let m = x.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(-1e30);
-    let mut sum = 0.0f32;
-    for v in x.iter_mut() {
-        *v = (*v - m).exp();
-        sum += *v;
-    }
-    let sum = sum.max(1e-30);
-    for v in x.iter_mut() {
-        *v /= sum;
-    }
-    m + sum.ln()
+    super::simd::softmax_lse(x)
 }
 
 /// LayerNorm matching jax: (x - mean) / sqrt(var + 1e-5) * g + b.

@@ -1,0 +1,336 @@
+//! Runtime-dispatched SIMD kernel layer for the CPU sparse-attention hot
+//! loops (the PR 10 tentpole; closes the ROADMAP "SIMD i8 dot kernels"
+//! follow-on).
+//!
+//! Five kernels sit on the per-entry critical path of
+//! `attention/cpu_attention.rs::{run_job_range, run_job_range_tiered}` and
+//! `kv/quant.rs`: f32 [`dot`] / [`axpy`] / [`softmax_lse`], int8
+//! [`dot_i8`], and the quantizer's [`max_abs`] scan. Each has explicit
+//! `std::arch` implementations — x86_64 AVX2+FMA, x86_64 SSE4.1, aarch64
+//! NEON — plus the original scalar code ([`scalar`]) as the portable
+//! baseline. One [`Kernels`] fn-pointer table per level; the process picks
+//! a table exactly once ([`kernels`], `OnceLock`-cached) from, in
+//! precedence order, [`configure`] (the `--simd` flag), the `HGCA_SIMD`
+//! env var, then CPUID/target detection ([`detect`]).
+//!
+//! **Determinism contract.** Dispatch is process-global and frozen at
+//! first use, so every worker thread, task split, and NUMA placement runs
+//! the *same* table — tokens stay bitwise-identical across worker counts
+//! and synthetic node topologies *within* a dispatch level, exactly as the
+//! scalar kernels were. Across levels:
+//! - [`dot_i8`] is integer math (i32 adds are associative), so every SIMD
+//!   implementation is **bitwise-identical to scalar** — the int8 tier's
+//!   scores do not move at all under dispatch.
+//! - [`max_abs`] and the `softmax_lse` max pass use IEEE max, also exact.
+//! - f32 [`dot`] / [`axpy`] / [`softmax_lse`] reassociate additions (wider
+//!   lane accumulators, FMA contraction), so they carry a tolerance bound
+//!   instead: ≤ 1e-5 vs scalar per element, pinned by
+//!   `tests/integration_simd.rs` alongside the end-to-end replay
+//!   determinism check per level.
+//!
+//! Inside a SIMD kernel the accumulator shape and reduce order are fixed
+//! (lane 0..N summed left-to-right after a store — never a tree of
+//! `hadd`s that would depend on how the compiler schedules them), so a
+//! given level is a pure function of its inputs.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+/// One dispatch level = one complete kernel table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimdLevel {
+    /// Portable baseline (the pre-dispatch scalar kernels, verbatim).
+    Scalar,
+    /// x86_64 SSE4.1 (128-bit lanes; `pmaddwd` int8 dot, no FMA).
+    Sse4,
+    /// x86_64 AVX2 + FMA (256-bit lanes; `vpmaddwd` int8 dot).
+    Avx2,
+    /// aarch64 NEON (128-bit lanes; `smull`/`sadalp` int8 dot).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lowercase name (flag/env spelling and metrics label).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse4 => "sse4",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Numeric code for the `simd_level` metrics gauge (flat-JSON metrics
+    /// carry numbers): scalar=0, sse4=1, avx2=2, neon=3.
+    pub fn code(self) -> u32 {
+        match self {
+            SimdLevel::Scalar => 0,
+            SimdLevel::Sse4 => 1,
+            SimdLevel::Avx2 => 2,
+            SimdLevel::Neon => 3,
+        }
+    }
+
+    /// Parse a `--simd` / `HGCA_SIMD` value; `auto` (or empty) means "let
+    /// detection pick" and returns `None`.
+    pub fn parse(s: &str) -> anyhow::Result<Option<SimdLevel>> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Ok(None),
+            "scalar" => Ok(Some(SimdLevel::Scalar)),
+            "sse4" | "sse4.1" | "sse41" => Ok(Some(SimdLevel::Sse4)),
+            "avx2" => Ok(Some(SimdLevel::Avx2)),
+            "neon" => Ok(Some(SimdLevel::Neon)),
+            other => anyhow::bail!(
+                "unknown SIMD level '{other}' (expected auto, avx2, sse4, neon, or scalar)"
+            ),
+        }
+    }
+
+    /// Whether this host can run the level's kernels.
+    pub fn supported(self) -> bool {
+        match self {
+            SimdLevel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Sse4 => std::arch::is_x86_feature_detected!("sse4.1"),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => true, // aarch64 baseline includes NEON
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Best level this host supports (the `auto` choice).
+pub fn detect() -> SimdLevel {
+    for level in [SimdLevel::Avx2, SimdLevel::Neon, SimdLevel::Sse4] {
+        if level.supported() {
+            return level;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// Every level this host can run, best-first (conformance tests and the
+/// bench harness sweep this).
+pub fn supported_levels() -> Vec<SimdLevel> {
+    [SimdLevel::Avx2, SimdLevel::Neon, SimdLevel::Sse4, SimdLevel::Scalar]
+        .into_iter()
+        .filter(|l| l.supported())
+        .collect()
+}
+
+/// A complete kernel table for one dispatch level. Consumers hoist
+/// `kernels()` once per job range and call through the fn pointers — one
+/// indirect call per kernel invocation, no per-call feature test.
+pub struct Kernels {
+    /// The level these pointers implement.
+    pub level: SimdLevel,
+    /// f32 dot product (scores).
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `out += scale * v` (weighted V accumulate).
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// In-place softmax returning the log-sum-exp.
+    pub softmax_lse: fn(&mut [f32]) -> f32,
+    /// Int8 dot with one i32 accumulation (bitwise-identical across levels).
+    pub dot_i8: fn(&[i8], &[i8]) -> i32,
+    /// Max |x| over a slice (the quantizer's scale scan; exact).
+    pub max_abs: fn(&[f32]) -> f32,
+}
+
+static SCALAR: Kernels = Kernels {
+    level: SimdLevel::Scalar,
+    dot: scalar::dot,
+    axpy: scalar::axpy,
+    softmax_lse: scalar::softmax_lse,
+    dot_i8: scalar::dot_i8,
+    max_abs: scalar::max_abs,
+};
+
+impl Kernels {
+    /// The table for an explicit level. Panics if this host cannot run it
+    /// (callers gate on [`SimdLevel::supported`] / [`supported_levels`]);
+    /// does not touch the process-global dispatch, so conformance tests
+    /// and benches can compare levels side by side in one process.
+    pub fn for_level(level: SimdLevel) -> &'static Kernels {
+        assert!(level.supported(), "SIMD level {level} is not supported on this host");
+        match level {
+            SimdLevel::Scalar => &SCALAR,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Sse4 => &x86::SSE4,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => &x86::AVX2,
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => &neon::NEON,
+            #[allow(unreachable_patterns)]
+            _ => unreachable!("unsupported level passed the support gate"),
+        }
+    }
+}
+
+static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// The process-wide kernel table, frozen on first call: `HGCA_SIMD` if
+/// set (panics on an unknown or unsupported value — a forced level must
+/// never silently fall back, the conformance tests rely on that), else
+/// [`detect`].
+pub fn kernels() -> &'static Kernels {
+    ACTIVE.get_or_init(|| {
+        let level = match std::env::var("HGCA_SIMD") {
+            Ok(raw) => match SimdLevel::parse(&raw) {
+                Ok(Some(l)) => {
+                    assert!(
+                        l.supported(),
+                        "HGCA_SIMD={raw}: level {l} is not supported on this host \
+                         (supported: {})",
+                        supported_names()
+                    );
+                    l
+                }
+                Ok(None) => detect(),
+                Err(e) => panic!("HGCA_SIMD: {e}"),
+            },
+            Err(_) => detect(),
+        };
+        Kernels::for_level(level)
+    })
+}
+
+/// The frozen dispatch level (freezes it if not yet frozen) — the
+/// `simd_level` metrics gauge and startup logging read this.
+pub fn active_level() -> SimdLevel {
+    kernels().level
+}
+
+fn supported_names() -> String {
+    supported_levels()
+        .iter()
+        .map(|l| l.name())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Apply a `--simd` override (`None` = auto). Must run before the first
+/// kernel use: the dispatch table freezes exactly once, so a request that
+/// disagrees with an already-frozen level is an error rather than a
+/// silent partial switch. Returns the level now in effect.
+pub fn configure(request: Option<SimdLevel>) -> anyhow::Result<SimdLevel> {
+    match request {
+        None => Ok(active_level()),
+        Some(want) => {
+            anyhow::ensure!(
+                want.supported(),
+                "--simd {want}: level not supported on this host (supported: {})",
+                supported_names()
+            );
+            let got = ACTIVE.get_or_init(|| Kernels::for_level(want)).level;
+            anyhow::ensure!(
+                got == want,
+                "--simd {want}: dispatch already frozen at '{got}' \
+                 (the override must be applied before the first kernel call)"
+            );
+            Ok(got)
+        }
+    }
+}
+
+/// f32 dot product through the process-wide dispatch.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    (kernels().dot)(a, b)
+}
+
+/// `out += scale * v` through the process-wide dispatch.
+#[inline]
+pub fn axpy(scale: f32, v: &[f32], out: &mut [f32]) {
+    (kernels().axpy)(scale, v, out)
+}
+
+/// In-place softmax (returns log-sum-exp) through the process-wide
+/// dispatch.
+#[inline]
+pub fn softmax_lse(x: &mut [f32]) -> f32 {
+    (kernels().softmax_lse)(x)
+}
+
+/// Int8 dot product through the process-wide dispatch.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    (kernels().dot_i8)(a, b)
+}
+
+/// Max |x| through the process-wide dispatch.
+#[inline]
+pub fn max_abs(v: &[f32]) -> f32 {
+    (kernels().max_abs)(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_levels_and_auto() {
+        assert_eq!(SimdLevel::parse("auto").unwrap(), None);
+        assert_eq!(SimdLevel::parse("").unwrap(), None);
+        assert_eq!(SimdLevel::parse("AVX2").unwrap(), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse("sse4.1").unwrap(), Some(SimdLevel::Sse4));
+        assert_eq!(SimdLevel::parse("neon").unwrap(), Some(SimdLevel::Neon));
+        assert_eq!(SimdLevel::parse("scalar").unwrap(), Some(SimdLevel::Scalar));
+        assert!(SimdLevel::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn codes_are_stable() {
+        // the metrics gauge meaning must never shift between releases
+        assert_eq!(SimdLevel::Scalar.code(), 0);
+        assert_eq!(SimdLevel::Sse4.code(), 1);
+        assert_eq!(SimdLevel::Avx2.code(), 2);
+        assert_eq!(SimdLevel::Neon.code(), 3);
+    }
+
+    #[test]
+    fn detect_is_supported_and_listed() {
+        let d = detect();
+        assert!(d.supported());
+        let all = supported_levels();
+        assert!(all.contains(&d));
+        assert!(all.contains(&SimdLevel::Scalar), "scalar is always last-resort");
+        assert_eq!(all.first().copied(), Some(d), "detect picks the best level");
+    }
+
+    #[test]
+    fn for_level_tables_report_their_level() {
+        for l in supported_levels() {
+            assert_eq!(Kernels::for_level(l).level, l);
+        }
+    }
+
+    #[test]
+    fn global_dispatch_is_frozen_and_consistent() {
+        let a = kernels().level;
+        let b = active_level();
+        assert_eq!(a, b);
+        // configure(None) never conflicts with a frozen table
+        assert_eq!(configure(None).unwrap(), a);
+        // re-configuring to the same level is idempotent
+        assert_eq!(configure(Some(a)).unwrap(), a);
+    }
+}

@@ -1,0 +1,189 @@
+//! aarch64 NEON kernels (128-bit lanes). NEON is part of the aarch64
+//! baseline (`std` requires it), so this table is always supported on
+//! aarch64 targets and the `unsafe` blocks below are sound wherever this
+//! module compiles.
+//!
+//! Same determinism shape as the x86 tables: fixed accumulator layout,
+//! lanes stored and summed left-to-right; `dot_i8` (`smull` + `sadalp`
+//! pairwise accumulate) and `max_abs` are exact, the f32 kernels carry
+//! the 1e-5-vs-scalar bound.
+
+use core::arch::aarch64::*;
+
+use super::{Kernels, SimdLevel};
+
+pub(super) static NEON: Kernels = Kernels {
+    level: SimdLevel::Neon,
+    dot: dot_neon,
+    axpy: axpy_neon,
+    softmax_lse: softmax_lse_neon,
+    dot_i8: dot_i8_neon,
+    max_abs: max_abs_neon,
+};
+
+/// Lane-ordered horizontal sum over 4 lanes.
+#[inline]
+unsafe fn hsum128(v: float32x4_t) -> f32 {
+    let mut lanes = [0.0f32; 4];
+    vst1q_f32(lanes.as_mut_ptr(), v);
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    s
+}
+
+fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    // SAFETY: NEON is baseline on aarch64 (module doc).
+    unsafe {
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            i += 4;
+        }
+        let mut s = hsum128(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+}
+
+fn axpy_neon(scale: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    let n = v.len();
+    // SAFETY: NEON is baseline on aarch64 (module doc).
+    unsafe {
+        let vs = vdupq_n_f32(scale);
+        let pv = v.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let acc = vfmaq_f32(vld1q_f32(po.add(i)), vs, vld1q_f32(pv.add(i)));
+            vst1q_f32(po.add(i), acc);
+            i += 4;
+        }
+        while i < n {
+            out[i] += scale * v[i];
+            i += 1;
+        }
+    }
+}
+
+fn softmax_lse_neon(x: &mut [f32]) -> f32 {
+    let n = x.len();
+    // SAFETY: NEON is baseline on aarch64 (module doc).
+    unsafe {
+        let p = x.as_mut_ptr();
+        // vector max pass (exact)
+        let mut m = f32::NEG_INFINITY;
+        let mut i = 0usize;
+        if n >= 4 {
+            let mut vm = vld1q_f32(p);
+            i = 4;
+            while i + 4 <= n {
+                vm = vmaxq_f32(vm, vld1q_f32(p.add(i)));
+                i += 4;
+            }
+            let mut lanes = [0.0f32; 4];
+            vst1q_f32(lanes.as_mut_ptr(), vm);
+            for &l in &lanes {
+                m = m.max(l);
+            }
+        }
+        while i < n {
+            m = m.max(x[i]);
+            i += 1;
+        }
+        let m = m.max(-1e30);
+        // scalar exp pass (per-element identical to the scalar kernel)
+        for v in x.iter_mut() {
+            *v = (*v - m).exp();
+        }
+        // lane-ordered vector sum of the exps
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            acc = vaddq_f32(acc, vld1q_f32(p.add(i)));
+            i += 4;
+        }
+        let mut sum = hsum128(acc);
+        while i < n {
+            sum += x[i];
+            i += 1;
+        }
+        let sum = sum.max(1e-30);
+        // vector normalize
+        let vs = vdupq_n_f32(sum);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(p.add(i), vdivq_f32(vld1q_f32(p.add(i)), vs));
+            i += 4;
+        }
+        while i < n {
+            x[i] /= sum;
+            i += 1;
+        }
+        m + sum.ln()
+    }
+}
+
+/// 8 bytes/step: `smull` i8×i8→i16, `sadalp` pairwise-widen accumulate
+/// into 4 i32 lanes. Integer adds are associative → bitwise == scalar.
+fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    // SAFETY: NEON is baseline on aarch64 (module doc).
+    unsafe {
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let prod = vmull_s8(vld1_s8(pa.add(i)), vld1_s8(pb.add(i)));
+            acc = vpadalq_s16(acc, prod);
+            i += 8;
+        }
+        let mut s = vaddvq_s32(acc);
+        while i < n {
+            s += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        s
+    }
+}
+
+fn max_abs_neon(v: &[f32]) -> f32 {
+    let n = v.len();
+    // SAFETY: NEON is baseline on aarch64 (module doc).
+    unsafe {
+        let p = v.as_ptr();
+        let mut vm = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vm = vmaxq_f32(vm, vabsq_f32(vld1q_f32(p.add(i))));
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), vm);
+        let mut m = 0.0f32;
+        for &l in &lanes {
+            m = m.max(l);
+        }
+        while i < n {
+            m = m.max(v[i].abs());
+            i += 1;
+        }
+        m
+    }
+}

@@ -1,0 +1,60 @@
+//! Portable scalar kernels — the pre-dispatch implementations moved here
+//! verbatim from `tensor/ops.rs` and `kv/quant.rs`. These are the oracle
+//! every SIMD level is gated against: `dot_i8` and `max_abs` bitwise, the
+//! f32 kernels to ≤ 1e-5 per element (`tests/integration_simd.rs`).
+
+pub(super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled: the single hottest loop in CPU sparse attention
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+pub(super) fn axpy(scale: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(v.iter()) {
+        *o += scale * x;
+    }
+}
+
+pub(super) fn softmax_lse(x: &mut [f32]) -> f32 {
+    let m = x.iter().copied().fold(f32::NEG_INFINITY, f32::max).max(-1e30);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let sum = sum.max(1e-30);
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+    m + sum.ln()
+}
+
+pub(super) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
+pub(super) fn max_abs(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+}

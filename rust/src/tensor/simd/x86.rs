@@ -1,0 +1,440 @@
+//! x86_64 kernels: AVX2+FMA (256-bit) and SSE4.1 (128-bit) tables.
+//!
+//! Safety model: every `#[target_feature]` function here is reached only
+//! through the [`AVX2`] / [`SSE4`] tables, and those are only handed out
+//! by `Kernels::for_level` after `SimdLevel::supported()` confirmed the
+//! features via `is_x86_feature_detected!` — so the required ISA is
+//! guaranteed present at every unsafe call site below.
+//!
+//! Determinism: each kernel uses a fixed accumulator shape (two vector
+//! accumulators for `dot`, one for the reductions) and a fixed reduce
+//! order — lanes are stored to an array and summed left-to-right, never
+//! tree-reduced with `hadd` — so a level is a pure function of its
+//! inputs. `dot_i8` and `max_abs` are exact (integer adds / IEEE max);
+//! the f32 kernels reassociate and carry the documented 1e-5 bound.
+
+#![allow(clippy::missing_safety_doc)] // private module; safety is the table contract above
+
+use core::arch::x86_64::*;
+
+use super::{Kernels, SimdLevel};
+
+pub(super) static AVX2: Kernels = Kernels {
+    level: SimdLevel::Avx2,
+    dot: dot_avx2,
+    axpy: axpy_avx2,
+    softmax_lse: softmax_lse_avx2,
+    dot_i8: dot_i8_avx2,
+    max_abs: max_abs_avx2,
+};
+
+pub(super) static SSE4: Kernels = Kernels {
+    level: SimdLevel::Sse4,
+    dot: dot_sse4,
+    axpy: axpy_sse4,
+    softmax_lse: softmax_lse_sse4,
+    dot_i8: dot_i8_sse4,
+    max_abs: max_abs_sse4,
+};
+
+// ---------------------------------------------------------------- reduces
+
+/// Lane-ordered horizontal sum: store then add lanes 0..8 left-to-right.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    s
+}
+
+/// Lane-ordered horizontal sum over 4 lanes.
+#[inline]
+#[target_feature(enable = "sse4.1")]
+unsafe fn hsum128(v: __m128) -> f32 {
+    let mut lanes = [0.0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), v);
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    s
+}
+
+// ------------------------------------------------------------------- dot
+
+fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: table handed out only after AVX2+FMA detection (module doc).
+    unsafe { dot_avx2_impl(a, b) }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 8)),
+            _mm256_loadu_ps(pb.add(i + 8)),
+            acc1,
+        );
+        i += 16;
+    }
+    if i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        i += 8;
+    }
+    let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+fn dot_sse4(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: table handed out only after SSE4.1 detection (module doc).
+    unsafe { dot_sse4_impl(a, b) }
+}
+
+#[target_feature(enable = "sse4.1")]
+unsafe fn dot_sse4_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm_setzero_ps();
+    let mut acc1 = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
+        acc1 = _mm_add_ps(
+            acc1,
+            _mm_mul_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4))),
+        );
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
+        i += 4;
+    }
+    let mut s = hsum128(_mm_add_ps(acc0, acc1));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+// ------------------------------------------------------------------ axpy
+
+fn axpy_avx2(scale: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    // SAFETY: table handed out only after AVX2+FMA detection (module doc).
+    unsafe { axpy_avx2_impl(scale, v, out) }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx2_impl(scale: f32, v: &[f32], out: &mut [f32]) {
+    let n = v.len();
+    let vs = _mm256_set1_ps(scale);
+    let pv = v.as_ptr();
+    let po = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let acc = _mm256_fmadd_ps(vs, _mm256_loadu_ps(pv.add(i)), _mm256_loadu_ps(po.add(i)));
+        _mm256_storeu_ps(po.add(i), acc);
+        i += 8;
+    }
+    while i < n {
+        out[i] += scale * v[i];
+        i += 1;
+    }
+}
+
+fn axpy_sse4(scale: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    // SAFETY: table handed out only after SSE4.1 detection (module doc).
+    unsafe { axpy_sse4_impl(scale, v, out) }
+}
+
+#[target_feature(enable = "sse4.1")]
+unsafe fn axpy_sse4_impl(scale: f32, v: &[f32], out: &mut [f32]) {
+    let n = v.len();
+    let vs = _mm_set1_ps(scale);
+    let pv = v.as_ptr();
+    let po = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let acc = _mm_add_ps(_mm_loadu_ps(po.add(i)), _mm_mul_ps(vs, _mm_loadu_ps(pv.add(i))));
+        _mm_storeu_ps(po.add(i), acc);
+        i += 4;
+    }
+    while i < n {
+        out[i] += scale * v[i];
+        i += 1;
+    }
+}
+
+// ----------------------------------------------------------- softmax_lse
+
+// The exp itself stays scalar libm in every level — it is the expensive,
+// implementation-defined part, and keeping it per-element identical to
+// the scalar kernel pins the cross-level tolerance to the (tiny) sum and
+// divide reassociation. Max is IEEE-exact; the exp-sum uses the fixed
+// lane-ordered reduce.
+
+fn softmax_lse_avx2(x: &mut [f32]) -> f32 {
+    // SAFETY: table handed out only after AVX2+FMA detection (module doc).
+    unsafe { softmax_lse_avx2_impl(x) }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn softmax_lse_avx2_impl(x: &mut [f32]) -> f32 {
+    let n = x.len();
+    let p = x.as_mut_ptr();
+    // vector max pass (exact)
+    let mut m = f32::NEG_INFINITY;
+    let mut i = 0usize;
+    if n >= 8 {
+        let mut vm = _mm256_loadu_ps(p);
+        i = 8;
+        while i + 8 <= n {
+            vm = _mm256_max_ps(vm, _mm256_loadu_ps(p.add(i)));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vm);
+        for &l in &lanes {
+            m = m.max(l);
+        }
+    }
+    while i < n {
+        m = m.max(x[i]);
+        i += 1;
+    }
+    let m = m.max(-1e30);
+    // scalar exp pass (per-element identical to the scalar kernel)
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+    }
+    // lane-ordered vector sum of the exps
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        acc = _mm256_add_ps(acc, _mm256_loadu_ps(p.add(i)));
+        i += 8;
+    }
+    let mut sum = hsum256(acc);
+    while i < n {
+        sum += x[i];
+        i += 1;
+    }
+    let sum = sum.max(1e-30);
+    // vector normalize (IEEE divide, per-element exact given `sum`)
+    let vs = _mm256_set1_ps(sum);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        _mm256_storeu_ps(p.add(i), _mm256_div_ps(_mm256_loadu_ps(p.add(i)), vs));
+        i += 8;
+    }
+    while i < n {
+        x[i] /= sum;
+        i += 1;
+    }
+    m + sum.ln()
+}
+
+fn softmax_lse_sse4(x: &mut [f32]) -> f32 {
+    // SAFETY: table handed out only after SSE4.1 detection (module doc).
+    unsafe { softmax_lse_sse4_impl(x) }
+}
+
+#[target_feature(enable = "sse4.1")]
+unsafe fn softmax_lse_sse4_impl(x: &mut [f32]) -> f32 {
+    let n = x.len();
+    let p = x.as_mut_ptr();
+    let mut m = f32::NEG_INFINITY;
+    let mut i = 0usize;
+    if n >= 4 {
+        let mut vm = _mm_loadu_ps(p);
+        i = 4;
+        while i + 4 <= n {
+            vm = _mm_max_ps(vm, _mm_loadu_ps(p.add(i)));
+            i += 4;
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), vm);
+        for &l in &lanes {
+            m = m.max(l);
+        }
+    }
+    while i < n {
+        m = m.max(x[i]);
+        i += 1;
+    }
+    let m = m.max(-1e30);
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+    }
+    let mut acc = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        acc = _mm_add_ps(acc, _mm_loadu_ps(p.add(i)));
+        i += 4;
+    }
+    let mut sum = hsum128(acc);
+    while i < n {
+        sum += x[i];
+        i += 1;
+    }
+    let sum = sum.max(1e-30);
+    let vs = _mm_set1_ps(sum);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        _mm_storeu_ps(p.add(i), _mm_div_ps(_mm_loadu_ps(p.add(i)), vs));
+        i += 4;
+    }
+    while i < n {
+        x[i] /= sum;
+        i += 1;
+    }
+    m + sum.ln()
+}
+
+// ----------------------------------------------------------------- dot_i8
+
+fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: table handed out only after AVX2+FMA detection (module doc).
+    unsafe { dot_i8_avx2_impl(a, b) }
+}
+
+/// 16 bytes/step: sign-extend i8→i16, `vpmaddwd` pairwise i16×i16→i32,
+/// accumulate in 8 i32 lanes. i32 adds are associative, so the result is
+/// bitwise-identical to the scalar loop for any lane order.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2_impl(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(pa.add(i) as *const __m128i));
+        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(pb.add(i) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        i += 16;
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut s = 0i32;
+    for &l in &lanes {
+        s += l;
+    }
+    while i < n {
+        s += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    s
+}
+
+fn dot_i8_sse4(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: table handed out only after SSE4.1 detection (module doc).
+    unsafe { dot_i8_sse4_impl(a, b) }
+}
+
+/// 8 bytes/step: `pmovsxbw` + `pmaddwd`, 4 i32 lanes.
+#[target_feature(enable = "sse4.1")]
+unsafe fn dot_i8_sse4_impl(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm_setzero_si128();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let va = _mm_cvtepi8_epi16(_mm_loadl_epi64(pa.add(i) as *const __m128i));
+        let vb = _mm_cvtepi8_epi16(_mm_loadl_epi64(pb.add(i) as *const __m128i));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(va, vb));
+        i += 8;
+    }
+    let mut lanes = [0i32; 4];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, acc);
+    let mut s = 0i32;
+    for &l in &lanes {
+        s += l;
+    }
+    while i < n {
+        s += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    s
+}
+
+// ---------------------------------------------------------------- max_abs
+
+fn max_abs_avx2(v: &[f32]) -> f32 {
+    // SAFETY: table handed out only after AVX2+FMA detection (module doc).
+    unsafe { max_abs_avx2_impl(v) }
+}
+
+/// |x| via sign-bit andnot, IEEE max — exact at every level.
+#[target_feature(enable = "avx2")]
+unsafe fn max_abs_avx2_impl(v: &[f32]) -> f32 {
+    let n = v.len();
+    let p = v.as_ptr();
+    let sign = _mm256_set1_ps(-0.0);
+    let mut vm = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        vm = _mm256_max_ps(vm, _mm256_andnot_ps(sign, _mm256_loadu_ps(p.add(i))));
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), vm);
+    let mut m = 0.0f32;
+    for &l in &lanes {
+        m = m.max(l);
+    }
+    while i < n {
+        m = m.max(v[i].abs());
+        i += 1;
+    }
+    m
+}
+
+fn max_abs_sse4(v: &[f32]) -> f32 {
+    // SAFETY: table handed out only after SSE4.1 detection (module doc).
+    unsafe { max_abs_sse4_impl(v) }
+}
+
+#[target_feature(enable = "sse4.1")]
+unsafe fn max_abs_sse4_impl(v: &[f32]) -> f32 {
+    let n = v.len();
+    let p = v.as_ptr();
+    let sign = _mm_set1_ps(-0.0);
+    let mut vm = _mm_setzero_ps();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        vm = _mm_max_ps(vm, _mm_andnot_ps(sign, _mm_loadu_ps(p.add(i))));
+        i += 4;
+    }
+    let mut lanes = [0.0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), vm);
+    let mut m = 0.0f32;
+    for &l in &lanes {
+        m = m.max(l);
+    }
+    while i < n {
+        m = m.max(v[i].abs());
+        i += 1;
+    }
+    m
+}

@@ -1,0 +1,270 @@
+//! SIMD dispatch conformance (`tensor/simd`): every level this host can
+//! run must agree with the scalar oracle — `dot_i8` and `max_abs`
+//! bitwise, the f32 kernels to ≤ 1e-5 per element — and a forced level
+//! must stay deterministic end to end (same-seed and NUMA-node-count
+//! replay invariance) without ever silently falling back to detection.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use hgca::attention::{run_tiered_at_level, JobPayload};
+use hgca::kv::{QuantSlab, QUANT_BLOCK};
+use hgca::tensor::simd::{supported_levels, Kernels, SimdLevel};
+use hgca::util::proptest::{check, ensure, ensure_all_close, ensure_close};
+use hgca::util::rng::Rng;
+
+fn rand_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, scale);
+    v
+}
+
+fn rand_i8(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect()
+}
+
+/// The non-scalar levels to exercise. Empty on a scalar-only host — the
+/// sweeps below then pass vacuously, which is the correct degradation:
+/// there is nothing to conform.
+fn simd_levels() -> Vec<SimdLevel> {
+    supported_levels().into_iter().filter(|l| *l != SimdLevel::Scalar).collect()
+}
+
+// ------------------------------------------------------ kernel conformance
+
+#[test]
+fn dot_i8_is_bitwise_identical_to_scalar_at_every_level() {
+    let scalar = Kernels::for_level(SimdLevel::Scalar);
+    check("dot_i8 simd == scalar", 300, |rng| {
+        // lengths cover empty, single-element, sub-lane, and every
+        // non-multiple-of-lane tail for 8- and 16-byte vector steps
+        let n = rng.range(0, 131);
+        let a = rand_i8(rng, n);
+        let b = rand_i8(rng, n);
+        let want = (scalar.dot_i8)(&a, &b);
+        for level in simd_levels() {
+            let got = (Kernels::for_level(level).dot_i8)(&a, &b);
+            ensure(got == want, format!("{level} n={n}: {got} != {want}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dot_i8_saturated_accumulation_matches_scalar() {
+    // every element at the ±127 extremes, length far past one vector step
+    let a: Vec<i8> = (0..1003).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect();
+    let b: Vec<i8> = (0..1003).map(|i| if i % 3 == 0 { -127 } else { 127 }).collect();
+    let want = (Kernels::for_level(SimdLevel::Scalar).dot_i8)(&a, &b);
+    for level in simd_levels() {
+        assert_eq!((Kernels::for_level(level).dot_i8)(&a, &b), want, "{level}");
+    }
+}
+
+#[test]
+fn max_abs_is_bitwise_identical_to_scalar_at_every_level() {
+    let scalar = Kernels::for_level(SimdLevel::Scalar);
+    check("max_abs simd == scalar", 300, |rng| {
+        let n = rng.range(0, 131);
+        let mut v = rand_f32(rng, n, 2.0);
+        // sprinkle huge magnitudes and negative zeros among the values
+        for x in v.iter_mut() {
+            let r = rng.f32();
+            if r < 0.05 {
+                *x = 1e30 * x.signum();
+            } else if r < 0.1 {
+                *x = -0.0;
+            }
+        }
+        let want = (scalar.max_abs)(&v);
+        for level in simd_levels() {
+            let got = (Kernels::for_level(level).max_abs)(&v);
+            ensure(
+                got.to_bits() == want.to_bits(),
+                format!("{level} n={n}: {got} != {want}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_kernels_stay_within_1e5_of_scalar() {
+    let scalar = Kernels::for_level(SimdLevel::Scalar);
+    check("f32 kernels simd vs scalar", 200, |rng| {
+        let n = rng.range(0, 300);
+        let a = rand_f32(rng, n, 1.0);
+        let b = rand_f32(rng, n, 1.0);
+        let base = rand_f32(rng, n, 1.0);
+        let w = rng.normal();
+        let dot_ref = (scalar.dot)(&a, &b);
+        let mut axpy_ref = base.clone();
+        (scalar.axpy)(w, &b, &mut axpy_ref);
+        let mut sm_ref = a.clone();
+        let lse_ref = (scalar.softmax_lse)(&mut sm_ref);
+        for level in simd_levels() {
+            let kn = Kernels::for_level(level);
+            ensure_close((kn.dot)(&a, &b), dot_ref, 1e-5, &format!("{level} dot n={n}"))?;
+            let mut out = base.clone();
+            (kn.axpy)(w, &b, &mut out);
+            ensure_all_close(&out, &axpy_ref, 1e-5, &format!("{level} axpy n={n}"))?;
+            let mut sm = a.clone();
+            let lse = (kn.softmax_lse)(&mut sm);
+            ensure_all_close(&sm, &sm_ref, 1e-5, &format!("{level} softmax n={n}"))?;
+            ensure_close(lse, lse_ref, 1e-5, &format!("{level} lse n={n}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_dot_covers_every_tail_length_and_huge_values() {
+    let scalar = Kernels::for_level(SimdLevel::Scalar);
+    for n in 0..=67usize {
+        // magnitudes spanning ±1e15 .. ±1e-15; dot(a, a) keeps every
+        // product non-negative so the huge terms cannot cancel — the
+        // reassociation error stays relative to the true magnitude
+        let a: Vec<f32> = (0..n)
+            .map(|i| {
+                let mag = [1e15f32, 3.25, 1e-15, 42.0, 0.0, 7.5e7][i % 6];
+                if i % 2 == 0 { mag } else { -mag }
+            })
+            .collect();
+        let want = (scalar.dot)(&a, &a);
+        for level in simd_levels() {
+            let got = (Kernels::for_level(level).dot)(&a, &a);
+            let tol = 1e-5 * want.abs().max(1.0);
+            assert!((got - want).abs() <= tol, "{level} dot n={n}: {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn softmax_handles_extreme_score_spreads_like_scalar() {
+    let scalar = Kernels::for_level(SimdLevel::Scalar);
+    // one dominant score, the rest at -1e30: every exp underflows to
+    // exactly 0 or 1 in every level because the exp pass is scalar libm
+    // everywhere, so the whole result is bitwise-identical
+    let base: Vec<f32> = (0..13).map(|i| if i == 4 { 1e30 } else { -1e30 }).collect();
+    let mut sm_ref = base.clone();
+    let lse_ref = (scalar.softmax_lse)(&mut sm_ref);
+    for level in simd_levels() {
+        let mut sm = base.clone();
+        let lse = (Kernels::for_level(level).softmax_lse)(&mut sm);
+        assert_eq!(lse.to_bits(), lse_ref.to_bits(), "{level} lse");
+        for (i, (a, b)) in sm.iter().zip(sm_ref.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{level} prob {i}");
+        }
+    }
+}
+
+#[test]
+fn tiered_attention_matches_scalar_at_every_level() {
+    check("run_tiered_at_level simd vs scalar", 25, |rng| {
+        let d_head = *rng.choice(&[8usize, 16, 24]);
+        let n_query = rng.range(1, 4);
+        let n1 = rng.range(1, 48);
+        let n2 = rng.range(1, 48);
+        let k1 = rand_f32(rng, n1 * d_head, 0.7);
+        let v1 = rand_f32(rng, n1 * d_head, 1.0);
+        let k2 = rand_f32(rng, n2 * d_head, 0.7);
+        let v2 = rand_f32(rng, n2 * d_head, 1.0);
+        let payloads = vec![
+            JobPayload::F32(k1, v1, n1),
+            JobPayload::Int8 {
+                k: QuantSlab::from_f32(&k2, d_head, QUANT_BLOCK),
+                v: QuantSlab::from_f32(&v2, d_head, QUANT_BLOCK),
+            },
+        ];
+        let q = rand_f32(rng, payloads.len() * n_query * d_head, 0.7);
+        let (o_ref, lse_ref) =
+            run_tiered_at_level(SimdLevel::Scalar, &payloads, &q, n_query, d_head);
+        for level in simd_levels() {
+            let (o, lse) = run_tiered_at_level(level, &payloads, &q, n_query, d_head);
+            ensure_all_close(&o, &o_ref, 1e-4, &format!("{level} output"))?;
+            ensure_all_close(&lse, &lse_ref, 1e-4, &format!("{level} lse"))?;
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------- forced-level CLI
+
+fn hgca_cmd() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_hgca"));
+    // the test process may itself run under a forced HGCA_SIMD (the CI
+    // scalar leg); each subprocess pins its own level explicitly
+    c.env_remove("HGCA_SIMD");
+    c.current_dir(env!("CARGO_MANIFEST_DIR"));
+    c
+}
+
+fn scenario_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .join("scenarios/steady_decode.scn")
+}
+
+/// `--verify` replays the scenario twice same-seed and across synthetic
+/// NUMA node counts {1, 2, 4}; forcing each level through `HGCA_SIMD`
+/// pins the determinism contract end to end — tokens bitwise-stable
+/// within a level, at every level this host can run.
+#[test]
+fn replay_verify_passes_under_every_forced_simd_level() {
+    let scn = scenario_path();
+    for level in supported_levels() {
+        let out = hgca_cmd()
+            .env("HGCA_SIMD", level.name())
+            .args(["replay", scn.to_str().unwrap(), "--verify"])
+            .output()
+            .expect("failed to spawn hgca");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            out.status.success(),
+            "HGCA_SIMD={level}: replay --verify failed\nstdout:\n{stdout}\nstderr:\n{stderr}"
+        );
+        assert!(stdout.contains("[verified]"), "HGCA_SIMD={level}: {stdout}");
+    }
+}
+
+/// A forced level that does not parse must abort loudly — never silently
+/// fall back to detection (the conformance sweep above relies on this).
+#[test]
+fn unknown_forced_level_aborts_instead_of_falling_back() {
+    let out = hgca_cmd()
+        .env("HGCA_SIMD", "avx512")
+        .args(["info"])
+        .output()
+        .expect("failed to spawn hgca");
+    assert!(!out.status.success(), "HGCA_SIMD=avx512 must not start");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("HGCA_SIMD"), "stderr: {stderr}");
+}
+
+#[test]
+fn unknown_simd_flag_is_rejected() {
+    let out = hgca_cmd()
+        .args(["info", "--simd", "bogus"])
+        .output()
+        .expect("failed to spawn hgca");
+    assert!(!out.status.success(), "--simd bogus must be rejected");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown SIMD level"), "stderr: {stderr}");
+}
+
+/// `--simd` outranks `HGCA_SIMD` (flag > env > detection).
+#[test]
+fn simd_flag_takes_precedence_over_env() {
+    let best = supported_levels()[0];
+    let out = hgca_cmd()
+        .env("HGCA_SIMD", "scalar")
+        .args(["info", "--simd", best.name()])
+        .output()
+        .expect("failed to spawn hgca");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains(&format!("simd dispatch: {best}")), "stdout: {stdout}");
+}
